@@ -1,0 +1,58 @@
+"""Shared benchmark utilities: the scaled paper suite + CSV emission.
+
+All figure benchmarks run the Emu machine model on pattern-preserving
+scaled-down versions of Table I (full-scale migration *counting* is exact;
+the timeline simulator runs scaled for CPU-time reasons — scales noted in
+every CSV row).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.emu import EmuConfig, run_spmv
+from repro.core.layout import make_layout
+from repro.core.partition import make_partition
+from repro.core.reorder import reorder
+from repro.data.matrices import make_matrix
+
+# name -> simulator scale (timeline sim is O(total instrs) in python)
+SIM_SCALES = {
+    "ford1": 0.25,
+    "cop20k_A": 0.02,
+    "webbase-1M": 0.005,
+    "rmat": 0.01,
+    "nd24k": 0.002,
+    "audikw_1": 0.001,
+}
+
+COUNT_SCALES = {       # exact migration counting is vectorized -> larger
+    "ford1": 1.0,
+    "cop20k_A": 0.5,
+    "webbase-1M": 0.2,
+    "rmat": 0.1,
+    "nd24k": 0.05,
+    "audikw_1": 0.02,
+}
+
+
+def sim_bandwidth(name: str, *, layout="block", strategy="nonzero",
+                  reordering="none", seed=0, cfg: EmuConfig | None = None):
+    A = make_matrix(name, scale=SIM_SCALES[name], seed=seed)
+    A = reorder(A, reordering, seed=seed)
+    part = make_partition(A, 8, strategy)
+    res = run_spmv(A, part, make_layout(layout, A.ncols, 8),
+                   cfg or EmuConfig())
+    return A, res
+
+
+def emit(rows, header):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+
+
+def us(fn, *args, repeats=3, **kw):
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn(*args, **kw)
+    return (time.perf_counter() - t0) / repeats * 1e6

@@ -1,0 +1,25 @@
+"""Fig. 10 — SpMV bandwidth under NONE / RANDOM / BFS / METIS reordering
+(Emu model).  Paper: BFS/METIS up to +70%, RANDOM up to +50% on hot-spot
+matrices; random hurts banded matrices."""
+from .common import SIM_SCALES, emit, sim_bandwidth
+
+
+def run():
+    rows = []
+    for name in SIM_SCALES:
+        bws = {}
+        for reord in ("none", "random", "bfs", "metis"):
+            _, res = sim_bandwidth(name, reordering=reord)
+            bws[reord] = res.bandwidth_mbs
+        base = max(bws["none"], 1e-9)
+        rows.append((f"fig10/{name}",
+                     *[round(bws[r], 1) for r in
+                       ("none", "random", "bfs", "metis")],
+                     *[round(bws[r] / base, 2) for r in
+                       ("random", "bfs", "metis")]))
+    emit(rows, ("name", "none_mbs", "random_mbs", "bfs_mbs", "metis_mbs",
+                "random_x", "bfs_x", "metis_x"))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Fig. 12 — the cache-memory baseline: identical SpMV measured on THIS
+machine's real CPU.  Paper: reorderings buy <=16%, random never helps."""
+from repro.core.cache_model import measure_cpu_spmv
+from repro.core.reorder import reorder
+from repro.data.matrices import make_matrix
+from .common import emit
+
+SCALES = {"ford1": 1.0, "cop20k_A": 0.3, "webbase-1M": 0.1, "rmat": 0.05}
+
+
+def run():
+    rows = []
+    for name, scale in SCALES.items():
+        A = make_matrix(name, scale=scale)
+        bws = {}
+        for reord in ("none", "random", "bfs", "metis"):
+            B = reorder(A, reord)
+            bws[reord] = measure_cpu_spmv(B, trials=5).bandwidth_mbs
+        base = max(bws["none"], 1e-9)
+        rows.append((f"fig12/{name}",
+                     *[round(bws[r], 1) for r in
+                       ("none", "random", "bfs", "metis")],
+                     *[round(bws[r] / base, 3) for r in
+                       ("random", "bfs", "metis")]))
+    emit(rows, ("name", "none_mbs", "random_mbs", "bfs_mbs", "metis_mbs",
+                "random_x", "bfs_x", "metis_x"))
+
+
+if __name__ == "__main__":
+    run()

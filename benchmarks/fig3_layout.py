@@ -1,0 +1,34 @@
+"""Fig. 3 — SpMV bandwidth: cyclic vs block vector layout (Emu model),
+plus exact full-scale migration counts (block should be 1.42-6.3x fewer)."""
+from repro.core.layout import make_layout
+from repro.core.migration import count_migrations
+from repro.core.partition import make_partition
+from repro.data.matrices import make_matrix
+from .common import COUNT_SCALES, SIM_SCALES, emit, sim_bandwidth
+
+
+def run():
+    rows = []
+    for name in SIM_SCALES:
+        bws = {}
+        for layout in ("cyclic", "block"):
+            _, res = sim_bandwidth(name, layout=layout, strategy="row")
+            bws[layout] = res.bandwidth_mbs
+        A = make_matrix(name, scale=COUNT_SCALES[name])
+        p = make_partition(A, 8, "row")
+        migs = {}
+        for layout in ("cyclic", "block"):
+            migs[layout] = count_migrations(
+                A, p, make_layout(layout, A.ncols, 8),
+                make_layout(layout, A.nrows, 8)).migrations
+        rows.append((f"fig3/{name}", round(bws["cyclic"], 1),
+                     round(bws["block"], 1),
+                     round(bws["block"] / max(bws["cyclic"], 1e-9), 2),
+                     migs["cyclic"], migs["block"],
+                     round(migs["cyclic"] / max(migs["block"], 1), 2)))
+    emit(rows, ("name", "cyclic_mbs", "block_mbs", "block_speedup",
+                "mig_cyclic", "mig_block", "mig_ratio"))
+
+
+if __name__ == "__main__":
+    run()

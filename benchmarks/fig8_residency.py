@@ -1,0 +1,27 @@
+"""Figs. 8 & 11 — per-nodelet thread residency over time on cop20k_A,
+original vs random reordering (the hot-spot collapse and its mitigation)."""
+import numpy as np
+from .common import emit, sim_bandwidth
+
+
+def run():
+    rows = []
+    for reord in ("none", "random"):
+        _, res = sim_bandwidth("cop20k_A", reordering=reord)
+        r = res.residency
+        # sample 8 time points across the run
+        idx = np.linspace(0, len(r) - 1, 8).astype(int)
+        for i in idx:
+            rows.append((f"fig8/cop20k_A/{reord}", i,
+                         *[int(v) for v in r[i]]))
+        # summary: mean residency of nodelet 0 vs others mid-run
+        mid = r[len(r) // 4: max(len(r) // 2, len(r) // 4 + 1)]
+        rows.append((f"fig8/cop20k_A/{reord}/summary", -1,
+                     round(float(mid.mean(axis=0)[0]), 1),
+                     round(float(np.delete(mid.mean(axis=0), 0).mean()), 1),
+                     res.ticks, round(res.bandwidth_mbs, 1), 0, 0, 0))
+    emit(rows, ("name", "tick", "n0", "n1", "n2", "n3", "n4", "n5", "n6/x", "n7/x"))
+
+
+if __name__ == "__main__":
+    run()

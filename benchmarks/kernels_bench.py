@@ -1,0 +1,32 @@
+"""Kernel micro-bench: Pallas-oracle parity cost on CPU (interpret mode is
+a correctness vehicle; real perf numbers come from the TPU dry-run).
+Reports us/call of the jnp oracle paths that the models actually execute."""
+import jax.numpy as jnp
+import numpy as np
+from repro.core.sparse_matrix import csr_from_coo, csr_to_bcsr, csr_to_ell
+from repro.kernels import ops
+from .common import emit, us
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+    for M, N, nnz in ((512, 512, 8000), (2048, 2048, 40000)):
+        A = csr_from_coo(rng.integers(0, M, nnz), rng.integers(0, N, nnz),
+                         rng.standard_normal(nnz), (M, N))
+        x = jnp.asarray(rng.standard_normal(N), jnp.float32)
+        e = csr_to_ell(A)
+        data, cols = jnp.asarray(e.data), jnp.asarray(e.cols)
+        t = us(lambda: ops.ell_spmv_ref(data, cols, x).block_until_ready())
+        rows.append((f"ell_ref/{M}x{N}/nnz{nnz}", round(t, 1),
+                     f"pad={e.padding_ratio:.2f}"))
+        blocks, bcols = ops.bell_from_bcsr(csr_to_bcsr(A, (8, 128)))
+        bj, cj = jnp.asarray(blocks), jnp.asarray(bcols)
+        t = us(lambda: ops.bell_spmv(bj, cj, x).block_until_ready())
+        rows.append((f"bell_ref/{M}x{N}/nnz{nnz}", round(t, 1),
+                     f"K={blocks.shape[1]}"))
+    emit(rows, ("name", "us_per_call", "derived"))
+
+
+if __name__ == "__main__":
+    run()

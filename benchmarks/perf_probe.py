@@ -1,0 +1,98 @@
+"""Per-cell perf probe for the §Perf hillclimb.
+
+Compiles one (arch, shape) cell with RunConfig overrides and prints the
+roofline terms + the top-N collective ops — the "profile" the iteration
+loop reads (no real TPU, so the lowered IR is the profiler).
+
+    PYTHONPATH=src python -m benchmarks.perf_probe gemma_7b train_4k \
+        --fsdp 1 --grad-accum 8 --top 8
+"""
+from __future__ import annotations
+
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+import argparse
+import re
+
+import numpy as np
+
+
+def top_collectives(hlo: str, n: int = 10):
+    shape_re = re.compile(r"(\w+)\[([\d,]*)\]")
+    BY = {"f32": 4, "bf16": 2, "s32": 4, "u32": 4, "pred": 1, "s8": 1,
+          "f64": 8, "s64": 8}
+    rows = []
+    for line in hlo.splitlines():
+        m = re.search(r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                      r"collective-permute)[-\w]*\(", line)
+        if not m or "=" not in line:
+            continue
+        rhs = line.split("=", 1)[1]
+        seg = rhs[: rhs.find(m.group(1))]
+        nb = 0
+        for dt, dims in shape_re.findall(seg):
+            k = 1
+            for d in dims.split(","):
+                if d:
+                    k *= int(d)
+            nb += k * BY.get(dt, 4)
+        rows.append((nb, line.strip()[:160]))
+    rows.sort(reverse=True)
+    return rows[:n]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--fsdp", type=int, default=-1)
+    ap.add_argument("--grad-accum", type=int, default=-1)
+    ap.add_argument("--remat", type=int, default=1)
+    ap.add_argument("--unroll", type=int, default=0)
+    ap.add_argument("--top", type=int, default=10)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs.registry import get_config
+    from repro.launch.dryrun import analyze, lower_cell, _partial_unroll
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import layers as L
+    from repro.models.config import SHAPES
+    from repro.train.loop import RunConfig
+
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    fsdp = cfg.param_count() > 8e9 if args.fsdp < 0 else bool(args.fsdp)
+    ga = (8 if shape.kind == "train" else 1) if args.grad_accum < 0 \
+        else args.grad_accum
+    u = _partial_unroll(cfg) if args.unroll else 0
+    run = RunConfig(fsdp=fsdp, remat=bool(args.remat), donate=True,
+                    scan_unroll=u or False, grad_accum=ga)
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    if u:
+        L.ANALYSIS_UNROLL = True
+    lo, co, _, _ = lower_cell(args.arch, args.shape, mesh, run=run)
+    L.ANALYSIS_UNROLL = False
+    res = analyze(lo, co, cfg, shape, mesh, grad_accum=ga)
+    print(f"compute={res['t_compute_s']:.3e}s memory={res['t_memory_s']:.3e}s "
+          f"collective={res['t_collective_s']:.3e}s -> {res['bottleneck']}")
+    if u:
+        print(f"NOTE: partial-unroll RAW module costs (~{u} of "
+              f"{_partial_unroll(cfg) and 'n'} layer-units; NOT trip-count "
+              f"extrapolated) — use repro.launch.dryrun --unroll for "
+              f"step-accurate totals; this view is for comparing variants "
+              f"and reading the top collectives.")
+    print(f"peak/device={res['bytes_per_device']['peak']/2**30:.1f} GiB "
+          f"useful_flops_ratio={res['useful_flops_ratio']:.3f} "
+          f"(cost counts ~1 unit of the layer scan unless --unroll)")
+    print(f"\ntop collectives (per appearance in HLO; scan bodies run "
+          f"n_units x per step):")
+    for nb, line in top_collectives(co.as_text(), args.top):
+        print(f"  {nb/2**20:9.1f} MiB | {line[:130]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""TPU roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads roofline_single.json (written by ``python -m repro.launch.dryrun
+--unroll --json roofline_single.json``) and prints the per-cell terms:
+
+    compute    = HLO_FLOPs / peak_FLOPs          (per chip)
+    memory     = HLO_bytes / HBM_bw              (upper bound: per-op operand
+                 counting over the optimized HLO — see EXPERIMENTS.md note)
+    collective = collective_bytes / ICI_bw
+
+plus the dominant term, MODEL_FLOPS/HLO_FLOPs (useful-compute ratio), and
+the roofline fraction = model-flops time at peak / max(term)s — the number
+§Perf hill-climbs.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+ARTIFACT = os.environ.get("ROOFLINE_JSON", "roofline_single.json")
+
+
+def rows_from(path: str):
+    with open(path) as f:
+        cells = json.load(f)
+    rows = []
+    for c in cells:
+        if c.get("status") == "skip":
+            rows.append((f"{c['arch']}/{c['shape']}", "skip", "-", "-", "-",
+                         "-", "-", c.get("reason", "")))
+            continue
+        if c.get("status") != "ok":
+            rows.append((f"{c['arch']}/{c['shape']}", "fail", "-", "-", "-",
+                         "-", "-", c.get("error", "")[:80]))
+            continue
+        tc, tm, tl = c["t_compute_s"], c["t_memory_s"], c["t_collective_s"]
+        ideal = c["model_flops_total"] / c["chips"] / 197e12
+        frac = ideal / max(tc, tm, tl, 1e-30)
+        rows.append((f"{c['arch']}/{c['shape']}", c["mesh"],
+                     f"{tc:.3e}", f"{tm:.3e}", f"{tl:.3e}",
+                     c["bottleneck"],
+                     f"{frac:.3f}",
+                     f"useful={c['useful_flops_ratio']:.2f} "
+                     f"peakGiB={c['bytes_per_device']['peak']/2**30:.1f}"))
+    return rows
+
+
+def run():
+    if not os.path.exists(ARTIFACT):
+        print(f"# {ARTIFACT} not found — run the dry-run first")
+        return
+    rows = rows_from(ARTIFACT)
+    print("cell,mesh,t_compute_s,t_memory_s,t_collective_s,bottleneck,"
+          "roofline_frac,notes")
+    for r in rows:
+        print(",".join(str(x) for x in r))
+
+
+if __name__ == "__main__":
+    run()

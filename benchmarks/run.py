@@ -1,0 +1,42 @@
+"""Benchmark entry point: one section per paper table/figure.
+
+Prints ``name,...`` CSV blocks.  The TPU roofline table (from the dry-run
+artifacts) is emitted by ``benchmarks.roofline`` when the JSON exists.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (fig3_layout, fig6_distribution, fig7_cv, fig8_residency,
+                   fig10_reorder, fig12_cache, kernels_bench)
+    sections = [
+        ("Fig.3 cyclic-vs-block", fig3_layout.run),
+        ("Fig.6 row-vs-nonzero", fig6_distribution.run),
+        ("Fig.7 mem-instr CV", fig7_cv.run),
+        ("Fig.8/11 residency", fig8_residency.run),
+        ("Fig.10 reorderings (Emu)", fig10_reorder.run),
+        ("Fig.12 reorderings (cache CPU)", fig12_cache.run),
+        ("kernel microbench", kernels_bench.run),
+    ]
+    try:
+        from . import roofline
+        sections.append(("TPU roofline (dry-run)", roofline.run))
+    except Exception:
+        pass
+    failures = 0
+    for title, fn in sections:
+        print(f"# === {title} ===")
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,296 @@
+"""Discrete-tick model of the Emu Chick (paper §II + §IV-D dynamics).
+
+This is the reproduction vehicle for the paper's *Emu-side* results: the
+container has no Emu hardware, so we model the machine the paper describes —
+
+* P nodelets, each with one single-issue Gossamer Core (1 instr/cycle,
+  150 MHz) and up to 64 resident threads;
+* thread migration on any remote load, ~2x the cost of a local access;
+* a finite egress migration queue per nodelet, serviced by the Migration
+  Engine at a fixed packet rate, with per-nodelet ingress acceptance;
+* thread-activity throttling when the migration queue fills (the mechanism
+  behind Fig. 8's nodelet-0 collapse).
+
+Threads execute compressed *segment traces* (nodelet, n_instructions) built
+from the same walk the migration accounting uses, so the simulator and the
+counter agree by construction.  Outputs: per-tick residency traces
+(Figs. 8/11), total runtime -> bandwidth (Figs. 3/6/10), and per-nodelet
+instruction counts (Fig. 7).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import numpy as np
+
+from .layout import VectorLayout
+from .partition import Partition
+from .sparse_matrix import CSRMatrix
+
+__all__ = ["EmuConfig", "EmuResult", "build_thread_traces", "simulate", "run_spmv"]
+
+# Thread states
+_RUNNING, _WANT, _QUEUED, _FLIGHT, _DONE = range(5)
+
+
+@dataclasses.dataclass(frozen=True)
+class EmuConfig:
+    nodelets: int = 8
+    threads_per_nodelet: int = 64
+    clock_hz: float = 150e6
+    tick_cycles: int = 250
+    migration_queue_cap: int = 64      # egress packets per nodelet
+    me_rate: int = 24                  # packets/tick a nodelet can send
+    ingress_rate: int = 24             # NQM per-dest acceptance/tick
+    resident_cap: int = 80             # register sets + run-queue contexts
+    migration_latency_ticks: int = 1
+    migration_overhead_cycles: int = 2  # ~2x a local access (paper §II-A)
+    # A single-issue GC only reaches 1 instr/cycle when enough threads are
+    # resident to hide DRAM latency; below this count throughput scales
+    # linearly with active threads.  This is the mechanism that makes the
+    # Fig. 8 throttling collapse hurt: a starved/throttled nodelet loses
+    # issue bandwidth, not just queue slots.
+    latency_hide_threads: int = 32
+    # Cycles per memory instruction (narrow-channel DDR4 at a 150 MHz GC:
+    # row activation + transfer amortize to ~8 GC cycles per 8-byte access).
+    access_cycles: int = 8
+    # Congestion collapse (paper §IV-D): thread contexts in a saturated
+    # migration queue are staged in the nodelet's narrow-channel DRAM, so a
+    # full queue steals memory bandwidth from the GC, the memory-side
+    # processor *and* the NQM itself — service capacity drops with queue
+    # occupancy instead of merely queueing.  ``congestion_floor`` is the
+    # residual capacity at full saturation.  The paper observes exactly
+    # this: "the nodelet reduces the number of threads that can be
+    # executed" and fewer threads/nodelet relieve the pressure.
+    congestion_floor: float = 0.3
+    max_ticks: int = 2_000_000
+
+
+@dataclasses.dataclass
+class EmuResult:
+    ticks: int
+    seconds: float
+    bandwidth_mbs: float
+    migrations: int
+    residency: np.ndarray        # (ticks_sampled, P)
+    instr_per_nodelet: np.ndarray  # (P,)
+    sample_every: int
+
+    @property
+    def residency_cv(self) -> float:
+        m = self.instr_per_nodelet
+        return float(m.std() / m.mean()) if m.mean() else 0.0
+
+
+def build_thread_traces(csr: CSRMatrix, part: Partition, x_layout: VectorLayout,
+                        threads_per_nodelet: int) -> tuple[List[np.ndarray], List[np.ndarray], np.ndarray]:
+    """Compressed (node, weight) segments per thread.
+
+    Per row: the home nodelet executes 2 instrs/nnz (value+colIndex loads) +
+    2 instrs (rowPtr read, b accumulate/remote-update issue); each x load is
+    1 instr on the owner nodelet.  Consecutive same-node entries merge.
+    """
+    P = part.num_shards
+    thread_starts = part.thread_splits(csr, threads_per_nodelet)
+    seg_nodes: List[np.ndarray] = []
+    seg_weights: List[np.ndarray] = []
+    homes = []
+    owners_all = x_layout.owner_of(csr.col_index).astype(np.int32)
+    rp = csr.row_ptr
+    for p in range(P):
+        starts = thread_starts[p]
+        for t in range(threads_per_nodelet):
+            r0, r1 = int(starts[t]), int(starts[t + 1])
+            homes.append(p)
+            if r1 <= r0:
+                seg_nodes.append(np.zeros(0, np.int32))
+                seg_weights.append(np.zeros(0, np.int64))
+                continue
+            lo, hi = int(rp[r0]), int(rp[r1])
+            k = hi - lo
+            nrows = r1 - r0
+            # Interleaved walk: home-entry at every row start, owner per nnz.
+            row_nnz = np.diff(rp[r0 : r1 + 1]).astype(np.int64)
+            seq = np.empty(k + nrows, dtype=np.int32)
+            wts = np.empty(k + nrows, dtype=np.int64)
+            home_pos = (rp[r0:r1] - lo + np.arange(nrows)).astype(np.int64)
+            mask = np.zeros(k + nrows, dtype=bool)
+            mask[home_pos] = True
+            seq[mask] = p
+            wts[mask] = 2 + 2 * row_nnz        # rowPtr + b + (val+col)/nnz
+            seq[~mask] = owners_all[lo:hi]
+            wts[~mask] = 1                      # the x load itself
+            #
+
+            # Compress consecutive equal nodes.
+            if seq.size:
+                bound = np.empty(seq.size, dtype=bool)
+                bound[0] = True
+                bound[1:] = seq[1:] != seq[:-1]
+                idx = np.flatnonzero(bound)
+                nodes = seq[idx]
+                csum = np.concatenate([[0], np.cumsum(wts)])
+                ends = np.concatenate([idx[1:], [seq.size]])
+                weights = csum[ends] - csum[idx]
+            else:
+                nodes = np.zeros(0, np.int32)
+                weights = np.zeros(0, np.int64)
+            seg_nodes.append(nodes)
+            seg_weights.append(weights)
+    return seg_nodes, seg_weights, np.asarray(homes, dtype=np.int32)
+
+
+def simulate(seg_nodes: Sequence[np.ndarray], seg_weights: Sequence[np.ndarray],
+             homes: np.ndarray, cfg: EmuConfig, useful_bytes: float) -> EmuResult:
+    nthreads = len(seg_nodes)
+    P = cfg.nodelets
+    loc = homes.copy()
+    state = np.full(nthreads, _RUNNING, dtype=np.int8)
+    ptr = np.zeros(nthreads, dtype=np.int64)
+    rem = np.zeros(nthreads, dtype=np.int64)
+    dest = np.full(nthreads, -1, dtype=np.int32)
+    arrive = np.full(nthreads, -1, dtype=np.int64)
+    nseg = np.array([s.size for s in seg_nodes], dtype=np.int64)
+    for t in range(nthreads):
+        if nseg[t] == 0:
+            state[t] = _DONE
+        else:
+            rem[t] = seg_weights[t][0] * cfg.access_cycles
+            if seg_nodes[t][0] != homes[t]:
+                # First segment is remote (possible under nnz distribution).
+                state[t] = _WANT
+                dest[t] = seg_nodes[t][0]
+            else:
+                loc[t] = seg_nodes[t][0]
+
+    egress: list[list[int]] = [[] for _ in range(P)]
+    instr = np.zeros(P, dtype=np.int64)
+    migrations = 0
+    res_trace = []
+    sample_every = 1
+    rr = 0  # round-robin offset for fairness
+
+    def advance(t: int) -> None:
+        """Thread t finished its segment; set up the next one."""
+        nonlocal migrations
+        ptr[t] += 1
+        if ptr[t] >= nseg[t]:
+            state[t] = _DONE
+            return
+        rem[t] = seg_weights[t][ptr[t]] * cfg.access_cycles
+        nxt = seg_nodes[t][ptr[t]]
+        if nxt != loc[t]:
+            state[t] = _WANT
+            dest[t] = nxt
+        # else: stays RUNNING on the same nodelet
+
+    tick = 0
+    while tick < cfg.max_ticks:
+        if not (state != _DONE).any():
+            break
+        # Congestion factor per nodelet from egress-queue occupancy.
+        cong = np.array([1.0 - (1.0 - cfg.congestion_floor) *
+                         (len(egress[p]) / cfg.migration_queue_cap)
+                         for p in range(P)])
+        # --- 1. execute on each nodelet ---------------------------------
+        for p in range(P):
+            running = np.flatnonzero((state == _RUNNING) & (loc == p))
+            if running.size == 0:
+                continue
+            occ = len(egress[p])
+            # Throttle thread activity as the migration queue fills
+            # (paper §IV-D: ~32 of 64 threads active on the hot nodelet).
+            cap = max(2, int(cfg.threads_per_nodelet *
+                             (1.0 - occ / cfg.migration_queue_cap)))
+            running = np.roll(running, -rr)[:cap]
+            # Issue bandwidth degrades when too few threads hide latency,
+            # and when the migration queue steals DRAM bandwidth.
+            eff = min(1.0, running.size / cfg.latency_hide_threads) * cong[p]
+            budget = int(cfg.tick_cycles * eff)
+            # Fair-share pass: threads cycle until budget or work runs out.
+            while budget > 0 and running.size:
+                share = max(budget // running.size, 1)
+                alive = []
+                for t in running:
+                    if budget <= 0:
+                        break
+                    take = min(share, int(rem[t]), budget)
+                    rem[t] -= take
+                    budget -= take
+                    instr[p] += take
+                    if rem[t] == 0:
+                        advance(int(t))
+                    if state[t] == _RUNNING and loc[t] == p:
+                        alive.append(t)
+                running = np.asarray(alive, dtype=np.int64)
+        rr += 1
+
+        # --- 2. migration requests -> egress queues ----------------------
+        want = np.flatnonzero(state == _WANT)
+        for t in want:
+            p = int(loc[t])
+            if len(egress[p]) < cfg.migration_queue_cap:
+                egress[p].append(int(t))
+                state[t] = _QUEUED
+        # --- 3. Migration Engine service with destination backpressure ---
+        # Egress service degrades with the source's congestion; a packet is
+        # accepted only while the destination has run-queue slots left, so a
+        # hot nodelet's overflow backs up into every parent's egress queue
+        # (the paper's Fig. 8 pile-up on the non-hot nodelets).
+        residents = np.zeros(P, dtype=np.int64)
+        on_node = (state != _FLIGHT) & (state != _DONE)
+        np.add.at(residents, loc[on_node], 1)
+        # Floor of 1 credit: a full nodelet still trickle-accepts, which is
+        # both what the hardware does and the anti-deadlock guarantee.
+        credits = np.maximum(
+            np.minimum(cfg.ingress_rate, cfg.resident_cap - residents), 1)
+        for p in range(P):
+            q = egress[p]
+            rate_p = max(int(cfg.me_rate * cong[p]), 1)
+            sent, kept = 0, []
+            for t in q:
+                d = int(dest[t])
+                if sent < rate_p and credits[d] > 0:
+                    credits[d] -= 1
+                    sent += 1
+                    state[t] = _FLIGHT
+                    arrive[t] = tick + cfg.migration_latency_ticks
+                    migrations += 1
+                    instr[p] += cfg.migration_overhead_cycles
+                else:
+                    kept.append(t)
+            egress[p] = kept
+        # --- 4. arrivals --------------------------------------------------
+        landing = np.flatnonzero((state == _FLIGHT) & (arrive <= tick))
+        for t in landing:
+            loc[t] = dest[t]
+            dest[t] = -1
+            state[t] = _RUNNING
+
+        # --- residency sample (threads on nodelet: running/waiting/queued) -
+        if tick % sample_every == 0:
+            counts = np.zeros(P, dtype=np.int32)
+            on_node = state != _FLIGHT
+            live = on_node & (state != _DONE)
+            np.add.at(counts, loc[live], 1)
+            res_trace.append(counts)
+        tick += 1
+
+    seconds = tick * cfg.tick_cycles / cfg.clock_hz
+    bw = useful_bytes / seconds / 1e6 if seconds > 0 else 0.0
+    return EmuResult(ticks=tick, seconds=seconds, bandwidth_mbs=bw,
+                     migrations=migrations,
+                     residency=np.asarray(res_trace), instr_per_nodelet=instr,
+                     sample_every=sample_every)
+
+
+def run_spmv(csr: CSRMatrix, part: Partition, x_layout: VectorLayout,
+             cfg: EmuConfig | None = None) -> EmuResult:
+    """End-to-end: build traces for (matrix, partition, layout) and simulate."""
+    cfg = cfg or EmuConfig(nodelets=part.num_shards)
+    nodes, weights, homes = build_thread_traces(csr, part, x_layout,
+                                                cfg.threads_per_nodelet)
+    # Useful bytes: values + colIndex + x loads (8 B each) + rowPtr + b.
+    useful = 8.0 * (3 * csr.nnz + 2 * csr.nrows)
+    return simulate(nodes, weights, homes, cfg, useful)

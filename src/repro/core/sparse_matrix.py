@@ -1,0 +1,223 @@
+"""Sparse matrix containers and format conversions.
+
+The paper stores A in CSR and distributes *rows* across nodelets (each
+nodelet holds a "mini CSR" with relative row offsets — Fig. 2).  On TPU we
+keep CSR as the canonical host-side format and add two device formats:
+
+* ELL (+ COO overflow tail, i.e. HYB): rows padded to a uniform width that
+  is lane-aligned (multiple of 128).  The VPU-friendly SpMV format.
+* BCSR with MXU-aligned dense blocks (default 128x128) for block-sparse
+  matmuls (SpMM) — how structured sparsity actually pays on a systolic
+  array.
+
+All host-side structures are numpy; device kernels take jnp views.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+__all__ = [
+    "CSRMatrix",
+    "EllMatrix",
+    "BcsrMatrix",
+    "csr_from_coo",
+    "csr_to_dense",
+    "csr_to_ell",
+    "csr_to_bcsr",
+    "csr_row_nnz",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class CSRMatrix:
+    """Standard CSR: values / col_index / row_ptr (host, numpy)."""
+
+    shape: Tuple[int, int]
+    values: np.ndarray      # (nnz,) float
+    col_index: np.ndarray   # (nnz,) int32
+    row_ptr: np.ndarray     # (M+1,) int64
+
+    @property
+    def nnz(self) -> int:
+        return int(self.values.shape[0])
+
+    @property
+    def nrows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def ncols(self) -> int:
+        return self.shape[1]
+
+    def row_slice(self, r0: int, r1: int) -> "CSRMatrix":
+        """Mini-CSR for rows [r0, r1) with *relative* row offsets (Fig. 2)."""
+        lo, hi = int(self.row_ptr[r0]), int(self.row_ptr[r1])
+        return CSRMatrix(
+            shape=(r1 - r0, self.shape[1]),
+            values=self.values[lo:hi],
+            col_index=self.col_index[lo:hi],
+            row_ptr=(self.row_ptr[r0 : r1 + 1] - lo).astype(np.int64),
+        )
+
+    def permuted(self, row_perm: np.ndarray, col_perm: np.ndarray) -> "CSRMatrix":
+        """Return P_r A P_c^T as CSR.  perm[i] = new index of old row/col i."""
+        M, N = self.shape
+        old_rows = np.repeat(np.arange(M), np.diff(self.row_ptr))
+        new_rows = row_perm[old_rows]
+        new_cols = col_perm[self.col_index]
+        order = np.lexsort((new_cols, new_rows))
+        nr, nc, nv = new_rows[order], new_cols[order], self.values[order]
+        row_ptr = np.zeros(M + 1, dtype=np.int64)
+        np.add.at(row_ptr, nr + 1, 1)
+        np.cumsum(row_ptr, out=row_ptr)
+        return CSRMatrix(shape=self.shape, values=nv,
+                         col_index=nc.astype(np.int32), row_ptr=row_ptr)
+
+
+@dataclasses.dataclass(frozen=True)
+class EllMatrix:
+    """Padded ELL slab + COO overflow tail (HYB).
+
+    ``data``/``cols`` are (M_pad, W) with W a multiple of ``lane`` and rows
+    padded with zeros / ``col=0`` (the zero value makes the padded product a
+    no-op).  Rows with more than W non-zeros spill the tail into the COO
+    arrays.  ``padding_ratio`` reports the wasted-FLOP fraction so format
+    choices are measurable, mirroring the paper's migration accounting.
+    """
+
+    shape: Tuple[int, int]
+    data: np.ndarray        # (M_pad, W) float
+    cols: np.ndarray        # (M_pad, W) int32
+    overflow_rows: np.ndarray  # (nnz_ovf,) int32
+    overflow_cols: np.ndarray  # (nnz_ovf,) int32
+    overflow_vals: np.ndarray  # (nnz_ovf,) float
+    nnz: int
+
+    @property
+    def width(self) -> int:
+        return int(self.data.shape[1])
+
+    @property
+    def padding_ratio(self) -> float:
+        dense_slots = self.data.shape[0] * self.data.shape[1]
+        ell_nnz = self.nnz - self.overflow_vals.shape[0]
+        return 1.0 - ell_nnz / max(dense_slots, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class BcsrMatrix:
+    """Block CSR with dense (bm, bn) blocks (MXU tiles by default)."""
+
+    shape: Tuple[int, int]          # unpadded logical shape
+    block_shape: Tuple[int, int]
+    blocks: np.ndarray              # (nblocks, bm, bn) float
+    block_cols: np.ndarray          # (nblocks,) int32
+    block_row_ptr: np.ndarray       # (Mb+1,) int64
+    nnz: int                        # scalar non-zeros represented
+
+    @property
+    def nblocks(self) -> int:
+        return int(self.blocks.shape[0])
+
+    @property
+    def density_in_blocks(self) -> float:
+        bm, bn = self.block_shape
+        return self.nnz / max(self.nblocks * bm * bn, 1)
+
+
+def csr_from_coo(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+                 shape: Tuple[int, int], sum_duplicates: bool = True) -> CSRMatrix:
+    rows = np.asarray(rows, dtype=np.int64)
+    cols = np.asarray(cols, dtype=np.int64)
+    vals = np.asarray(vals, dtype=np.float64)
+    order = np.lexsort((cols, rows))
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    if sum_duplicates and rows.size:
+        key_change = np.empty(rows.size, dtype=bool)
+        key_change[0] = True
+        key_change[1:] = (rows[1:] != rows[:-1]) | (cols[1:] != cols[:-1])
+        group = np.cumsum(key_change) - 1
+        uvals = np.zeros(group[-1] + 1, dtype=vals.dtype)
+        np.add.at(uvals, group, vals)
+        rows, cols, vals = rows[key_change], cols[key_change], uvals
+    M = shape[0]
+    row_ptr = np.zeros(M + 1, dtype=np.int64)
+    np.add.at(row_ptr, rows + 1, 1)
+    np.cumsum(row_ptr, out=row_ptr)
+    return CSRMatrix(shape=shape, values=vals.astype(np.float64),
+                     col_index=cols.astype(np.int32), row_ptr=row_ptr)
+
+
+def csr_row_nnz(csr: CSRMatrix) -> np.ndarray:
+    return np.diff(csr.row_ptr)
+
+
+def csr_to_dense(csr: CSRMatrix) -> np.ndarray:
+    out = np.zeros(csr.shape, dtype=csr.values.dtype)
+    rows = np.repeat(np.arange(csr.nrows), csr_row_nnz(csr))
+    out[rows, csr.col_index] = csr.values
+    return out
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def csr_to_ell(csr: CSRMatrix, lane: int = 128, sublane: int = 8,
+               max_width: int | None = None) -> EllMatrix:
+    """Convert to padded ELL (+ COO overflow).
+
+    ``lane``/``sublane`` give the TPU tiling: W is rounded to a multiple of
+    ``lane`` and M to a multiple of ``sublane``.  ``max_width`` caps W; rows
+    longer than the cap spill to the COO tail (HYB), which bounds the padding
+    blow-up on power-law matrices (webbase/rmat in the paper's suite).
+    """
+    M = csr.nrows
+    nnz_per_row = csr_row_nnz(csr)
+    natural = int(nnz_per_row.max()) if M else 0
+    W = _round_up(max(natural, 1), lane)
+    if max_width is not None:
+        W = min(W, _round_up(max_width, lane))
+    M_pad = _round_up(max(M, 1), sublane)
+
+    data = np.zeros((M_pad, W), dtype=np.float32)
+    cols = np.zeros((M_pad, W), dtype=np.int32)
+    rows_of_nnz = np.repeat(np.arange(M), nnz_per_row)
+    pos_in_row = np.arange(csr.nnz, dtype=np.int64) - csr.row_ptr[rows_of_nnz]
+    fits = pos_in_row < W
+    data[rows_of_nnz[fits], pos_in_row[fits]] = csr.values[fits]
+    cols[rows_of_nnz[fits], pos_in_row[fits]] = csr.col_index[fits]
+    spill = ~fits
+    orows = rows_of_nnz[spill].astype(np.int32)
+    ocols = csr.col_index[spill].astype(np.int32)
+    ovals = csr.values[spill].astype(np.float32)
+    return EllMatrix(shape=csr.shape, data=data, cols=cols,
+                     overflow_rows=orows, overflow_cols=ocols,
+                     overflow_vals=ovals, nnz=csr.nnz)
+
+
+def csr_to_bcsr(csr: CSRMatrix, block_shape: Tuple[int, int] = (128, 128)) -> BcsrMatrix:
+    bm, bn = block_shape
+    M, N = csr.shape
+    Mb = (M + bm - 1) // bm
+    rows = np.repeat(np.arange(M), csr_row_nnz(csr))
+    brow = rows // bm
+    bcol = csr.col_index // bn
+    key = brow.astype(np.int64) * ((N + bn - 1) // bn) + bcol
+    uniq, inverse = np.unique(key, return_inverse=True)
+    nblocks = uniq.shape[0]
+    blocks = np.zeros((max(nblocks, 1), bm, bn), dtype=np.float32)
+    if nblocks:
+        lr = (rows % bm).astype(np.int64)
+        lc = (csr.col_index % bn).astype(np.int64)
+        np.add.at(blocks, (inverse, lr, lc), csr.values.astype(np.float32))
+    ub_row = (uniq // ((N + bn - 1) // bn)).astype(np.int64)
+    ub_col = (uniq % ((N + bn - 1) // bn)).astype(np.int32)
+    block_row_ptr = np.zeros(Mb + 1, dtype=np.int64)
+    np.add.at(block_row_ptr, ub_row + 1, 1)
+    np.cumsum(block_row_ptr, out=block_row_ptr)
+    return BcsrMatrix(shape=csr.shape, block_shape=block_shape, blocks=blocks,
+                      block_cols=ub_col, block_row_ptr=block_row_ptr, nnz=csr.nnz)

@@ -1,0 +1,80 @@
+"""Jit'd public wrappers around the Pallas kernels (+ oracle fallbacks).
+
+On TPU the Pallas path is used; on CPU (this container) the kernels run
+under ``interpret=True`` in tests and the pure-jnp oracle is the default
+execution path, so every higher layer works identically on both.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .spmv_ell import ell_spmv as _ell_spmv_pallas
+from .spmv_bell import bell_spmv as _bell_spmv_pallas, bell_spmm as _bell_spmm_pallas
+
+__all__ = ["ell_spmv_ref", "ell_spmv", "hyb_spmv", "bell_spmv", "bell_spmm",
+           "bell_from_bcsr"]
+
+ell_spmv_ref = jax.jit(ref.ell_spmv_ref)
+bell_spmv_ref = jax.jit(ref.bell_spmv_ref)
+bell_spmm_ref = jax.jit(ref.bell_spmm_ref)
+
+
+def ell_spmv(data, cols, x, *, interpret: bool = False, **tiles):
+    """Pallas ELL SpMV (TPU); set interpret=True on CPU."""
+    return _ell_spmv_pallas(data, cols, x, interpret=interpret, **tiles)
+
+
+@functools.partial(jax.jit, static_argnames=("num_rows",))
+def _overflow_add(y, rows, cols, vals, x, num_rows: int):
+    return y.at[rows].add(vals * jnp.take(x, cols, axis=0))
+
+
+def hyb_spmv(ell_data, ell_cols, ovf_rows, ovf_cols, ovf_vals, x,
+             *, use_kernel: bool = False, interpret: bool = False):
+    """HYB = padded-ELL kernel + COO overflow scatter-add tail."""
+    if use_kernel:
+        y = ell_spmv(ell_data, ell_cols, x, interpret=interpret)
+    else:
+        y = ell_spmv_ref(ell_data, ell_cols, x)
+    if ovf_vals.shape[0]:
+        y = _overflow_add(y, ovf_rows, ovf_cols, ovf_vals, x, num_rows=y.shape[0])
+    return y
+
+
+def bell_spmv(blocks, bcols, x, *, use_kernel: bool = False,
+              interpret: bool = False):
+    if use_kernel:
+        return _bell_spmv_pallas(blocks, bcols, x, interpret=interpret)
+    return bell_spmv_ref(blocks, bcols, x)
+
+
+def bell_spmm(blocks, bcols, X, *, use_kernel: bool = False,
+              interpret: bool = False, tile_b: int = 128):
+    if use_kernel:
+        return _bell_spmm_pallas(blocks, bcols, X, tile_b=tile_b,
+                                 interpret=interpret)
+    return bell_spmm_ref(blocks, bcols, X)
+
+
+def bell_from_bcsr(bcsr) -> tuple[np.ndarray, np.ndarray]:
+    """Convert host BcsrMatrix -> padded Block-ELL arrays (blocks, bcols).
+
+    K = max blocks per block-row; padded slots hold zero blocks and bcol 0,
+    which the kernels treat as a no-op contribution.
+    """
+    Mb = bcsr.block_row_ptr.shape[0] - 1
+    bm, bn = bcsr.block_shape
+    per_row = np.diff(bcsr.block_row_ptr)
+    K = max(int(per_row.max()) if Mb else 1, 1)
+    blocks = np.zeros((Mb, K, bm, bn), dtype=bcsr.blocks.dtype)
+    bcols = np.zeros((Mb, K), dtype=np.int32)
+    for r in range(Mb):
+        lo, hi = int(bcsr.block_row_ptr[r]), int(bcsr.block_row_ptr[r + 1])
+        blocks[r, : hi - lo] = bcsr.blocks[lo:hi]
+        bcols[r, : hi - lo] = bcsr.block_cols[lo:hi]
+    return blocks, bcols

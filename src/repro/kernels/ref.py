@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the correctness references the per-kernel tests sweep against
+(shapes x dtypes, assert_allclose).  They are also the fallback execution
+path on backends without Pallas support.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["ell_spmv_ref", "bell_spmv_ref", "coo_spmv_ref", "bell_spmm_ref"]
+
+
+def ell_spmv_ref(data: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """y[i] = sum_w data[i, w] * x[cols[i, w]]  — padded slots hold 0."""
+    return jnp.sum(data * jnp.take(x, cols, axis=0), axis=1)
+
+
+def coo_spmv_ref(rows: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
+                 x: jnp.ndarray, num_rows: int) -> jnp.ndarray:
+    """Scatter-add oracle for the HYB overflow tail."""
+    contrib = vals * jnp.take(x, cols, axis=0)
+    return jnp.zeros((num_rows,), dtype=contrib.dtype).at[rows].add(contrib)
+
+
+def bell_spmv_ref(blocks: jnp.ndarray, bcols: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Block-ELL SpMV oracle.
+
+    blocks: (Mb, K, bm, bn) dense blocks, zero-padded where inactive
+    bcols:  (Mb, K) block-column index per slot (0 for padded slots)
+    x:      (Nb * bn,)
+    returns y: (Mb * bm,)
+    """
+    Mb, K, bm, bn = blocks.shape
+    xb = x.reshape(-1, bn)                       # (Nb, bn)
+    gathered = jnp.take(xb, bcols, axis=0)       # (Mb, K, bn)
+    y = jnp.einsum("mkij,mkj->mi", blocks, gathered)
+    return y.reshape(Mb * bm)
+
+
+def bell_spmm_ref(blocks: jnp.ndarray, bcols: jnp.ndarray, X: jnp.ndarray) -> jnp.ndarray:
+    """Block-ELL SpMM oracle (sparse A @ dense X).
+
+    X: (Nb * bn, B) -> returns (Mb * bm, B).
+    """
+    Mb, K, bm, bn = blocks.shape
+    B = X.shape[1]
+    Xb = X.reshape(-1, bn, B)                    # (Nb, bn, B)
+    gathered = jnp.take(Xb, bcols, axis=0)       # (Mb, K, bn, B)
+    Y = jnp.einsum("mkij,mkjb->mib", blocks, gathered)
+    return Y.reshape(Mb * bm, B)

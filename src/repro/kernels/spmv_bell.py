@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: Block-ELL SpMV / SpMM with scalar-prefetched x tiles.
+
+The MXU-native sparse format (DESIGN.md §2): 128x128 dense blocks in an
+ELL-of-blocks layout — (Mb, K, bm, bn) with K block slots per block row.
+The block-column indices are *scalar-prefetched* so the BlockSpec index_map
+can stream exactly the x (or X) tile each block needs from HBM into VMEM:
+
+    y[mb*bm : (mb+1)*bm] += blocks[mb, k] @ x[bcols[mb, k]*bn : ...]
+
+This is the systolic-array answer to the Emu migratory gather: instead of
+moving a thread to the data, the index map moves exactly one x tile per
+non-zero block across the memory hierarchy, and each such move feeds an
+entire (bm x bn) MXU matmul — arithmetic intensity bm*bn/(bn) = bm flops
+per loaded element instead of 1 for scalar CSR.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["bell_spmv", "bell_spmm"]
+
+
+def _bell_spmv_kernel(bcols_ref, blocks_ref, xb_ref, y_ref):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    block = blocks_ref[0, 0]                   # (bm, bn)
+    xtile = xb_ref[0]                          # (bn,)
+    y_ref[...] += jnp.dot(block, xtile, preferred_element_type=y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bell_spmv(blocks: jnp.ndarray, bcols: jnp.ndarray, x: jnp.ndarray,
+              *, interpret: bool = False) -> jnp.ndarray:
+    """y = A @ x, A in Block-ELL form.
+
+    blocks: (Mb, K, bm, bn); bcols: (Mb, K) int32; x: (Nb*bn,).
+    Padded slots must carry zero blocks (bcols value then irrelevant).
+    """
+    Mb, K, bm, bn = blocks.shape
+    xb = x.reshape(-1, bn)
+    grid = (Mb, K)
+    return pl.pallas_call(
+        _bell_spmv_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, bm, bn), lambda mb, k, bc: (mb, k, 0, 0)),
+                # Stream exactly the x tile this block needs.
+                pl.BlockSpec((1, bn), lambda mb, k, bc: (bc[mb, k], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, bm), lambda mb, k, bc: (mb, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((Mb, bm), x.dtype),
+        interpret=interpret,
+    )(bcols, blocks, xb).reshape(Mb * bm)
+
+
+def _bell_spmm_kernel(bcols_ref, blocks_ref, Xb_ref, Y_ref):
+    k = pl.program_id(2)          # grid is (Mb, B/TB, K): K innermost
+
+    @pl.when(k == 0)
+    def _init():
+        Y_ref[...] = jnp.zeros_like(Y_ref)
+
+    block = blocks_ref[0, 0]                   # (bm, bn)
+    Xtile = Xb_ref[0]                          # (bn, TB)
+    Y_ref[0] += jnp.dot(block, Xtile, preferred_element_type=Y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
+def bell_spmm(blocks: jnp.ndarray, bcols: jnp.ndarray, X: jnp.ndarray,
+              *, tile_b: int = 128, interpret: bool = False) -> jnp.ndarray:
+    """Y = A @ X, A in Block-ELL form, X dense (N, B).
+
+    Grid (Mb, B/TB, K): K innermost so each Y tile is revisited across the
+    reduction with a single VMEM-resident accumulator.
+    """
+    Mb, K, bm, bn = blocks.shape
+    N, B = X.shape
+    tb = min(tile_b, B)
+    if B % tb:
+        raise ValueError(f"tile_b {tb} must divide B {B}")
+    Xb = X.reshape(-1, bn, B)
+    grid = (Mb, B // tb, K)
+    return pl.pallas_call(
+        _bell_spmm_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, bm, bn), lambda mb, b, k, bc: (mb, k, 0, 0)),
+                pl.BlockSpec((1, bn, tb), lambda mb, b, k, bc: (bc[mb, k], 0, b)),
+            ],
+            out_specs=pl.BlockSpec((1, bm, tb), lambda mb, b, k, bc: (mb, 0, b)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((Mb, bm, B), X.dtype),
+        interpret=interpret,
+    )(bcols, blocks, Xb).reshape(Mb * bm, B)

@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: ELL-format SpMV.
+
+TPU adaptation of the paper's CSR row loop (DESIGN.md §2): a scalar
+CSR walk cannot feed the VPU, so rows are padded to a lane-aligned width W
+and the kernel processes (TM, TW) tiles of the ELL slab against an x vector
+resident in VMEM:
+
+    y[i] += sum_w data[i, w] * x[cols[i, w]]
+
+Grid is (M/TM, W/TW); the W-axis is the reduction, accumulated in the output
+tile (revisited across the w grid dimension, initialised at w == 0).  The
+gather from x is a VMEM dynamic-gather — the TPU analogue of the Emu
+migratory load: x is the *block-layout local shard*, so every gather that
+would have been a migration on Emu is a VMEM hit here, which is exactly why
+the distributed layer (core/spmv.py) reproduces the paper's block-layout
+win on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["ell_spmv"]
+
+
+def _ell_kernel(data_ref, cols_ref, x_ref, y_ref):
+    w = pl.program_id(1)
+
+    @pl.when(w == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    data = data_ref[...]                       # (TM, TW)
+    cols = cols_ref[...]                       # (TM, TW)
+    x = x_ref[...]                             # (N,) resident in VMEM
+    gathered = jnp.take(x, cols, axis=0)       # VMEM dynamic gather
+    y_ref[...] += jnp.sum(data * gathered, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_w", "interpret"))
+def ell_spmv(data: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray,
+             *, tile_m: int = 256, tile_w: int = 512,
+             interpret: bool = False) -> jnp.ndarray:
+    """y = A @ x with A in padded-ELL form.
+
+    data/cols: (M, W) with W % 128 == 0 (lane aligned), M % 8 == 0.
+    x: (N,) — must fit VMEM alongside the tiles (the distributed layer
+    shards x so each local slab sees only its block).
+    """
+    M, W = data.shape
+    tm = min(tile_m, M)
+    tw = min(tile_w, W)
+    if M % tm or W % tw:
+        raise ValueError(f"tiles must divide slab: {(M, W)} vs {(tm, tw)}")
+    grid = (M // tm, W // tw)
+    return pl.pallas_call(
+        _ell_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tw), lambda m, w: (m, w)),       # data tile
+            pl.BlockSpec((tm, tw), lambda m, w: (m, w)),       # cols tile
+            pl.BlockSpec((x.shape[0],), lambda m, w: (0,)),    # full x in VMEM
+        ],
+        out_specs=pl.BlockSpec((tm,), lambda m, w: (m,)),
+        out_shape=jax.ShapeDtypeStruct((M,), x.dtype),
+        interpret=interpret,
+    )(data, cols, x)

@@ -1,0 +1,321 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell the right step function is lowered against ShapeDtypeStruct
+inputs (no allocation), compiled, and the compiled artifact is mined for:
+
+* ``memory_analysis()``  — bytes/device (proves the sharding fits HBM),
+* ``cost_analysis()``    — HLO FLOPs + bytes accessed (roofline terms),
+* the stable-HLO / HLO text — collective operand bytes (the ICI term and
+  the paper's migration analogue).
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun                    # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma_7b \
+        --shape train_4k --multi-pod both --json out.json
+"""
+from __future__ import annotations
+
+# The XLA flag must be set before jax initializes devices — these two lines
+# run before ANY other import (including ``from repro...``), since jax locks
+# the device count on first init.
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, get_config, input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models import params as pp
+from repro.models.config import SHAPES, shape_applicable
+from repro.optim import adamw
+from repro.train.loop import (RunConfig, make_decode_step, make_prefill_step,
+                              make_train_step)
+
+# v5e-class hardware constants (per chip) for the roofline terms.
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link (per-chip effective, one link)
+
+_COLLECTIVE_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+
+
+def _dtype_bytes(s: str) -> int:
+    return {"f64": 8, "f32": 4, "s64": 8, "u64": 8, "bf16": 2, "f16": 2,
+            "s32": 4, "u32": 4, "s16": 2, "u16": 2, "pred": 1, "s8": 1,
+            "u8": 1, "f8": 1}.get(s, 4)
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:
+    """Sum operand bytes of every collective op in compiled HLO text."""
+    out: Dict[str, float] = {}
+    shape_re = re.compile(r"(\w+)\[([\d,]*)\]")
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m or "=" not in line:
+            continue
+        kind = m.group(1)
+        # HLO text: `%name = <output shape(s)> <op>(...)`.  Count the output
+        # shapes — the segment between '=' and the op keyword.
+        rhs = line.split("=", 1)[1]
+        op_pos = rhs.find(kind)
+        seg = rhs[:op_pos] if op_pos > 0 else rhs
+        nbytes = 0
+        for dt, dims in shape_re.findall(seg):
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+            nbytes += n * _dtype_bytes(dt)
+        out[kind] = out.get(kind, 0) + nbytes
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D train / 2*N_active*D inference (decode: D = new tokens)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch       # one token per stream
+
+
+def _n_units(cfg) -> int:
+    return (cfg.num_layers - cfg.dense_first_layers) // len(cfg.pattern())
+
+
+def _partial_unroll(cfg) -> int:
+    """Largest small divisor of the unit count (exact extrapolation)."""
+    n = _n_units(cfg)
+    for u in (4, 3, 2):
+        if n % u == 0 and n > u:
+            return u
+    return 1
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, fsdp=None,
+               run: RunConfig | None = None, unroll=False):
+    """Lower + compile one cell; returns (lowered, compiled, cfg, shape).
+
+    ``unroll`` may be False (production lowering), True (full unroll) or an
+    int (partial unroll of the layer scan — used with trip-count
+    extrapolation by run_cell)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if run is None:
+        if fsdp is None:
+            # FSDP for the big archs; pure TP+DP replication is fine <10B.
+            fsdp = cfg.param_count() > 8e9
+            if shape.kind == "decode":
+                # Serving: static weights make per-token FSDP gathers pure
+                # waste (§Perf decode iteration) — drop FSDP whenever the
+                # TP-sharded weights fit HBM (everything but the 104B/314B).
+                fsdp = cfg.param_count() * 2 / 16 > 10e9
+        # Train cells accumulate gradients over 8 microbatches (1M-token
+        # global batch never lives on-chip at once — production practice).
+        run = RunConfig(fsdp=fsdp, remat=True, donate=True, scan_unroll=unroll,
+                        grad_accum=8 if shape.kind == "train" else 1)
+    specs = input_specs(cfg, shape)
+    abstract_p = pp.abstract_params(cfg)
+
+    with mesh:
+        if shape.kind == "train":
+            step_fn, jit_for, _ = make_train_step(
+                cfg, adamw.AdamWConfig(), mesh, run)
+            abstract_o = adamw.abstract_state(abstract_p)
+            jitted = jit_for(specs)
+            lowered = jitted.lower(abstract_p, abstract_o, specs,
+                                   jax.ShapeDtypeStruct((2,), jnp.uint32))
+        elif shape.kind == "prefill":
+            _, jit_for, _ = make_prefill_step(cfg, mesh, shape.global_batch,
+                                              run)
+            jitted = jit_for(specs)
+            lowered = jitted.lower(abstract_p, specs)
+        else:  # decode
+            _, jitted, _ = make_decode_step(cfg, mesh, shape.global_batch, run)
+            lowered = jitted.lower(abstract_p, specs["tokens"],
+                                   specs["caches"], specs["pos"])
+        compiled = lowered.compile()
+    return lowered, compiled, cfg, shape
+
+
+def analyze(lowered, compiled, cfg, shape, mesh, *, grad_accum: int = 1
+            ) -> Dict[str, Any]:
+    chips = int(np.prod(list(mesh.shape.values())))
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo)
+    # The microbatch scan body is counted once by cost_analysis; one step
+    # runs it grad_accum times (slightly overcounts the once-per-step
+    # optimizer collectives — conservative).
+    coll = {k: v * grad_accum for k, v in coll.items()}
+    flops = float(cost.get("flops", 0.0)) * grad_accum
+    bytes_accessed = float(cost.get("bytes accessed", 0.0)) * grad_accum
+    # cost_analysis is per-device for SPMD-partitioned modules.
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_accessed / HBM_BW
+    t_collective = coll["total"] / ICI_BW
+    mf = model_flops(cfg, shape)
+    res = {
+        "chips": chips,
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_per_chip": bytes_accessed,
+        "collective_bytes_per_chip": coll["total"],
+        "collectives": {k: v for k, v in coll.items() if k != "total"},
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "bottleneck": max(
+            [("compute", t_compute), ("memory", t_memory),
+             ("collective", t_collective)], key=lambda kv: kv[1])[0],
+        "model_flops_total": mf,
+        "useful_flops_ratio": mf / max(flops * chips, 1.0),
+        "grad_accum": grad_accum,
+        "bytes_per_device": {
+            "argument": getattr(mem, "argument_size_in_bytes", None),
+            "temp": getattr(mem, "temp_size_in_bytes", None),
+            # donation aliases outputs onto arguments; peak ~ args + temp
+            "peak": (getattr(mem, "argument_size_in_bytes", 0) or 0) +
+                    (getattr(mem, "temp_size_in_bytes", 0) or 0),
+        },
+    }
+    return res
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             unroll: bool = False) -> Dict[str, Any]:
+    from repro.models import layers as _layers
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    # Pass 1 (rolled): the compile-proof + per-device memory picture.
+    lowered, compiled, cfg, shape = lower_cell(arch, shape_name, mesh)
+    ga = 8 if shape.kind == "train" else 1
+    res = analyze(lowered, compiled, cfg, shape, mesh, grad_accum=ga)
+    if unroll:
+        # Pass 2: XLA counts a while-loop body once, so the rolled pass
+        # sees ~1 layer-unit of cost.  Re-lower with the layer scan
+        # partially unrolled by a divisor u of the unit count (and inner
+        # chunk scans fully unrolled), then extrapolate linearly in trip
+        # count: cost_total = cost_rolled + (n_units - 1)/(u - 1) *
+        # (cost_u - cost_rolled).  Exact for per-unit costs; the one-unit
+        # chunk-scan undercount in the rolled term is <~3% (noted in
+        # EXPERIMENTS.md).  Memory is reported from the production pass.
+        mem_rolled = res["bytes_per_device"]
+        u = _partial_unroll(cfg)
+        n = _n_units(cfg)
+        try:
+            if u > 1:
+                _layers.ANALYSIS_UNROLL = True
+                lo2, co2, _, _ = lower_cell(arch, shape_name, mesh, unroll=u)
+                res_u = analyze(lo2, co2, cfg, shape, mesh, grad_accum=ga)
+                scale = (n - 1) / (u - 1)
+                for key in ("hlo_flops_per_chip", "hlo_bytes_per_chip",
+                            "collective_bytes_per_chip"):
+                    res_u[key] = res[key] + scale * (res_u[key] - res[key])
+                res_u["collectives"] = {
+                    k: res["collectives"].get(k, 0.0) + scale *
+                    (v - res["collectives"].get(k, 0.0))
+                    for k, v in res_u["collectives"].items()}
+                res_u["t_compute_s"] = res_u["hlo_flops_per_chip"] / PEAK_FLOPS
+                res_u["t_memory_s"] = res_u["hlo_bytes_per_chip"] / HBM_BW
+                res_u["t_collective_s"] =                     res_u["collective_bytes_per_chip"] / ICI_BW
+                res_u["bottleneck"] = max(
+                    [("compute", res_u["t_compute_s"]),
+                     ("memory", res_u["t_memory_s"]),
+                     ("collective", res_u["t_collective_s"])],
+                    key=lambda kv: kv[1])[0]
+                res_u["useful_flops_ratio"] = res_u["model_flops_total"] /                     max(res_u["hlo_flops_per_chip"] * res_u["chips"], 1.0)
+                res = res_u
+            res["bytes_per_device"] = mem_rolled
+            res["cost_pass"] = f"extrapolated(u={u},n={n})"
+        except Exception as e:  # fall back to rolled costs, note it
+            res["cost_pass"] = f"rolled (unroll failed: {str(e)[:120]})"
+        finally:
+            _layers.ANALYSIS_UNROLL = False
+    res.update(arch=arch, shape=shape_name,
+               mesh="2x16x16" if multi_pod else "16x16",
+               compile_s=round(time.time() - t0, 1), status="ok")
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", choices=("no", "yes", "both"), default="no")
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll the layer scan for analysis-grade "
+                         "cost_analysis (slower compiles)")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    pods = {"no": [False], "yes": [True], "both": [False, True]}[args.multi_pod]
+
+    results = []
+
+    def emit(r):
+        results.append(r)
+        if args.json:
+            with open(args.json + "l", "a") as f:   # incremental JSONL
+                f.write(json.dumps(r) + "\n")
+
+    for arch in archs:
+        cfg = get_config(arch)
+        for sname in shapes:
+            if not shape_applicable(cfg, SHAPES[sname]):
+                emit({"arch": arch, "shape": sname, "status": "skip",
+                      "reason": "quadratic attention @500k (DESIGN.md §5)"})
+                print(f"SKIP  {arch:22s} {sname}")
+                continue
+            for mp in pods:
+                try:
+                    r = run_cell(arch, sname, multi_pod=mp,
+                                 unroll=args.unroll)
+                    emit(r)
+                    print(f"OK    {arch:22s} {sname:12s} {r['mesh']:8s} "
+                          f"compute={r['t_compute_s']:.3e}s "
+                          f"mem={r['t_memory_s']:.3e}s "
+                          f"coll={r['t_collective_s']:.3e}s "
+                          f"-> {r['bottleneck']:10s} "
+                          f"peak={r['bytes_per_device']['peak']/2**30:.1f}GiB "
+                          f"[{r['compile_s']}s]")
+                except Exception as e:
+                    emit({"arch": arch, "shape": sname,
+                          "mesh": "2x16x16" if mp else "16x16",
+                          "status": "fail", "error": str(e)[:2000]})
+                    print(f"FAIL  {arch:22s} {sname:12s} "
+                          f"{'2x16x16' if mp else '16x16'}: "
+                          f"{type(e).__name__}: {str(e)[:200]}")
+                    traceback.print_exc(limit=3)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1)
+    ok = sum(1 for r in results if r["status"] == "ok")
+    fail = sum(1 for r in results if r["status"] == "fail")
+    skip = sum(1 for r in results if r["status"] == "skip")
+    print(f"\n{ok} ok / {fail} fail / {skip} skip")
+    if fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

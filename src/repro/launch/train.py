@@ -1,0 +1,69 @@
+"""Production training launcher.
+
+On a real pod this is the per-host entry point (jax.distributed handles the
+coordinator); in this container it runs the same code path on the host mesh
+(or the 512-device production mesh with --dry-run for the compile proof).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3_4b \
+        --steps 100 --smoke           # reduced config, runnable on CPU
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_4b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-runnable)")
+    ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--grad-accum", type=int, default=2)
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="straggler deadline per step (0 = off)")
+    args = ap.parse_args()
+
+    import jax
+    from repro.configs.registry import get_config, get_smoke_config
+    from repro.data.synthetic import DataConfig, TokenStream
+    from repro.launch.mesh import make_host_mesh
+    from repro.optim import adamw
+    from repro.train import checkpoint as ckpt, elastic
+    from repro.train.loop import RunConfig, train_loop
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = make_host_mesh()
+    run = RunConfig(fsdp=False, remat=True, donate=True,
+                    grad_accum=args.grad_accum,
+                    step_deadline_s=args.deadline_s)
+    stream = TokenStream(cfg, DataConfig(seed=0, batch=args.batch,
+                                         seq_len=args.seq))
+    opt_cfg = adamw.AdamWConfig(total_steps=args.steps)
+
+    params = opt_state = None
+    start = 0
+    if args.resume and ckpt.latest_step(args.ckpt) is not None:
+        params, opt_state, start = elastic.resume(cfg, opt_cfg, args.ckpt,
+                                                  mesh, run)
+        print(f"resumed from step {start}")
+
+    def report(step, m):
+        if step % 10 == 0:
+            extra = " STRAGGLER" if "straggler" in m else ""
+            print(f"step {step:5d} loss={m['loss']:.4f} lr={m['lr']:.2e}"
+                  f"{extra}")
+
+    train_loop(cfg, opt_cfg, mesh, stream, args.steps, run,
+               checkpoint_dir=args.ckpt, checkpoint_every=50,
+               start_step=start, params=params, opt_state=opt_state,
+               on_metrics=report)
+    ckpt.wait_for_writes()
+    print("training complete")
+
+
+if __name__ == "__main__":
+    main()

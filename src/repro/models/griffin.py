@@ -1,0 +1,86 @@
+"""Griffin/RecurrentGemma blocks: RG-LRU recurrent block (arXiv:2402.19427).
+
+The RG-LRU is a diagonal gated linear recurrence — h_t = a_t * h_{t-1} +
+sqrt(1 - a_t^2) * (i_t * u_t) — which trains with a log-depth
+``associative_scan`` (the sub-quadratic path that makes long_500k feasible)
+and decodes with an O(1) step.  The block is the Griffin recurrent block:
+a GeLU linear branch gating a (causal conv -> RG-LRU) branch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+_C = 8.0  # Griffin's fixed recurrence sharpness
+
+
+def _rg_lru_scan(u, r_gate, i_gate, lam, h0=None):
+    """u/r_gate/i_gate: (B, S, D); lam: (D,) logits of a. Returns (B,S,D), hS."""
+    log_a = -_C * jax.nn.softplus(lam.astype(F32)) * \
+        jax.nn.sigmoid(r_gate.astype(F32))                  # (B, S, D) <= 0
+    a = jnp.exp(log_a)
+    gated = jax.nn.sigmoid(i_gate.astype(F32)) * u.astype(F32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+
+    if h0 is not None:
+        # Fold the carried state into the first step's offset.
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(F32))
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(jnp.bfloat16), h[:, -1]
+
+
+def _rg_lru_step(u, r_gate, i_gate, lam, h_prev):
+    log_a = -_C * jax.nn.softplus(lam.astype(F32)) * \
+        jax.nn.sigmoid(r_gate.astype(F32))
+    a = jnp.exp(log_a)
+    gated = jax.nn.sigmoid(i_gate.astype(F32)) * u.astype(F32)
+    h = a * h_prev.astype(F32) + \
+        jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+    return h.astype(jnp.bfloat16), h
+
+
+def causal_conv1d(x, kernel, conv_state=None):
+    """Depthwise causal conv.  x: (B, S, D); kernel: (W, D).
+
+    conv_state: (B, W-1, D) trailing inputs from the previous call (decode).
+    Returns (y, new_state).
+    """
+    W = kernel.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)            # (B, S+W-1, D)
+    y = sum(xp[:, i : i + x.shape[1]] * kernel[i][None, None]
+            for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else None
+    return y, new_state
+
+
+def rglru_block(params, x, cfg, state=None, *, decode=False):
+    """Griffin recurrent block.  state: (h, conv_state)."""
+    B, S, d = x.shape
+    width = params["lam"].shape[0]
+    gate = jax.nn.gelu(jnp.einsum(
+        "bsd,dm->bsm", x, params["w_gelu_gate"]).astype(F32)).astype(x.dtype)
+    u = jnp.einsum("bsd,dm->bsm", x, params["w_in"])
+    h_prev, conv_state = (None, None) if state is None else state
+    u, conv_state = causal_conv1d(u, params["conv_kernel"], conv_state)
+    r_gate = jnp.einsum("bsm,mg->bsg", u, params["w_rgate"])
+    i_gate = jnp.einsum("bsm,mg->bsg", u, params["w_igate"])
+    if decode:
+        h, h_last = _rg_lru_step(u[:, 0], r_gate[:, 0], i_gate[:, 0],
+                                 params["lam"], h_prev)
+        h = h[:, None]
+    else:
+        h0 = h_prev
+        h, h_last = _rg_lru_scan(u, r_gate, i_gate, params["lam"], h0)
+    out = jnp.einsum("bsm,md->bsd", h * gate, params["w_out"])
+    return out, (h_last, conv_state)

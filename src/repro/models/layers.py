@@ -1,0 +1,207 @@
+"""Shared neural-net layers: norms, rope, attention, FFN.
+
+All functions are pure (params explicit), bf16 activations with f32
+reductions, and shaped for GSPMD: batch leads, heads/ffn are the natural
+"model"-axis shard dims.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+F32 = jnp.float32
+
+# Analysis-mode flag: when True, inner reduction scans (attention chunks,
+# mLSTM chunks) unroll so XLA cost_analysis counts every iteration.  Set by
+# repro.launch.dryrun only; never in production paths.
+ANALYSIS_UNROLL = False
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(F32)), axis=-1, keepdims=True)
+    y = x.astype(F32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(F32))).astype(x.dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=F32) / half)
+    angles = positions[..., :, None].astype(F32) * freq          # (..., S, half)
+    cos = jnp.cos(angles)[..., :, None, :]                        # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _softcap(logits: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      *, causal: bool = True, window: Optional[int] = None,
+                      prefix_len: int = 0, chunk: int = 1024,
+                      softcap: Optional[float] = None) -> jnp.ndarray:
+    """Memory-safe flash-style attention (lax.scan over KV chunks).
+
+    q: (B, S, H, D); k/v: (B, T, Hkv, D) with H % Hkv == 0.
+    Never materialises the (S, T) score matrix — the online-softmax state is
+    (m, l, acc) per query. ``window`` masks to a local band; ``prefix_len``
+    makes the first P keys bidirectional (PaliGemma-style prefix-LM).
+    """
+    B, S, H, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    scale = D ** -0.5
+    q = q.astype(F32) * scale
+    nchunks = -(-T // chunk)
+    Tp = nchunks * chunk
+    pad = Tp - T
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, nchunks, chunk, Hkv, D)
+    vc = v.reshape(B, nchunks, chunk, Hkv, D)
+    q_pos = jnp.arange(S)[:, None]                       # query positions
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, cidx = inp
+        kv_pos = cidx * chunk + jnp.arange(chunk)[None, :]
+        kb = jnp.repeat(kb, rep, axis=2)                # (B, chunk, H, D)
+        vb = jnp.repeat(vb, rep, axis=2)
+        s = jnp.einsum("bshd,bthd->bhst", q, kb.astype(F32))
+        s = _softcap(s, softcap)
+        mask = jnp.ones((S, chunk), dtype=bool)
+        if causal:
+            c = q_pos >= kv_pos
+            if prefix_len:
+                c = c | (kv_pos < prefix_len)
+            mask &= c
+        if window is not None:
+            mask &= (q_pos - kv_pos) < window
+        mask &= kv_pos < T                               # padding
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # Guard fully-masked rows (m_new == -inf).
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, None], p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhst,bthd->bhsd", p, vb.astype(F32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, S), -jnp.inf, dtype=F32)
+    l0 = jnp.zeros((B, H, S), dtype=F32)
+    a0 = jnp.zeros((B, H, S, D), dtype=F32)
+    kcs = jnp.moveaxis(kc, 1, 0)
+    vcs = jnp.moveaxis(vc, 1, 0)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kcs, vcs, jnp.arange(nchunks)),
+        unroll=nchunks if ANALYSIS_UNROLL else 1)
+    out = acc / jnp.maximum(l, 1e-37)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(jnp.bfloat16)  # (B, S, H, D)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     length: jnp.ndarray, *, softcap: Optional[float] = None,
+                     window: Optional[int] = None) -> jnp.ndarray:
+    """Single-token attention over a cache — sequence-parallel form.
+
+    q: (B, 1, H, D); caches: (B, T, Hkv, D); length: () or (B,) valid len.
+    The cache's T dim stays sharded over "model": scores and the masked
+    softmax are elementwise/reducible over T, so the only collectives are
+    the (B, H) logsumexp terms and the (B, H, D) partial outputs — without
+    the constraints GSPMD all-gathers the whole cache in f32 per step
+    (1 GB/layer at qwen25 decode_32k — §Perf log).
+    """
+    from repro.models.model import _maybe_constrain, _BATCH
+    B, _, H, D = q.shape
+    T, Hkv = k_cache.shape[1], k_cache.shape[2]
+    rep = H // Hkv
+    qf = q.astype(F32) * D ** -0.5
+    # scores in the kv-head layout (no head repeat: q grouped per kv head)
+    qg = qf.reshape(B, 1, Hkv, rep, D)
+    s = jnp.einsum("bqhrd,bthd->bhrqt", qg, k_cache.astype(F32))
+    s = _maybe_constrain(s, _BATCH, None, None, None, "model")
+    s = _softcap(s, softcap)
+    pos = jnp.arange(T)[None, None, None, None]
+    valid = pos < jnp.reshape(length, (-1, 1, 1, 1, 1))
+    if window is not None:
+        valid &= pos >= (jnp.reshape(length, (-1, 1, 1, 1, 1)) - window)
+    s = jnp.where(valid[:, :, :, 0][:, :, None], s, -jnp.inf)
+    # streaming softmax: the reductions over T lower to psum over "model"
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - jax.lax.stop_gradient(m))
+    l = jnp.sum(e, axis=-1, keepdims=True)
+    p = (e / l).astype(jnp.bfloat16)
+    out = jnp.einsum("bhrqt,bthd->bqhrd", p.astype(F32),
+                     v_cache.astype(F32))
+    return out.reshape(B, 1, H, D).astype(jnp.bfloat16)
+
+
+def attention_block(params, x, cfg: ModelConfig, positions, *,
+                    window=None, prefix_len=0, kv_cache=None, cache_len=None):
+    """Full attention block.  Returns (out, new_kv) — new_kv is (k, v) for
+    prefill (to build a cache) or the updated cache for decode."""
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x,
+                   params["wq"].reshape(cfg.d_model, cfg.num_heads, cfg.head_dim))
+    k = jnp.einsum("bsd,dhk->bshk", x,
+                   params["wk"].reshape(cfg.d_model, cfg.num_kv_heads, cfg.head_dim))
+    v = jnp.einsum("bsd,dhk->bshk", x,
+                   params["wv"].reshape(cfg.d_model, cfg.num_kv_heads, cfg.head_dim))
+    if cfg.qkv_bias:
+        q = q + params["bq"].reshape(1, 1, cfg.num_heads, cfg.head_dim)
+        k = k + params["bk"].reshape(1, 1, cfg.num_kv_heads, cfg.head_dim)
+        v = v + params["bv"].reshape(1, 1, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    if kv_cache is not None:
+        k_cache, v_cache = kv_cache
+        T = k_cache.shape[1]
+        ring = window is not None and T <= window
+        # Ring buffer for local attention: slot = pos % T; every resident
+        # entry is in-window by construction, so no extra window mask.
+        idx = cache_len % T if ring else cache_len
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), idx, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), idx, axis=1)
+        length = jnp.minimum(cache_len + S, T) if ring else cache_len + S
+        out = decode_attention(q, k_cache, v_cache, length,
+                               softcap=None, window=None if ring else window)
+        new_kv = (k_cache, v_cache)
+    else:
+        out = chunked_attention(q, k, v, causal=True, window=window,
+                                prefix_len=prefix_len)
+        new_kv = (k, v)
+    out = jnp.einsum("bshk,hkd->bsd",
+                     out, params["wo"].reshape(cfg.num_heads, cfg.head_dim,
+                                               cfg.d_model))
+    return out.astype(x.dtype), new_kv
+
+
+def ffn_block(params, x, activation: str):
+    gate = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+    up = jnp.einsum("bsd,df->bsf", x, params["w_up"])
+    if activation == "geglu":
+        h = jax.nn.gelu(gate.astype(F32)).astype(x.dtype) * up
+    else:  # swiglu
+        h = (jax.nn.silu(gate.astype(F32)).astype(x.dtype)) * up
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"])

@@ -1,0 +1,341 @@
+"""Model assembly: forward / loss / prefill / decode for all 10 archs.
+
+One code path serves every family; heterogeneous stacks run as scanned
+super-blocks (pattern units) with optional unscanned tail/prefix layers.
+Decode threads a per-layer state pytree (KV caches for attention kinds,
+recurrent states for ssm/hybrid kinds) through the same block dispatch.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .griffin import rglru_block
+from .layers import attention_block, ffn_block, rms_norm
+from .moe import moe_ffn, shared_ffn
+from .xlstm import mlstm_block, slstm_block
+
+F32 = jnp.float32
+Tree = Any
+
+
+def _maybe_constrain(x: jnp.ndarray, *axes) -> jnp.ndarray:
+    """with_sharding_constraint iff tracing inside a non-trivial mesh.
+
+    ``axes`` gives one mesh axis, tuple of axes, or None per dim of x; axes
+    not in the active mesh (or not dividing the dim) are dropped.  No-op
+    outside a mesh context, so smoke tests / single-device runs are
+    unaffected.
+    """
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+        if m.empty:
+            return x
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        def resolve(dim, a):
+            cand = a if isinstance(a, tuple) else ((a,) if a else ())
+            cand = tuple(c for c in cand if c in m.axis_names)
+            size = 1
+            for c in cand:
+                size *= m.shape[c]
+            if not cand or x.shape[dim] % size or x.shape[dim] < size:
+                return None
+            return cand if len(cand) > 1 else cand[0]
+
+        spec = PartitionSpec(*[resolve(i, a) for i, a in enumerate(axes)])
+        return jax.lax.with_sharding_constraint(x, NamedSharding(m, spec))
+    except Exception:
+        return x
+
+
+_BATCH = ("pod", "data")
+
+
+# --------------------------------------------------------------------------
+# single block
+# --------------------------------------------------------------------------
+
+def _ffn_params(p):
+    return {k: p[k] for k in ("w_gate", "w_up", "w_down")}
+
+
+def block_apply(kind: str, p: Tree, x: jnp.ndarray, cfg: ModelConfig,
+                positions: jnp.ndarray, *, cache=None, cache_len=None,
+                decode: bool = False, prefix_len: int = 0,
+                rng: Optional[jax.Array] = None):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), F32)
+    if kind in ("attn", "local_attn", "moe"):
+        window = cfg.attn_window if kind == "local_attn" else None
+        h, new_cache = attention_block(
+            p, rms_norm(x, p["norm1"]), cfg, positions, window=window,
+            prefix_len=prefix_len, kv_cache=cache, cache_len=cache_len)
+        x = x + h
+        if kind == "moe" and "router" in p:
+            y, aux = moe_ffn(p, rms_norm(x, p["norm2"]), cfg.moe,
+                             cfg.activation, rng=rng)
+            if "s_gate" in p:
+                y = y + shared_ffn(
+                    {"w_gate": p["s_gate"], "w_up": p["s_up"],
+                     "w_down": p["s_down"]},
+                    rms_norm(x, p["norm2"]), cfg.activation)
+            x = x + y
+        elif "w_gate" in p:
+            x = x + ffn_block(_ffn_params(p), rms_norm(x, p["norm2"]),
+                              cfg.activation)
+    elif kind == "mlstm":
+        h, new_cache = mlstm_block(p, rms_norm(x, p["norm1"]), cfg,
+                                   state=cache, decode=decode)
+        x = x + h
+    elif kind == "slstm":
+        h, new_cache = slstm_block(p, rms_norm(x, p["norm1"]), cfg,
+                                   state=cache, decode=decode)
+        x = x + h
+    elif kind == "rglru":
+        h, new_cache = rglru_block(p, rms_norm(x, p["norm1"]), cfg,
+                                   state=cache, decode=decode)
+        x = x + h
+        if "w_gate" in p and "norm2" in p:
+            x = x + ffn_block(_ffn_params(p), rms_norm(x, p["norm2"]),
+                              cfg.activation)
+    else:
+        raise ValueError(kind)
+    return x, new_cache, aux
+
+
+# --------------------------------------------------------------------------
+# cache construction
+# --------------------------------------------------------------------------
+
+def _block_cache_shape(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+    """Abstract cache for one block (no leading unit axis)."""
+    bf = jnp.bfloat16
+    if kind in ("attn", "moe"):
+        c = (batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+        return (jax.ShapeDtypeStruct(c, bf), jax.ShapeDtypeStruct(c, bf))
+    if kind == "local_attn":
+        w = min(cfg.attn_window or max_len, max_len)
+        c = (batch, w, cfg.num_kv_heads, cfg.head_dim)
+        return (jax.ShapeDtypeStruct(c, bf), jax.ShapeDtypeStruct(c, bf))
+    if kind == "mlstm":
+        inner = int(cfg.d_model * cfg.lstm_proj_factor)
+        Dk = inner // cfg.num_heads
+        return (jax.ShapeDtypeStruct((batch, cfg.num_heads, Dk, Dk), F32),
+                jax.ShapeDtypeStruct((batch, cfg.num_heads, Dk), F32))
+    if kind == "slstm":
+        from .params import slstm_inner
+        inner = slstm_inner(cfg)
+        Dh = inner // cfg.num_heads
+        s = jax.ShapeDtypeStruct((batch, cfg.num_heads, Dh), F32)
+        return (s, s, s, s)
+    if kind == "rglru":
+        w = cfg.lru_width or cfg.d_model
+        return (jax.ShapeDtypeStruct((batch, w), F32),
+                jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, w), jnp.bfloat16))
+    raise ValueError(kind)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int) -> Tree:
+    unit = cfg.pattern()
+    n_scan = cfg.num_layers - cfg.dense_first_layers
+    n_units = n_scan // len(unit)
+    tail_kinds = unit[: n_scan % len(unit)]
+
+    def stack(sds, n):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n, *s.shape), s.dtype), sds)
+
+    cache = {
+        "stack": {f"u{j}_{k}": stack(_block_cache_shape(cfg, k, batch, max_len),
+                                     n_units)
+                  for j, k in enumerate(unit)},
+        "tail": {f"t{j}_{k}": _block_cache_shape(cfg, k, batch, max_len)
+                 for j, k in enumerate(tail_kinds)},
+        "prefix": {f"p{j}_{unit[0]}": _block_cache_shape(cfg, unit[0], batch,
+                                                         max_len)
+                   for j in range(cfg.dense_first_layers)},
+    }
+    return cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Tree:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        abstract_cache(cfg, batch, max_len))
+
+
+# --------------------------------------------------------------------------
+# stack traversal
+# --------------------------------------------------------------------------
+
+def _apply_stack(params: Tree, x: jnp.ndarray, cfg: ModelConfig,
+                 positions, *, caches=None, cache_len=None, decode=False,
+                 prefix_len=0, rng=None, remat=False, scan_unroll=1):
+    """Run prefix layers, the scanned super-block stack, then tail layers."""
+    unit = cfg.pattern()
+    aux_total = jnp.zeros((), F32)
+    new_caches: Dict[str, Any] = {"stack": {}, "tail": {}, "prefix": {}}
+
+    def get_cache(group, name):
+        return None if caches is None else caches[group][name]
+
+    for j in range(cfg.dense_first_layers):
+        name = f"p{j}_{unit[0]}"
+        x, nc, aux = block_apply(unit[0], params["prefix"][name], x, cfg,
+                                 positions, cache=get_cache("prefix", name),
+                                 cache_len=cache_len, decode=decode,
+                                 prefix_len=prefix_len, rng=rng)
+        new_caches["prefix"][name] = nc
+        aux_total += aux
+
+    # scanned units
+    n_units = jax.tree.leaves(params["stack"])[0].shape[0] \
+        if params["stack"] else 0
+    if n_units:
+        stack_params = params["stack"]
+        stack_caches = None if caches is None else caches["stack"]
+
+        def body(carry, per_unit):
+            x, aux_acc = carry
+            x = _maybe_constrain(x, _BATCH, None, None)  # batch stays DP
+            p_j, c_j = per_unit
+            ncs = {}
+            for j, kind in enumerate(unit):
+                name = f"u{j}_{kind}"
+                c = None if c_j is None else c_j[name]
+                x, nc, aux = block_apply(kind, p_j[name], x, cfg, positions,
+                                         cache=c, cache_len=cache_len,
+                                         decode=decode, prefix_len=prefix_len,
+                                         rng=rng)
+                if c_j is not None:
+                    ncs[name] = nc      # train mode: no cache ys to stack
+            return (x, aux_acc + aux), ncs
+
+        if stack_caches is None:
+            unit_fn = (lambda c, p: body(c, (p, None)))
+            if remat:
+                # Per-unit activation checkpointing: the scan recomputes a
+                # super-block on the backward pass instead of saving it.
+                unit_fn = jax.checkpoint(unit_fn,
+                                         prevent_cse=False)
+            (x, aux_total), out_caches = jax.lax.scan(
+                unit_fn, (x, aux_total), stack_params, unroll=scan_unroll)
+        else:
+            (x, aux_total), out_caches = jax.lax.scan(
+                body, (x, aux_total), (stack_params, stack_caches),
+                unroll=scan_unroll)
+        new_caches["stack"] = out_caches
+
+    tail_kinds = unit[: (cfg.num_layers - cfg.dense_first_layers) % len(unit)]
+    for j, kind in enumerate(tail_kinds):
+        name = f"t{j}_{kind}"
+        x, nc, aux = block_apply(kind, params["tail"][name], x, cfg,
+                                 positions, cache=get_cache("tail", name),
+                                 cache_len=cache_len, decode=decode,
+                                 prefix_len=prefix_len, rng=rng)
+        new_caches["tail"][name] = nc
+        aux_total += aux
+    return x, new_caches, aux_total
+
+
+# --------------------------------------------------------------------------
+# public entry points
+# --------------------------------------------------------------------------
+
+def embed_inputs(params: Tree, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]):
+    """Family-specific input embedding. Returns (x, positions, prefix_len)."""
+    if cfg.frontend == "encodec_stub":
+        x = batch["frames"].astype(jnp.bfloat16)            # (B, S, d)
+        B, S, _ = x.shape
+        return x, jnp.arange(S)[None].repeat(B, 0), 0
+    if cfg.frontend == "siglip_stub":
+        img = batch["image_embeds"].astype(jnp.bfloat16)    # (B, P, d)
+        tok = jnp.take(params["embed"], batch["tokens"], axis=0)
+        x = jnp.concatenate([img, tok.astype(jnp.bfloat16)], axis=1)
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        B, S, _ = x.shape
+        return x, jnp.arange(S)[None].repeat(B, 0), cfg.prefix_len
+    tok = jnp.take(params["embed"], batch["tokens"], axis=0)
+    x = tok.astype(jnp.bfloat16) * jnp.asarray(cfg.d_model ** 0.5, jnp.bfloat16)
+    x = _maybe_constrain(x, _BATCH, None, None)
+    B, S = batch["tokens"].shape
+    return x, jnp.arange(S)[None].repeat(B, 0), 0
+
+
+def logits_from_hidden(params: Tree, cfg: ModelConfig, x: jnp.ndarray):
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head).astype(F32)
+    logits = _maybe_constrain(logits, _BATCH, None, "model")  # keep V sharded
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    if cfg.num_codebooks > 1:
+        B, S, _ = logits.shape
+        logits = logits.reshape(B, S, cfg.num_codebooks, cfg.vocab_size)
+        logits = _maybe_constrain(logits, _BATCH, None, None, "model")
+    return logits
+
+
+def forward(params: Tree, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            *, rng: Optional[jax.Array] = None, remat: bool = False,
+            scan_unroll=1):
+    x, positions, prefix_len = embed_inputs(params, cfg, batch)
+    x, _, aux = _apply_stack(params, x, cfg, positions,
+                             prefix_len=prefix_len, rng=rng, remat=remat,
+                             scan_unroll=scan_unroll)
+    return logits_from_hidden(params, cfg, x), aux
+
+
+def loss_fn(params: Tree, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            *, rng: Optional[jax.Array] = None, remat: bool = False,
+            scan_unroll=1):
+    logits, aux = forward(params, cfg, batch, rng=rng, remat=remat,
+                          scan_unroll=scan_unroll)
+    labels = batch["labels"]
+    if cfg.frontend == "siglip_stub":
+        logits = logits[:, cfg.prefix_len:]
+    # Vocab-sharded cross entropy: logsumexp reduces over the sharded axis
+    # (a psum under GSPMD) and the label logit is picked with an iota
+    # compare instead of a gather, so the (tokens x vocab) tensor never
+    # materializes unsharded.
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot_pick = jnp.sum(
+        jnp.where(jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                           logits.ndim - 1)
+                  == labels[..., None], logits, 0.0), axis=-1)
+    nll = lse - onehot_pick
+    mask = (labels >= 0).astype(F32)
+    loss = jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1.0)
+    return loss + aux, {"ce": loss, "aux": aux}
+
+
+def prefill(params: Tree, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            *, scan_unroll=1):
+    """Prefill forward: logits for the LAST position only (the next-token
+    sample) — materializing (B, S, V) at 32k x 256k vocab would dwarf the
+    KV cache itself."""
+    x, positions, prefix_len = embed_inputs(params, cfg, batch)
+    x, _, _ = _apply_stack(params, x, cfg, positions, prefix_len=prefix_len,
+                           scan_unroll=scan_unroll)
+    return logits_from_hidden(params, cfg, x[:, -1:])
+
+
+def decode_step(params: Tree, cfg: ModelConfig, tokens: jnp.ndarray,
+                caches: Tree, pos: jnp.ndarray, *, scan_unroll=1):
+    """One decode step.  tokens: (B, 1) int32; pos: scalar int32 (current
+    length).  Returns (logits (B, 1, V[*K]), new caches)."""
+    tok = jnp.take(params["embed"], tokens, axis=0)
+    x = tok.astype(jnp.bfloat16) * jnp.asarray(cfg.d_model ** 0.5, jnp.bfloat16)
+    B = tokens.shape[0]
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    # local_attn ring buffers index at pos % window
+    cache_len = pos
+    x, new_caches, _ = _apply_stack(params, x, cfg, positions,
+                                    caches=caches, cache_len=cache_len,
+                                    decode=True, scan_unroll=scan_unroll)
+    return logits_from_hidden(params, cfg, x), new_caches

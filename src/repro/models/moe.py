@@ -1,0 +1,190 @@
+"""Mixture-of-Experts layer — where the paper's technique lives in an LM.
+
+Token->expert dispatch is an SpMV-shaped irregular gather (DESIGN.md §4):
+the routing matrix is a sparse (tokens x experts) matrix, expert capacity
+is the nnz-balanced work distribution, and the optional *Valiant shuffle*
+is the paper's random-reordering insight applied to the all-to-all — a
+random pre-permutation of tokens prevents correlated token runs from
+converging on one expert shard at the same time (the cop20k_A hot-spot,
+but on ICI).
+
+Dispatch is sort-based (no (tokens x E x capacity) one-hot): tokens are
+sorted by expert id, ranked within expert, and scattered into an
+(E, capacity, d) buffer — O(tokens * top_k) memory.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import MoEConfig
+
+F32 = jnp.float32
+
+
+def _constrain(x, *axes):
+    from .model import _maybe_constrain
+    return _maybe_constrain(x, *axes)
+
+
+def _ep_possible(num_experts: int) -> bool:
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+        return (not m.empty and "model" in m.axis_names
+                and num_experts % m.shape["model"] == 0)
+    except Exception:
+        return False
+
+
+def _expert_constraint(t):
+    """(E, cap, d)-shaped buffers: expert-parallel over "model" when E
+    divides the axis (deepseek: 64/16); otherwise shard capacity over
+    "data" (grok: 8 experts on a 16-wide axis would silently replicate a
+    15 GB f32 buffer — §Perf H2).  Never both: 2D E x cap sharding makes
+    the expert einsum re-gather capacity slices (§Perf H1 iteration 2)."""
+    if _ep_possible(t.shape[0]):
+        return _constrain(t, "model", None, None)
+    return _constrain(t, None, "data", None)
+
+
+def _capacity(tokens: int, cfg: MoEConfig) -> int:
+    cap = int(tokens * cfg.top_k * cfg.capacity_factor / cfg.num_experts)
+    return max(8 * ((cap + 7) // 8), 8)      # sublane aligned
+
+
+def route(params, x2d: jnp.ndarray, cfg: MoEConfig):
+    """Router logits -> (weights, expert ids) per token, top-k."""
+    logits = jnp.einsum("td,de->te", x2d.astype(F32), params["router"].astype(F32))
+    weights, ids = jax.lax.top_k(logits, cfg.top_k)           # (T, K)
+    weights = jax.nn.softmax(weights, axis=-1)
+    # z-loss keeps router logits bounded (GShard/ST-MoE practice).
+    zloss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2) * cfg.router_zloss
+    return weights, ids, zloss
+
+
+def moe_ffn(params, x: jnp.ndarray, cfg: MoEConfig, activation: str,
+            *, rng: Optional[jnp.ndarray] = None,
+            combine: str = "scatter_psum"):
+    """x: (B, S, d) -> (B, S, d), aux-loss scalar.
+
+    Expert tensors: params["w_gate"|"w_up"]: (E, d, f), params["w_down"]:
+    (E, f, d) — sharded over the "model" axis on their E (deepseek) or f
+    (grok) dimension by the runtime's param specs.
+    """
+    B, S, d = x.shape
+    T = B * S
+    x2d = x.reshape(T, d)
+
+    perm = None
+    if cfg.valiant_shuffle:
+        # Paper §IV-E random reordering -> Valiant-style spread: permute the
+        # token order entering dispatch so same-expert runs decorrelate.
+        key = rng if rng is not None else jax.random.PRNGKey(0)
+        perm = jax.random.permutation(key, T)
+        x2d = jnp.take(x2d, perm, axis=0)
+
+    weights, ids, zloss = route(params, x2d, cfg)
+    sp = cfg.expert_split
+    if sp > 1:
+        # exact decomposition: expert e == sum of thin experts (e*sp + j);
+        # each half receives the token with the SAME routing weight.
+        ids = (ids[..., None] * sp +
+               jnp.arange(sp, dtype=ids.dtype)).reshape(ids.shape[0], -1)
+        weights = jnp.repeat(weights, sp, axis=-1)
+    E, K = cfg.num_experts * sp, cfg.top_k * sp
+    # NB: every thin expert receives the same tokens as its parent expert
+    # (the split duplicates routing), so capacity is NOT divided by sp.
+    cap = _capacity(T, cfg)
+
+    flat_ids = ids.reshape(-1)                                  # (T*K,)
+    # Rank of each (token, k) within its expert = position in capacity buf.
+    order = jnp.argsort(flat_ids, stable=True)
+    ranked = jnp.zeros((T * K,), jnp.int32)
+    seg_pos = jnp.arange(T * K) - jnp.searchsorted(
+        flat_ids[order], flat_ids[order], side="left")
+    ranked = ranked.at[order].set(seg_pos.astype(jnp.int32))
+    keep = ranked < cap                                        # capacity drop
+    slot = jnp.where(keep, flat_ids * cap + ranked, E * cap)   # E*cap = trash
+
+    # Dispatch: GATHER tokens into the (E, cap, d) buffer via the inverse
+    # slot->token map instead of scattering (token, k) rows.  A scatter
+    # into a sharded buffer made GSPMD materialize + all-gather (T*K, d)
+    # u32 index tensors (6 GB each at deepseek train scale — §Perf H1);
+    # the gather keeps index math on small replicated int vectors and the
+    # buffer 2D-sharded: experts over "model" (when E divides it) and
+    # capacity over "data" — no replicated activation buffers.
+    tok_of_slot = jnp.full((E * cap + 1,), T, jnp.int32).at[slot].set(
+        (jnp.arange(T * K, dtype=jnp.int32) // K).astype(jnp.int32))
+    x_pad = jnp.concatenate([x2d, jnp.zeros((1, d), x.dtype)], axis=0)
+    expert_in = jnp.take(x_pad, tok_of_slot[: E * cap], axis=0
+                         ).reshape(E, cap, d)
+    expert_in = _expert_constraint(expert_in)
+
+    wg, wu, wd = params["w_gate"], params["w_up"], params["w_down"]
+    if not _ep_possible(E):
+        # Capacity-over-data mode: the FSDP shard of the expert weights'
+        # d-dim collides with the cap-over-data activations and GSPMD
+        # prefers gathering the 7.7 GB f32 activations (§Perf H2).  Force
+        # the cheap gather instead: un-shard the weights' d-dim (the
+        # ZeRO-3 per-layer weight gather, ~200 MB) and keep f TP-sharded.
+        wg = _constrain(wg, None, None, "model")
+        wu = _constrain(wu, None, None, "model")
+        wd = _constrain(wd, None, "model", None)
+
+    h_gate = jnp.einsum("ecd,edf->ecf", expert_in, wg)
+    h_up = jnp.einsum("ecd,edf->ecf", expert_in, wu)
+    if activation == "geglu":
+        h = jax.nn.gelu(h_gate.astype(F32)).astype(x.dtype) * h_up
+    else:
+        h = jax.nn.silu(h_gate.astype(F32)).astype(x.dtype) * h_up
+    expert_out = jnp.einsum("ecf,efd->ecd", h, wd)
+    expert_out = _expert_constraint(expert_out)
+
+    # Combine back to token order.  Two lowerings:
+    #  - "gather": take() rows of the (E*cap, d) buffer per (token, k) —
+    #    GSPMD turns the gather from an expert-sharded operand into an
+    #    all-gather of the whole expert output buffer (2.5x token bytes);
+    #  - "scatter_psum": scatter-add expert outputs into the (T, d) token
+    #    buffer — each expert shard contributes only its rows and GSPMD
+    #    reduces with one activation-sized all-reduce (the TP-FFN pattern).
+    #    This is the §Perf MoE iteration (EXPERIMENTS.md).
+    flat_out = expert_out.reshape(E * cap, d)
+    w_flat = (weights * keep.reshape(T, K)).reshape(T * K)
+    if combine == "scatter_psum":
+        w_of_slot = jnp.zeros((E * cap + 1,), F32).at[slot].set(w_flat)
+        # bf16 contributions: the psum over the model axis carries half the
+        # bytes; each token sums <= top_k bf16 terms (error ~1e-2, on par
+        # with the rest of the bf16 pipeline).
+        contrib = (flat_out.astype(F32) *
+                   w_of_slot[: E * cap, None]).astype(x.dtype)
+        y = jnp.zeros((T + 1, d), x.dtype).at[tok_of_slot[: E * cap]].add(
+            contrib)[:T]
+    else:
+        flat_pad = jnp.concatenate(
+            [flat_out, jnp.zeros((1, d), x.dtype)], axis=0)
+        gathered = jnp.take(flat_pad, slot, axis=0).reshape(T, K, d)
+        y = jnp.einsum("tkd,tk->td", gathered.astype(F32),
+                       weights * keep.reshape(T, K)).astype(x.dtype)
+
+    # Load-balance aux loss (Switch-style): mean prob * mean assignment.
+    me = jnp.mean(jax.nn.one_hot(ids, E, dtype=F32), axis=(0, 1))
+    aux = jnp.sum(me * me) * E * 1e-2 / max(sp, 1) + zloss
+
+    if perm is not None:
+        inv = jnp.argsort(perm)
+        y = jnp.take(y, inv, axis=0)
+    return y.reshape(B, S, d), aux
+
+
+def shared_ffn(params, x: jnp.ndarray, activation: str):
+    """Always-on shared experts (DeepSeekMoE): standard FFN on every token."""
+    from .layers import ffn_block
+    return ffn_block(params, x, activation)
+
+
+def expert_load(ids: jnp.ndarray, num_experts: int) -> jnp.ndarray:
+    """Tokens per expert — the collective-skew diagnostic (Fig. 8 analogue)."""
+    return jnp.sum(jax.nn.one_hot(ids.reshape(-1), num_experts), axis=0)

@@ -1,0 +1,264 @@
+"""Parameter construction: shapes, init, counting, and sharding specs.
+
+The parameter tree mirrors the stacked-scan layout::
+
+    params = {
+      "embed": (V, d),
+      "stack": { pos_j: {block params with leading n_units axis} },
+      "tail":  [ per-layer block params (pattern remainder, unscanned) ],
+      "prefix":[ dense-first layers for MoE archs ],
+      "final_norm": (d,), "lm_head": (d, V or K*V),
+    }
+
+Shapes are produced *abstractly* (``abstract_params``) so the dry-run can
+lower against ShapeDtypeStructs without allocating 314 B parameters, and
+concretely (``init_params``) for smoke tests / real training.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+
+Tree = Any
+PDTYPE = jnp.bfloat16
+
+
+# --------------------------------------------------------------------------
+# per-block shape tables: dict name -> (shape, spec)
+# spec axes use logical names: "fsdp" -> data axis, "tp" -> model axis
+# --------------------------------------------------------------------------
+
+def _attn_shapes(cfg: ModelConfig) -> Dict[str, tuple]:
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    s = {
+        "norm1": ((d,), P()),
+        "wq": ((d, qd), P("fsdp", "tp")),
+        "wk": ((d, kvd), P("fsdp", "tp")),
+        "wv": ((d, kvd), P("fsdp", "tp")),
+        "wo": ((qd, d), P("tp", "fsdp")),
+    }
+    if cfg.qkv_bias:
+        s |= {"bq": ((qd,), P("tp")), "bk": ((kvd,), P("tp")),
+              "bv": ((kvd,), P("tp"))}
+    if cfg.qk_norm:
+        s |= {"q_norm": ((cfg.head_dim,), P()), "k_norm": ((cfg.head_dim,), P())}
+    return s
+
+
+def _ffn_shapes(cfg: ModelConfig, d_ff: int) -> Dict[str, tuple]:
+    d = cfg.d_model
+    return {
+        "norm2": ((d,), P()),
+        "w_gate": ((d, d_ff), P("fsdp", "tp")),
+        "w_up": ((d, d_ff), P("fsdp", "tp")),
+        "w_down": ((d_ff, d), P("tp", "fsdp")),
+    }
+
+
+def _moe_shapes(cfg: ModelConfig) -> Dict[str, tuple]:
+    d = cfg.d_model
+    m = cfg.moe
+    E, f = m.num_experts * m.expert_split, m.d_expert // m.expert_split
+    # Expert-parallel over tp when E divides the axis (deepseek 64e, grok
+    # 8e x split 2), with the d-dim FSDP-sharded over data (ZeRO-3 — the
+    # optimizer state of a 314B MoE cannot live TP-sharded only, §Perf H2).
+    # Otherwise TP inside each expert (E replicated, f sharded).
+    if E % 16 == 0:
+        w_specs = (P("tp", "fsdp", None), P("tp", "fsdp", None),
+                   P("tp", None, "fsdp"))
+    else:
+        w_specs = (P(None, "fsdp", "tp"), P(None, "fsdp", "tp"),
+                   P(None, "tp", "fsdp"))
+    s = {
+        "norm2": ((d,), P()),
+        "router": ((d, E), P()),
+        "w_gate": ((E, d, f), w_specs[0]),
+        "w_up": ((E, d, f), w_specs[1]),
+        "w_down": ((E, f, d), w_specs[2]),
+    }
+    if m.num_shared:
+        fs = f * m.num_shared
+        s |= {"s_gate": ((d, fs), P("fsdp", "tp")),
+              "s_up": ((d, fs), P("fsdp", "tp")),
+              "s_down": ((fs, d), P("tp", "fsdp"))}
+    return s
+
+
+def _mlstm_shapes(cfg: ModelConfig) -> Dict[str, tuple]:
+    d = cfg.d_model
+    inner = int(d * cfg.lstm_proj_factor)
+    H = cfg.num_heads
+    return {
+        "norm1": ((d,), P()),
+        "w_qkv": ((d, 4 * inner), P("fsdp", "tp")),
+        "w_gates": ((d, 2 * H), P()),
+        "w_out": ((inner, d), P("tp", "fsdp")),
+    }
+
+
+def slstm_inner(cfg: ModelConfig) -> int:
+    """sLSTM up-projection width: ~4/3 d, rounded so heads AND a 16-wide
+    model axis divide it (mesh divisibility is a hard pjit requirement)."""
+    unit = cfg.num_heads * 16
+    return ((int(cfg.d_model * 4 / 3) + unit - 1) // unit) * unit
+
+
+def _slstm_shapes(cfg: ModelConfig) -> Dict[str, tuple]:
+    d = cfg.d_model
+    inner = slstm_inner(cfg)
+    Dh = inner // cfg.num_heads
+    return {
+        "norm1": ((d,), P()),
+        "w_in": ((d, 4 * inner), P("fsdp", "tp")),
+        "r_kernel": ((cfg.num_heads, Dh, 4 * Dh), P()),
+        "w_out": ((inner, d), P("tp", "fsdp")),
+    }
+
+
+def _rglru_shapes(cfg: ModelConfig) -> Dict[str, tuple]:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    return {
+        "norm1": ((d,), P()),
+        "w_gelu_gate": ((d, w), P("fsdp", "tp")),
+        "w_in": ((d, w), P("fsdp", "tp")),
+        "conv_kernel": ((cfg.conv_width, w), P(None, "tp")),
+        "w_rgate": ((w, w), P("fsdp", "tp")),
+        "w_igate": ((w, w), P("fsdp", "tp")),
+        "lam": ((w,), P("tp")),
+        "w_out": ((w, d), P("tp", "fsdp")),
+    }
+
+
+def block_shapes(cfg: ModelConfig, kind: str, *, dense_ffn: bool = False
+                 ) -> Dict[str, tuple]:
+    if kind in ("attn", "local_attn"):
+        s = _attn_shapes(cfg)
+        if cfg.d_ff:
+            s |= _ffn_shapes(cfg, cfg.d_ff)
+        return s
+    if kind == "moe":
+        s = _attn_shapes(cfg)
+        s |= _ffn_shapes(cfg, cfg.d_ff) if dense_ffn else _moe_shapes(cfg)
+        return s
+    if kind == "mlstm":
+        return _mlstm_shapes(cfg)
+    if kind == "slstm":
+        return _slstm_shapes(cfg)
+    if kind == "rglru":
+        s = _rglru_shapes(cfg)
+        if cfg.d_ff:
+            s |= _ffn_shapes(cfg, cfg.d_ff)
+        return s
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def model_shape_tree(cfg: ModelConfig) -> Dict[str, Any]:
+    """Full (shape, spec) tree for the model."""
+    d, V = cfg.d_model, cfg.vocab_size
+    unit = cfg.pattern()
+    n_scan_layers = cfg.num_layers - cfg.dense_first_layers
+    n_units = n_scan_layers // len(unit)
+    tail_kinds = unit[: n_scan_layers % len(unit)]
+
+    def stacked(shapes: Dict[str, tuple], n: int):
+        return {k: ((n, *shp), P(*((None,) + tuple(sp))) if n else sp)
+                for k, (shp, sp) in shapes.items()}
+
+    tree: Dict[str, Any] = {
+        "embed": ((V, d), P("tp", None)),
+        "final_norm": ((d,), P()),
+    }
+    head_out = V * cfg.num_codebooks
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = ((d, head_out), P(None, "tp"))
+    tree["stack"] = {
+        f"u{j}_{kind}": stacked(block_shapes(cfg, kind), n_units)
+        for j, kind in enumerate(unit)
+    }
+    tree["tail"] = {
+        f"t{j}_{kind}": block_shapes(cfg, kind)
+        for j, kind in enumerate(tail_kinds)
+    }
+    tree["prefix"] = {
+        f"p{j}_{unit[0]}": block_shapes(cfg, unit[0], dense_ffn=True)
+        for j in range(cfg.dense_first_layers)
+    }
+    return tree
+
+
+def _leaf_dtype(name: str) -> jnp.dtype:
+    return jnp.float32 if name in ("lam",) else PDTYPE
+
+
+def abstract_params(cfg: ModelConfig) -> Tree:
+    return jax.tree.map(
+        lambda t: jax.ShapeDtypeStruct(t[0], PDTYPE),
+        model_shape_tree(cfg), is_leaf=lambda t: isinstance(t, tuple) and
+        isinstance(t[0], tuple))
+
+
+def param_specs(cfg: ModelConfig, *, fsdp: bool, data_axis="data",
+                model_axis="model") -> Tree:
+    """PartitionSpec tree with logical axes resolved to mesh axes."""
+    def resolve(t):
+        spec = t[1]
+        out = []
+        for ax in spec:
+            if ax == "tp":
+                out.append(model_axis)
+            elif ax == "fsdp":
+                out.append(data_axis if fsdp else None)
+            else:
+                out.append(ax)
+        return P(*out)
+    return jax.tree.map(resolve, model_shape_tree(cfg),
+                        is_leaf=lambda t: isinstance(t, tuple) and
+                        isinstance(t[0], tuple))
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Tree:
+    shapes = model_shape_tree(cfg)
+    leaves, treedef = jax.tree.flatten(
+        shapes, is_leaf=lambda t: isinstance(t, tuple) and isinstance(t[0], tuple))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, (shp, _) in zip(keys, leaves):
+        fan_in = shp[-2] if len(shp) >= 2 else shp[-1]
+        scale = 1.0 / np.sqrt(max(fan_in, 1))
+        out.append((jax.random.normal(k, shp, jnp.float32) * scale).astype(PDTYPE))
+    return jax.tree.unflatten(treedef, out)
+
+
+def count_params_config(cfg: ModelConfig, *, active_only: bool = False) -> int:
+    """Analytic parameter count; ``active_only`` counts top-k experts only."""
+    total = 0
+    tree = model_shape_tree(cfg)
+
+    def visit(path, t):
+        nonlocal total
+        n = int(np.prod(t[0]))
+        E_eff = (cfg.moe.num_experts * cfg.moe.expert_split
+                 if cfg.moe is not None else 0)
+        if active_only and cfg.moe is not None and path and \
+                path[-1] in ("w_gate", "w_up", "w_down") and len(t[0]) >= 3 \
+                and t[0][-3] == E_eff:
+            n = n * (cfg.moe.top_k + cfg.moe.num_shared) // cfg.moe.num_experts
+        total += n
+
+    def walk(prefix, node):
+        if isinstance(node, tuple) and isinstance(node[0], tuple):
+            visit(prefix, node)
+            return
+        for k, v in node.items():
+            walk(prefix + (k,), v)
+
+    walk((), tree)
+    return total

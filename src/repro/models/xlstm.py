@@ -1,0 +1,165 @@
+"""xLSTM blocks (mLSTM + sLSTM) — the [ssm] architecture (arXiv:2405.04517).
+
+mLSTM: matrix-memory LSTM ≈ gated linear attention.  Trained with a
+chunkwise-parallel form (intra-chunk quadratic, inter-chunk recurrent state
+(B, H, Dk, Dv)); decoded with the O(1) recurrent step.  Gates are sigmoid
+(the paper's exp-input-gate needs log-space stabilization; the sigmoid
+variant is the numerically-plain equivalent also used by its official
+simplified kernels — noted in DESIGN.md).
+
+sLSTM: scalar-memory LSTM with exp input gating + stabilizer state, true
+recurrence (lax.scan over time), block-diagonal recurrent matrices per head.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+def mlstm_chunked(q, k, v, i_gate, f_gate, state=None, *, chunk: int = 256):
+    """Chunkwise-parallel mLSTM.
+
+    q/k: (B, S, H, Dk); v: (B, S, H, Dv); gates: (B, S, H) in (0, 1).
+    state: optional (C, n) with C: (B, H, Dk, Dv), n: (B, H, Dk).
+    Returns h: (B, S, H, Dv), new state.
+    """
+    B, S, H, Dk = q.shape
+    Dv = v.shape[-1]
+    W = min(chunk, S)
+    if S % W:
+        raise ValueError(f"seq {S} not divisible by chunk {W}")
+    nch = S // W
+    qc = jnp.moveaxis(q.reshape(B, nch, W, H, Dk), 1, 0)
+    kc = jnp.moveaxis(k.reshape(B, nch, W, H, Dk), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nch, W, H, Dv), 1, 0)
+    ic = jnp.moveaxis(i_gate.reshape(B, nch, W, H), 1, 0)
+    fc = jnp.moveaxis(f_gate.reshape(B, nch, W, H), 1, 0)
+
+    C0 = jnp.zeros((B, H, Dk, Dv), F32) if state is None else state[0].astype(F32)
+    n0 = jnp.zeros((B, H, Dk), F32) if state is None else state[1].astype(F32)
+
+    def body(carry, inp):
+        C, n = carry
+        qw, kw, vw, iw, fw = inp
+        qw = qw.astype(F32); kw = kw.astype(F32); vw = vw.astype(F32)
+        iw = iw.astype(F32); fw = fw.astype(F32)
+        # log-cumulative decay within the chunk: g[t] = prod_{s<=t} f[s]
+        logf = jnp.log(fw + 1e-12)                       # (B, W, H)
+        csum = jnp.cumsum(logf, axis=1)
+        g = jnp.exp(csum)                                # (B, W, H)
+        g_total = jnp.exp(csum[:, -1])                   # (B, H)
+        # inter-chunk contribution: q_t (g_t) @ C_prev
+        inter = jnp.einsum("bwhk,bhkv->bwhv", qw * g[..., None], C)
+        # intra-chunk: scores (t, s) masked causal with decay g_t / g_s
+        ratio = jnp.exp(csum[:, :, None, :] - csum[:, None, :, :])  # (B,t,s,H)
+        causal = jnp.tril(jnp.ones((W, W), bool))
+        wts = jnp.where(causal[None, :, :, None], ratio, 0.0)
+        scores = jnp.einsum("bthk,bshk->btsh", qw, kw) * wts * \
+            iw[:, None, :, :]
+        intra = jnp.einsum("btsh,bshv->bthv", scores, vw)
+        # normalizer: same recurrences with k instead of k v^T
+        n_inter = jnp.einsum("bwhk,bhk->bwh", qw * g[..., None], n)
+        n_intra = scores.sum(axis=2)                     # (B, W, H)
+        denom = jnp.maximum(jnp.abs(n_inter + n_intra), 1.0)
+        h = (inter + intra) / denom[..., None]
+        # state update
+        decay_s = jnp.exp(csum[:, -1, None, :] - csum)   # (B, W, H)
+        kv = jnp.einsum("bwhk,bwhv->bhkv", kw * (iw * decay_s)[..., None], vw)
+        C_new = C * g_total[..., None, None] + kv
+        n_new = n * g_total[..., None] + jnp.einsum(
+            "bwhk->bhk", kw * (iw * decay_s)[..., None])
+        return (C_new, n_new), h
+
+    from .layers import ANALYSIS_UNROLL
+    (C, n), hs = jax.lax.scan(body, (C0, n0), (qc, kc, vc, ic, fc),
+                              unroll=nch if ANALYSIS_UNROLL else 1)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, H, Dv)
+    return h.astype(jnp.bfloat16), (C, n)
+
+
+def mlstm_step(q, k, v, i_gate, f_gate, state):
+    """O(1) decode step.  q/k: (B, 1, H, Dk); v: (B, 1, H, Dv)."""
+    C, n = state
+    qs = q[:, 0].astype(F32); ks = k[:, 0].astype(F32); vs = v[:, 0].astype(F32)
+    i = i_gate[:, 0].astype(F32)[..., None]
+    f = f_gate[:, 0].astype(F32)[..., None]
+    C = C * f[..., None] + i[..., None] * ks[..., :, None] * vs[..., None, :]
+    n = n * f + i * ks
+    num = jnp.einsum("bhk,bhkv->bhv", qs, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qs, n)), 1.0)
+    h = (num / den[..., None])[:, None]
+    return h.astype(jnp.bfloat16), (C, n)
+
+
+def mlstm_block(params, x, cfg, state=None, *, decode=False):
+    """Full mLSTM residual block: up-proj -> mLSTM -> gate -> down-proj."""
+    B, S, d = x.shape
+    inner = params["w_qkv"].shape[1] // 4          # q, k, v, ogate widths
+    H = cfg.num_heads
+    proj = jnp.einsum("bsd,dm->bsm", x, params["w_qkv"])
+    qkv, og = proj[..., : 3 * inner], proj[..., 3 * inner:]
+    Dk = inner // H
+    q, k, v = jnp.split(qkv.reshape(B, S, 3, H, Dk), 3, axis=2)
+    q, k, v = q[:, :, 0], k[:, :, 0], v[:, :, 0]
+    gates = jnp.einsum("bsd,dg->bsg", x, params["w_gates"])  # (B,S,2H)
+    i_gate = jax.nn.sigmoid(gates[..., :H].astype(F32))
+    f_gate = jax.nn.sigmoid(gates[..., H:].astype(F32) + 4.0)  # open at init
+    if decode:
+        h, new_state = mlstm_step(q, k, v, i_gate, f_gate, state)
+    else:
+        # chunk grows with S so the chunk count stays bounded (compile
+        # cost and scan overhead); intra-chunk work is quadratic in chunk
+        # but caps at 1024.
+        h, new_state = mlstm_chunked(q, k, v, i_gate, f_gate, state,
+                                     chunk=min(max(256, S // 32), 1024))
+    h = h.reshape(B, S, inner) * jax.nn.silu(og.astype(F32)).astype(h.dtype)
+    return jnp.einsum("bsm,md->bsd", h, params["w_out"]), new_state
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+def slstm_block(params, x, cfg, state=None, *, decode=False):
+    """sLSTM with exp input gate + stabilizer, block-diag recurrence.
+
+    state: (h, c, n, m) each (B, H, Dh).
+    """
+    B, S, d = x.shape
+    H = cfg.num_heads
+    inner = params["w_in"].shape[1] // 4
+    Dh = inner // H
+    xg = jnp.einsum("bsd,dg->bsg", x, params["w_in"]).reshape(B, S, 4, H, Dh)
+    R = params["r_kernel"]                          # (H, Dh, 4*Dh)
+
+    if state is None:
+        z = jnp.zeros((B, H, Dh), F32)
+        state = (z, z, z, z - 10.0)
+
+    def step(carry, xt):
+        h, c, n, m = carry
+        rec = jnp.einsum("bhd,hdg->bhg", h, R).reshape(B, H, 4, Dh)
+        rec = jnp.moveaxis(rec, 2, 0)
+        zt = jnp.tanh(xt[:, 0].astype(F32) + rec[0])
+        it_log = xt[:, 1].astype(F32) + rec[1]               # log input gate
+        ft_log = jax.nn.log_sigmoid(xt[:, 2].astype(F32) + rec[2] + 4.0)
+        ot = jax.nn.sigmoid(xt[:, 3].astype(F32) + rec[3])
+        m_new = jnp.maximum(ft_log + m, it_log)
+        i_s = jnp.exp(it_log - m_new)
+        f_s = jnp.exp(ft_log + m - m_new)
+        c_new = f_s * c + i_s * zt
+        n_new = jnp.maximum(f_s * n + i_s, 1e-6)
+        h_new = ot * (c_new / n_new)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    xs = jnp.moveaxis(xg, 1, 0)                     # (S, B, 4, H, Dh)
+    (h, c, n, m), hs = jax.lax.scan(step, state, xs)
+    out = jnp.moveaxis(hs, 0, 1).reshape(B, S, inner).astype(jnp.bfloat16)
+    out = jnp.einsum("bsm,md->bsd", out, params["w_out"])
+    return out, (h, c, n, m)

@@ -1,0 +1,62 @@
+"""Batched serving engine: prefill + decode over the distributed runtime.
+
+Small-scale runnable on CPU (examples/serve_lm.py); the same step functions
+lower on the production mesh for the dry-run's decode cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as mm
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 256
+    temperature: float = 0.0      # 0 = greedy
+
+
+class Engine:
+    """Single-host batched generation (KV/recurrent caches threaded)."""
+
+    def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig = ServeConfig()):
+        self.cfg = cfg
+        self.params = params
+        self.serve_cfg = serve_cfg
+        self._decode = jax.jit(
+            lambda p, t, c, pos: mm.decode_step(p, cfg, t, c, pos))
+
+    def generate(self, prompts: np.ndarray, steps: int,
+                 key: Optional[jax.Array] = None) -> np.ndarray:
+        """prompts: (B, S0) int32 -> (B, S0 + steps) tokens."""
+        B, S0 = prompts.shape
+        caches = mm.init_cache(self.cfg, B, self.serve_cfg.max_len)
+        # Prefill by stepping tokens through the decode path (keeps one
+        # compiled program; bulk-prefill lowering is exercised by dryrun).
+        tok = None
+        for t in range(S0):
+            tok = prompts[:, t: t + 1]
+            logits, caches = self._decode(self.params, jnp.asarray(tok),
+                                          caches, jnp.int32(t))
+        out = [prompts]
+        pos = S0
+        for _ in range(steps):
+            if self.cfg.num_codebooks > 1:
+                nxt = jnp.argmax(logits[:, 0], axis=-1)[:, :1]   # head 0
+            elif self.serve_cfg.temperature > 0 and key is not None:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(
+                    sub, logits[:, 0] / self.serve_cfg.temperature)[:, None]
+            else:
+                nxt = jnp.argmax(logits[:, 0], axis=-1)[:, None]
+            out.append(np.asarray(nxt, np.int32))
+            logits, caches = self._decode(self.params, nxt, caches,
+                                          jnp.int32(pos))
+            pos += 1
+        return np.concatenate(out, axis=1)

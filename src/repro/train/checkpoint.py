@@ -1,0 +1,138 @@
+"""Sharded, async, atomic checkpoints (npz + JSON manifest).
+
+Layout::
+
+    <dir>/step_000123/          # atomic: written as .tmp then renamed
+        manifest.json           # step, tree structure, leaf shapes/dtypes
+        host_000.npz            # this host's leaves (full arrays here; on a
+                                # real pod each host saves its addressable
+                                # shards and restore re-assembles)
+
+Writes happen on a background thread against host copies so the training
+loop never blocks on disk (compute/IO overlap); ``wait()`` drains the queue.
+Restore takes a target sharding tree so a *differently-shaped mesh* (elastic
+restart) can re-shard the same checkpoint — see train/elastic.py.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Tree = Any
+_WRITER: Optional["_AsyncWriter"] = None
+
+
+def _flatten_with_names(tree: Tree):
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    names = ["/".join(str(k) for k in path) for path, _ in flat]
+    leaves = [l for _, l in flat]
+    return names, leaves, treedef
+
+
+class _AsyncWriter:
+    def __init__(self):
+        self.q: "queue.Queue" = queue.Queue()
+        self.thread = threading.Thread(target=self._run, daemon=True)
+        self.thread.start()
+
+    def _run(self):
+        while True:
+            item = self.q.get()
+            if item is None:
+                return
+            path, names, arrays, manifest = item
+            tmp = path + ".tmp"
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, f"host_{jax.process_index():03d}.npz"),
+                     **dict(zip(names, arrays)))
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(path):
+                shutil.rmtree(path)
+            os.rename(tmp, path)
+            self.q.task_done()
+
+    def submit(self, *item):
+        self.q.put(item)
+
+    def wait(self):
+        self.q.join()
+
+
+def _writer() -> _AsyncWriter:
+    global _WRITER
+    if _WRITER is None:
+        _WRITER = _AsyncWriter()
+    return _WRITER
+
+
+def save(ckpt_dir: str, params: Tree, opt_state: Tree, step: int,
+         *, blocking: bool = False) -> str:
+    state = {"params": params, "opt": opt_state}
+    names, leaves, _ = _flatten_with_names(state)
+    # Device->host copy happens synchronously (cheap vs the disk write);
+    # serialization + fsync happen on the writer thread.  npz cannot store
+    # ml_dtypes (bf16) natively — widen to f32 on disk; restore re-casts.
+    def savable(a):
+        a = np.asarray(jax.device_get(a))
+        return a.astype(np.float32) if a.dtype.name == "bfloat16" else a
+
+    arrays = [savable(l) for l in leaves]
+    manifest = {"step": step, "names": names,
+                "shapes": [list(a.shape) for a in arrays],
+                "dtypes": [str(a.dtype) for a in arrays]}
+    path = os.path.join(ckpt_dir, f"step_{step:06d}")
+    os.makedirs(ckpt_dir, exist_ok=True)
+    w = _writer()
+    w.submit(path, names, arrays, manifest)
+    if blocking:
+        w.wait()
+    return path
+
+
+def wait_for_writes():
+    if _WRITER is not None:
+        _WRITER.wait()
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: Tree,
+            shardings: Optional[Tree] = None) -> tuple[Tree, int]:
+    """Restore into the structure of ``like`` ({"params":…, "opt":…}).
+
+    ``shardings`` (same structure) places each leaf on the target mesh —
+    pass the *new* mesh's shardings to re-shard on elastic restart.
+    """
+    path = os.path.join(ckpt_dir, f"step_{step:06d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, f"host_{jax.process_index():03d}.npz"))
+    names, leaves, treedef = _flatten_with_names(like)
+    assert names == manifest["names"], "checkpoint/model structure mismatch"
+    shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                    else [None] * len(leaves))
+    out = []
+    for name, ref, sh in zip(names, leaves, shard_leaves):
+        arr = data[name]
+        tgt_dtype = ref.dtype if hasattr(ref, "dtype") else arr.dtype
+        if arr.dtype != tgt_dtype:
+            # numpy lacks cast kernels for ml_dtypes (bf16) — cast via jnp.
+            arr = np.asarray(jnp.asarray(arr).astype(tgt_dtype))
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jnp.asarray(arr))
+    return jax.tree.unflatten(treedef, out), manifest["step"]

@@ -1,0 +1,252 @@
+"""Distributed train/serve step factories + the training loop.
+
+``make_train_step`` builds the jitted SPMD step for a (config, mesh) pair:
+batch over ("pod","data"), TP over "model", optional ZeRO-3 FSDP of params
+and Adam state over "data", per-unit remat inside the layer scan, donated
+buffers, optional int8+error-feedback gradient compression across the "pod"
+axis.  ``make_decode_step``/``make_prefill_step`` are the serving versions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import model as mm
+from repro.models import params as pp
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim import adamw
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    fsdp: bool = True
+    remat: bool = True
+    donate: bool = True
+    compress_pod_grads: bool = False
+    step_deadline_s: float = 0.0     # 0 = no straggler deadline
+    model_axis: str = "model"
+    # Analysis-grade lowering: True fully unrolls the layer scan; an int
+    # partially unrolls it (XLA counts a while-loop body once, so the
+    # dry-run extrapolates from a partial unroll).
+    scan_unroll: object = False
+    # Gradient accumulation: the global batch is split into this many
+    # microbatches scanned per step (f32 grad accumulators stay sharded).
+    # Keeps per-device activation memory ~ microbatch-sized.
+    grad_accum: int = 1
+
+
+def batch_axes_of(mesh: Mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, shape_batch: int) -> Tree:
+    """PartitionSpec tree for the input batch dict."""
+    baxes = batch_axes_of(mesh)
+    nb = int(np.prod([mesh.shape[a] for a in baxes]))
+    lead = P(baxes) if shape_batch % nb == 0 and shape_batch >= nb else P()
+
+    def spec_like(name):
+        return lead
+    return spec_like
+
+
+def _named(mesh: Mesh, spec_tree: Tree) -> Tree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, run: RunConfig) -> Tree:
+    data_axis = "data" if "data" in mesh.axis_names else None
+    specs = pp.param_specs(cfg, fsdp=run.fsdp and data_axis is not None,
+                           data_axis=data_axis, model_axis=run.model_axis)
+    return _named(mesh, specs)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig, mesh: Mesh,
+                    run: RunConfig = RunConfig()):
+    """Returns (jitted step, in_shardings tuple) — lowerable with abstract
+    params/state/batch for the dry-run."""
+    p_shard = param_shardings(cfg, mesh, run)
+    o_shard = adamw.AdamWState(step=NamedSharding(mesh, P()),
+                               m=p_shard, v=p_shard)
+    baxes = batch_axes_of(mesh)
+
+    def batch_shard(batch_tree: Tree) -> Tree:
+        return jax.tree.map(lambda _: NamedSharding(mesh, P(baxes)), batch_tree)
+
+    def step_fn(params, opt_state, batch, rng):
+        unroll = run.scan_unroll or 1
+        n_micro = run.grad_accum
+
+        def lg(p, mb):
+            return jax.value_and_grad(
+                lambda q: mm.loss_fn(q, cfg, mb, rng=rng, remat=run.remat,
+                                     scan_unroll=unroll), has_aux=True)(p)
+
+        if n_micro == 1:
+            (loss, metrics), grads = lg(params, batch)
+        else:
+            micro_batch = jax.tree.map(
+                lambda x: jax.lax.with_sharding_constraint(
+                    x.reshape(n_micro, x.shape[0] // n_micro, *x.shape[1:]),
+                    NamedSharding(mesh, P(None, baxes))),
+                batch)
+
+            def micro_step(acc, mb):
+                g_acc, l_acc = acc
+                (l, _), g = lg(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32) / n_micro,
+                    g_acc, g)
+                return (g_acc, l_acc + l / n_micro), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss), _ = jax.lax.scan(
+                micro_step, (g0, jnp.zeros((), jnp.float32)), micro_batch)
+            metrics = {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+        new_params, new_state, om = adamw.apply_updates(
+            params, grads, opt_state, opt_cfg)
+        return new_params, new_state, {"loss": loss, **metrics, **om}
+
+    def jit_for(batch_tree: Tree):
+        donate = (0, 1) if run.donate else ()
+        return jax.jit(
+            step_fn,
+            in_shardings=(p_shard, o_shard, batch_shard(batch_tree),
+                          NamedSharding(mesh, P())),
+            out_shardings=(p_shard, o_shard,
+                           jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                                        {"loss": 0, "ce": 0, "aux": 0,
+                                         "gnorm": 0, "lr": 0})),
+            donate_argnums=donate)
+    return step_fn, jit_for, (p_shard, o_shard)
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int) -> Tree:
+    """PartitionSpec tree matching abstract_cache's structure."""
+    baxes = batch_axes_of(mesh)
+    nb = int(np.prod([mesh.shape[a] for a in baxes]))
+    b = baxes if batch % nb == 0 and batch >= nb else None
+    ma = "model"
+
+    def kv_spec(kind):
+        if kind == "local_attn":
+            return (P(b, None, None, None), P(b, None, None, None))
+        return (P(b, ma, None, None), P(b, ma, None, None))
+
+    def block_spec(cfg, kind):
+        if kind in ("attn", "moe", "local_attn"):
+            return kv_spec(kind)
+        if kind == "mlstm":
+            dk_ok = (int(cfg.d_model * cfg.lstm_proj_factor) //
+                     cfg.num_heads) % mesh.shape[ma] == 0
+            m = ma if dk_ok else None
+            return (P(b, None, m, None), P(b, None, m))
+        if kind == "slstm":
+            return (P(b), P(b), P(b), P(b))
+        if kind == "rglru":
+            w = cfg.lru_width or cfg.d_model
+            m = ma if w % mesh.shape[ma] == 0 else None
+            return (P(b, m), P(b, None, m))
+        raise ValueError(kind)
+
+    unit = cfg.pattern()
+    n_scan = cfg.num_layers - cfg.dense_first_layers
+    tail_kinds = unit[: n_scan % len(unit)]
+
+    def stack_spec(kind):
+        return jax.tree.map(lambda s: P(*((None,) + tuple(s))),
+                            block_spec(cfg, kind),
+                            is_leaf=lambda x: isinstance(x, P))
+
+    return {
+        "stack": {f"u{j}_{k}": stack_spec(k) for j, k in enumerate(unit)},
+        "tail": {f"t{j}_{k}": block_spec(cfg, k)
+                 for j, k in enumerate(tail_kinds)},
+        "prefix": {f"p{j}_{unit[0]}": block_spec(cfg, unit[0])
+                   for j in range(cfg.dense_first_layers)},
+    }
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh, batch: int,
+                     run: RunConfig = RunConfig()):
+    p_shard = param_shardings(cfg, mesh, run)
+    c_shard = _named(mesh, cache_specs(cfg, mesh, batch))
+    baxes = batch_axes_of(mesh)
+    nb = int(np.prod([mesh.shape[a] for a in baxes]))
+    tok_spec = P(baxes) if batch % nb == 0 and batch >= nb else P()
+
+    def serve_step(params, tokens, caches, pos):
+        return mm.decode_step(params, cfg, tokens, caches, pos,
+                              scan_unroll=run.scan_unroll or 1)
+
+    jitted = jax.jit(
+        serve_step,
+        in_shardings=(p_shard, NamedSharding(mesh, tok_spec), c_shard,
+                      NamedSharding(mesh, P())),
+        out_shardings=(NamedSharding(mesh, tok_spec), c_shard),
+        donate_argnums=(2,))
+    return serve_step, jitted, (p_shard, c_shard)
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh, batch: int,
+                      run: RunConfig = RunConfig()):
+    p_shard = param_shardings(cfg, mesh, run)
+    baxes = batch_axes_of(mesh)
+    nb = int(np.prod([mesh.shape[a] for a in baxes]))
+    tok_spec = P(baxes) if batch % nb == 0 and batch >= nb else P()
+
+    def prefill_step(params, batch_inputs):
+        return mm.prefill(params, cfg, batch_inputs,
+                          scan_unroll=run.scan_unroll or 1)
+
+    def jit_for(batch_tree: Tree):
+        return jax.jit(
+            prefill_step,
+            in_shardings=(p_shard,
+                          jax.tree.map(lambda _: NamedSharding(mesh, tok_spec),
+                                       batch_tree)),
+            out_shardings=NamedSharding(mesh, tok_spec))
+    return prefill_step, jit_for, p_shard
+
+
+def train_loop(cfg: ModelConfig, opt_cfg, mesh, stream, steps: int,
+               run: RunConfig = RunConfig(), *, checkpoint_dir=None,
+               checkpoint_every: int = 0, start_step: int = 0,
+               params=None, opt_state=None, on_metrics=None):
+    """Host training loop with checkpoint/restart + straggler deadline."""
+    from repro.train import checkpoint as ckpt
+    key = jax.random.PRNGKey(0)
+    if params is None:
+        params = pp.init_params(cfg, key)
+        opt_state = adamw.init_state(params)
+    _, jit_for, _ = make_train_step(cfg, opt_cfg, mesh, run)
+    step_jit = None
+    metrics = {}
+    for step in range(start_step, steps):
+        batch = {k: jnp.asarray(v) for k, v in stream.batch_at(step).items()}
+        if step_jit is None:
+            step_jit = jit_for(batch)
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step_jit(params, opt_state, batch,
+                                              jax.random.fold_in(key, step))
+        metrics = {k: float(v) for k, v in metrics.items()}
+        dt = time.perf_counter() - t0
+        if run.step_deadline_s and dt > run.step_deadline_s:
+            metrics["straggler"] = dt       # deadline breach -> logged + hook
+        if on_metrics:
+            on_metrics(step, metrics)
+        if checkpoint_dir and checkpoint_every and \
+                (step + 1) % checkpoint_every == 0:
+            ckpt.save(checkpoint_dir, params, opt_state, step + 1)
+    return params, opt_state, metrics

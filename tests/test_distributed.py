@@ -1,0 +1,134 @@
+"""Distributed-layer tests.
+
+The multi-device cases run in a subprocess so the 8 fake host devices never
+leak into this session (smoke tests must see 1 device — brief requirement).
+"""
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.models import model as mm, params as pp
+from repro.optim import adamw
+from repro.train.loop import RunConfig, make_train_step
+
+
+_SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core.spmv import SpmvPlan, build_distributed, make_spmv_fn
+    from repro.core.sparse_matrix import csr_to_dense
+    from repro.data.matrices import make_matrix
+
+    mesh = jax.make_mesh((8,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    A = make_matrix("cop20k_A", scale=0.005)
+    x = np.random.default_rng(1).standard_normal(A.ncols).astype(np.float32)
+    out = {}
+    from repro.core.spmv import build_halo, make_halo_spmv_fn
+    for layout in ("block", "cyclic"):
+        for reord in ("none", "bfs"):
+            plan = SpmvPlan(layout=layout, distribution="nonzero",
+                            reordering=reord, num_shards=8)
+            d = build_distributed(A, plan)
+            fn = make_spmv_fn(d, mesh)
+            with mesh:
+                y = fn(jnp.array(d.data), jnp.array(d.cols),
+                       jnp.array(d.x_to_device(x)))
+            b = np.zeros(A.nrows)
+            for p in range(8):
+                r = int(d.rows_per_shard[p])
+                o = int(d.row_offset[p])
+                b[o:o+r] = np.asarray(y[p])[:r]
+            ref = csr_to_dense(d.matrix) @ x
+            out[f"{layout}/{reord}"] = bool(np.allclose(b, ref, atol=1e-3))
+    # halo-exchange path: correctness on the hot matrix; the ICI saving
+    # holds on the *banded* matrix (H3: halo only pays under locality)
+    plan = SpmvPlan(layout="block", distribution="nonzero",
+                    reordering="none", num_shards=8)
+    d = build_distributed(A, plan)
+    h = build_halo(d)
+    fn = make_halo_spmv_fn(d, h, mesh)
+    with mesh:
+        y = fn(jnp.array(d.data), jnp.array(h.cols_remap),
+               jnp.array(h.send_idx), jnp.array(d.x_to_device(x)))
+    b = np.zeros(A.nrows)
+    for p in range(8):
+        r = int(d.rows_per_shard[p]); o = int(d.row_offset[p])
+        b[o:o+r] = np.asarray(y[p])[:r]
+    out["halo"] = bool(np.allclose(b, csr_to_dense(d.matrix) @ x, atol=1e-3))
+    F = make_matrix("ford1", scale=0.05)
+    df = build_distributed(F, plan)
+    hf = build_halo(df)
+    out["halo_saves_ici_banded"] = bool(hf.comm_elems_per_shard
+                                        < df.x_layout.padded_length())
+    print(json.dumps(out))
+""")
+
+
+@pytest.mark.slow
+def test_distributed_spmv_8dev_subprocess():
+    r = subprocess.run([sys.executable, "-c", _SUBPROC], capture_output=True,
+                       text=True, timeout=600,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert r.returncode == 0, r.stderr[-2000:]
+    res = json.loads(r.stdout.strip().splitlines()[-1])
+    assert all(res.values()), res
+
+
+def test_train_step_factory_single_device():
+    """The jitted train step runs on a 1x1 mesh (CPU) and reduces loss."""
+    cfg = get_smoke_config("qwen3_4b")
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    run = RunConfig(fsdp=False, remat=True, donate=False, grad_accum=2)
+    _, jit_for, _ = make_train_step(cfg, adamw.AdamWConfig(lr=1e-2), mesh, run)
+    params = pp.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw.init_state(params)
+    key = jax.random.PRNGKey(1)
+    batch = {"tokens": jax.random.randint(key, (4, 16), 0, cfg.vocab_size),
+             "labels": jax.random.randint(key, (4, 16), 0, cfg.vocab_size)}
+    with mesh:
+        step = jit_for(batch)
+        losses = []
+        for i in range(3):
+            params, opt, m = step(params, opt, batch,
+                                  jax.random.fold_in(key, i))
+            losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+
+
+def test_moe_valiant_shuffle_preserves_output_distribution():
+    """Valiant shuffle is a relabeling: loss stats stay comparable and the
+    expert load CV does not degrade."""
+    import dataclasses
+    from repro.models.moe import moe_ffn
+    cfg = get_smoke_config("deepseek_moe_16b")
+    m = cfg.moe
+    key = jax.random.PRNGKey(0)
+    d = cfg.d_model
+    params = {
+        "router": jax.random.normal(key, (d, m.num_experts), jnp.float32) * 0.02,
+        "w_gate": jax.random.normal(key, (m.num_experts, d, m.d_expert),
+                                    jnp.bfloat16) * 0.05,
+        "w_up": jax.random.normal(key, (m.num_experts, d, m.d_expert),
+                                  jnp.bfloat16) * 0.05,
+        "w_down": jax.random.normal(key, (m.num_experts, m.d_expert, d),
+                                    jnp.bfloat16) * 0.05,
+    }
+    x = jax.random.normal(key, (2, 32, d), jnp.bfloat16)
+    y0, _ = moe_ffn(params, x, m, "swiglu")
+    m2 = dataclasses.replace(m, valiant_shuffle=True)
+    y1, _ = moe_ffn(params, x, m2, "swiglu", rng=jax.random.PRNGKey(7))
+    # same tokens, same experts — only dispatch order changed; outputs match
+    # up to capacity-drop differences (loose tolerance).
+    diff = np.abs(np.asarray(y0, np.float32) - np.asarray(y1, np.float32))
+    assert np.median(diff) < 0.05

@@ -1,0 +1,92 @@
+"""Emu machine model: paper-claim reproduction at scaled sizes."""
+import numpy as np
+import pytest
+
+from repro.core.emu import EmuConfig, build_thread_traces, run_spmv
+from repro.core.layout import make_layout
+from repro.core.partition import make_partition
+from repro.core.reorder import reorder
+from repro.data.matrices import make_matrix
+
+CFG = EmuConfig()
+
+
+@pytest.fixture(scope="module")
+def cop():
+    return make_matrix("cop20k_A", scale=0.02)
+
+
+@pytest.fixture(scope="module")
+def ford():
+    return make_matrix("ford1", scale=0.25)
+
+
+def bw(mat, layout="block", strategy="nonzero", cfg=CFG):
+    part = make_partition(mat, cfg.nodelets, strategy)
+    return run_spmv(mat, part, make_layout(layout, mat.ncols, cfg.nodelets), cfg)
+
+
+class TestTraces:
+    def test_trace_instruction_budget(self, ford):
+        part = make_partition(ford, 8, "row")
+        nodes, weights, homes = build_thread_traces(
+            ford, part, make_layout("block", ford.ncols, 8), 64)
+        total = sum(int(w.sum()) for w in weights)
+        # 3 instrs per nnz (2 home + 1 x load) + 2 per row
+        assert total == 3 * ford.nnz + 2 * ford.nrows
+
+    def test_all_threads_terminate(self, ford):
+        res = bw(ford)
+        assert res.ticks < CFG.max_ticks
+        assert res.bandwidth_mbs > 0
+
+
+class TestPaperClaims:
+    def test_block_beats_cyclic(self, ford):
+        """Fig. 3: block layout outperforms cyclic on every matrix."""
+        assert bw(ford, "block").bandwidth_mbs > bw(ford, "cyclic").bandwidth_mbs
+
+    def test_nonzero_beats_row_on_skewed(self):
+        """Fig. 6: nnz distribution wins on row-length-skewed matrices
+        (paper: up to 3.34x; our model shows ~2.1x on the rmat suite)."""
+        A = make_matrix("rmat", scale=0.01)
+        assert bw(A, strategy="nonzero").bandwidth_mbs > \
+            1.5 * bw(A, strategy="row").bandwidth_mbs
+
+    def test_bfs_reordering_wins_on_hotspot(self, cop):
+        """Fig. 10: BFS/METIS reordering beats original on cop20k-like."""
+        base = bw(cop).bandwidth_mbs
+        bfs = bw(reorder(cop, "bfs")).bandwidth_mbs
+        assert bfs > 1.2 * base
+
+    def test_random_reordering_direction(self, cop, ford):
+        """Fig. 10: random helps on the hot-spot matrix (paper: up to +50%)
+        and buys nothing on the already-banded one."""
+        assert bw(reorder(cop, "random")).bandwidth_mbs > \
+            1.1 * bw(cop).bandwidth_mbs
+        assert bw(reorder(ford, "random")).bandwidth_mbs < \
+            1.05 * bw(ford).bandwidth_mbs
+
+    def test_residency_trace_shape(self, cop):
+        res = bw(cop)
+        assert res.residency.shape[1] == 8
+        assert (res.residency.sum(axis=1) <= 512).all()
+
+    def test_hotspot_congestion_visible(self, cop):
+        """Fig. 8/11 system signature: with the original ordering the
+        late-run residency stays badly imbalanced (one resource saturated,
+        others drained); random reordering flattens it.  (Our model shows
+        the pile-up *at* the hot nodelet, bounded by register sets, rather
+        than at the parents — deviation noted in EXPERIMENTS.md §Paper.)"""
+        from repro.core.reorder import reorder
+
+        def tail_imbalance(mat):
+            res = bw(mat)
+            r = res.residency.astype(float)
+            tail = r[int(len(r) * 0.7):]
+            return (tail.max(axis=1) - tail.min(axis=1)).mean(), res.ticks
+
+        imb_none, t_none = tail_imbalance(cop)
+        imb_rand, t_rand = tail_imbalance(reorder(cop, "random"))
+        assert imb_rand < 0.6 * imb_none     # hot-spot dispersal
+        assert t_rand < t_none               # and it is faster end-to-end

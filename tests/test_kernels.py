@@ -1,0 +1,117 @@
+"""Per-kernel tests: Pallas (interpret=True) vs pure-jnp oracle vs dense.
+
+Shape/dtype sweeps + hypothesis property tests, per the assignment brief.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sparse_matrix import csr_from_coo, csr_to_bcsr, csr_to_dense, csr_to_ell
+from repro.kernels import ops, ref
+
+
+def rand_problem(M, N, nnz, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    A = csr_from_coo(rng.integers(0, M, nnz), rng.integers(0, N, nnz),
+                     rng.standard_normal(nnz), (M, N))
+    x = rng.standard_normal(N).astype(dtype)
+    return A, x
+
+
+class TestEllKernel:
+    @pytest.mark.parametrize("M,N,nnz", [(8, 128, 50), (64, 256, 900),
+                                         (256, 512, 5000)])
+    @pytest.mark.parametrize("dtype", [jnp.float32])
+    def test_matches_oracle_and_dense(self, M, N, nnz, dtype):
+        A, x = rand_problem(M, N, nnz)
+        e = csr_to_ell(A)
+        data, cols = jnp.asarray(e.data, dtype), jnp.asarray(e.cols)
+        xj = jnp.asarray(x, dtype)
+        y_ref = ref.ell_spmv_ref(data, cols, xj)
+        y_pal = ops.ell_spmv(data, cols, xj, interpret=True,
+                             tile_m=8, tile_w=128)
+        np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(y_pal)[:M],
+                                   csr_to_dense(A) @ x, rtol=1e-3, atol=1e-3)
+
+    def test_tile_sweep(self):
+        A, x = rand_problem(64, 256, 1500, seed=3)
+        e = csr_to_ell(A)
+        data, cols, xj = map(jnp.asarray, (e.data, e.cols, x))
+        base = None
+        for tm in (8, 16, 32, 64):
+            for tw in (128, e.data.shape[1]):
+                y = np.asarray(ops.ell_spmv(data, cols, xj, interpret=True,
+                                            tile_m=tm, tile_w=tw))
+                if base is None:
+                    base = y
+                np.testing.assert_allclose(y, base, rtol=1e-5)
+
+    def test_hyb_overflow_path(self):
+        A, x = rand_problem(128, 128, 4000, seed=5)
+        e = csr_to_ell(A, lane=8, max_width=8)
+        assert e.overflow_vals.size > 0
+        y = ops.hyb_spmv(*map(jnp.asarray, (e.data, e.cols, e.overflow_rows,
+                                            e.overflow_cols, e.overflow_vals,
+                                            x)))
+        np.testing.assert_allclose(np.asarray(y)[:128], csr_to_dense(A) @ x,
+                                   rtol=1e-3, atol=1e-3)
+
+
+class TestBellKernel:
+    @pytest.mark.parametrize("bm,bn", [(8, 128), (16, 128)])
+    def test_spmv_matches(self, bm, bn):
+        A, x = rand_problem(256, 256, 3000, seed=1)
+        blocks, bcols = ops.bell_from_bcsr(csr_to_bcsr(A, (bm, bn)))
+        y_ref = ref.bell_spmv_ref(*map(jnp.asarray, (blocks, bcols, x)))
+        y_pal = ops.bell_spmv(*map(jnp.asarray, (blocks, bcols, x)),
+                              use_kernel=True, interpret=True)
+        np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(y_pal)[:256],
+                                   csr_to_dense(A) @ x, rtol=1e-3, atol=1e-3)
+
+    @pytest.mark.parametrize("B,tb", [(128, 128), (256, 128)])
+    def test_spmm_matches(self, B, tb):
+        A, _ = rand_problem(256, 256, 2000, seed=2)
+        rng = np.random.default_rng(7)
+        X = rng.standard_normal((256, B)).astype(np.float32)
+        blocks, bcols = ops.bell_from_bcsr(csr_to_bcsr(A, (8, 128)))
+        Y = ops.bell_spmm(*map(jnp.asarray, (blocks, bcols, X)),
+                          use_kernel=True, interpret=True, tile_b=tb)
+        np.testing.assert_allclose(np.asarray(Y)[:256], csr_to_dense(A) @ X,
+                                   rtol=1e-3, atol=1e-3)
+
+
+class TestKernelProperties:
+    @settings(max_examples=20, deadline=None)
+    @given(M=st.sampled_from([8, 24, 64]),
+           N=st.sampled_from([128, 256]),
+           nnz=st.integers(10, 800),
+           seed=st.integers(0, 2**16))
+    def test_ell_linearity(self, M, N, nnz, seed):
+        """SpMV is linear: A(ax + by) == a*Ax + b*Ay."""
+        A, x = rand_problem(M, N, nnz, seed=seed)
+        y2 = np.random.default_rng(seed + 1).standard_normal(N).astype(np.float32)
+        e = csr_to_ell(A)
+        data, cols = jnp.asarray(e.data), jnp.asarray(e.cols)
+        f = lambda v: np.asarray(ref.ell_spmv_ref(data, cols, jnp.asarray(v)))
+        lhs = f(2.0 * x + 3.0 * y2)
+        np.testing.assert_allclose(lhs, 2.0 * f(x) + 3.0 * f(y2),
+                                   rtol=1e-3, atol=1e-3)
+
+    @settings(max_examples=15, deadline=None)
+    @given(nnz=st.integers(16, 600), seed=st.integers(0, 2**16))
+    def test_bell_zero_padding_is_noop(self, nnz, seed):
+        """Padded (zero) blocks contribute nothing regardless of bcol."""
+        A, x = rand_problem(128, 128, nnz, seed=seed)
+        blocks, bcols = ops.bell_from_bcsr(csr_to_bcsr(A, (8, 128)))
+        # scramble the bcol of padded slots — result must not change
+        mask = np.abs(blocks).sum(axis=(2, 3)) == 0
+        bcols2 = np.where(mask, (bcols + 1) % blocks.shape[0] // 128, bcols)
+        r1 = ref.bell_spmv_ref(*map(jnp.asarray, (blocks, bcols, x)))
+        r2 = ref.bell_spmv_ref(*map(jnp.asarray, (blocks, bcols2, x)))
+        np.testing.assert_allclose(np.asarray(r1), np.asarray(r2))

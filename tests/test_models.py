@@ -1,0 +1,102 @@
+"""Per-architecture smoke tests: reduced configs, one forward/train step on
+CPU, output shapes + finiteness.  Also decode-vs-prefill consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
+from repro.models import model as mm
+from repro.models import params as pp
+from repro.models.config import SHAPES, shape_applicable
+
+
+def smoke_batch(cfg, B=2, S=16, seed=0):
+    key = jax.random.PRNGKey(seed)
+    if cfg.frontend == "encodec_stub":
+        return {"frames": jax.random.normal(key, (B, S, cfg.d_model), jnp.bfloat16),
+                "labels": jax.random.randint(key, (B, S, cfg.num_codebooks), 0,
+                                             cfg.vocab_size)}
+    if cfg.frontend == "siglip_stub":
+        P = cfg.prefix_len
+        return {"image_embeds": jax.random.normal(key, (B, P, cfg.d_model),
+                                                  jnp.bfloat16),
+                "tokens": jax.random.randint(key, (B, S - P), 0, cfg.vocab_size),
+                "labels": jax.random.randint(key, (B, S - P), 0, cfg.vocab_size)}
+    return {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+            "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+class TestSmoke:
+    def test_forward_shapes_and_finite(self, arch):
+        cfg = get_smoke_config(arch)
+        params = pp.init_params(cfg, jax.random.PRNGKey(0))
+        batch = smoke_batch(cfg)
+        logits, aux = mm.forward(params, cfg, batch)
+        S_out = 16 if cfg.frontend != "siglip_stub" else 16
+        if cfg.num_codebooks > 1:
+            assert logits.shape == (2, 16, cfg.num_codebooks, cfg.vocab_size)
+        else:
+            assert logits.shape == (2, S_out, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_train_step_decreases_loss(self, arch):
+        """Two SGD-ish steps on one batch must reduce the loss."""
+        cfg = get_smoke_config(arch)
+        params = pp.init_params(cfg, jax.random.PRNGKey(0))
+        batch = smoke_batch(cfg)
+        lg = jax.jit(jax.value_and_grad(
+            lambda p: mm.loss_fn(p, cfg, batch)[0]))
+        l0, g = lg(params)
+        # step in f32 with a small lr — bf16 params round off tiny steps,
+        # which can flip the sign of the improvement on recurrent archs
+        params2 = jax.tree.map(
+            lambda p, gg: (p.astype(jnp.float32)
+                           - 0.1 * gg.astype(jnp.float32)).astype(p.dtype),
+            params, g)
+        l1, _ = lg(params2)
+        assert bool(jnp.isfinite(l0)) and bool(jnp.isfinite(l1))
+        assert float(l1) < float(l0) + 1e-4
+
+
+@pytest.mark.parametrize("arch", ["qwen3_4b", "recurrentgemma_2b",
+                                  "xlstm_1_3b", "deepseek_moe_16b"])
+def test_decode_matches_prefill(arch):
+    """Greedy decode logits == teacher-forced forward logits position-wise."""
+    cfg = get_smoke_config(arch)
+    params = pp.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 8
+    key = jax.random.PRNGKey(1)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    full_logits, _ = mm.forward(params, cfg, {"tokens": toks})
+
+    caches = mm.init_cache(cfg, B, max_len=S)
+    outs = []
+    for t in range(S):
+        logits, caches = mm.decode_step(params, cfg, toks[:, t: t + 1],
+                                        caches, jnp.int32(t))
+        outs.append(logits[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec, np.float32),
+                               np.asarray(full_logits, np.float32),
+                               rtol=0.15, atol=0.15)
+
+
+def test_grid_cells_count():
+    """Assignment grid: 10 archs x 4 shapes = 40 cells; 8 documented skips."""
+    from repro.configs.registry import grid_cells
+    cells = grid_cells()
+    assert len(cells) == 40
+    skips = [(a, s) for a, s, ok in cells if not ok]
+    assert len(skips) == 8
+    assert all(s == "long_500k" for _, s in skips)
+
+
+def test_param_counts_match_nameplates():
+    expect = {"gemma_7b": (7, 10), "qwen25_32b": (30, 35),
+              "command_r_plus_104b": (100, 112), "deepseek_moe_16b": (15, 18),
+              "grok_1_314b": (300, 330), "xlstm_1_3b": (1.0, 1.5)}
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count() / 1e9
+        assert lo <= n <= hi, f"{arch}: {n:.2f}B outside [{lo}, {hi}]"

@@ -1,0 +1,178 @@
+"""Core sparse engine: formats, partitioners, layouts, reorderings, traffic."""
+import numpy as np
+import pytest
+
+from repro.core.layout import block_layout, cyclic_layout, make_layout
+from repro.core.migration import count_migrations, remote_access_matrix
+from repro.core.partition import make_partition, partition_nonzeros, partition_rows
+from repro.core.reorder import REORDERINGS, reorder, reordering_permutation
+from repro.core.sparse_matrix import (csr_from_coo, csr_row_nnz, csr_to_bcsr,
+                                      csr_to_dense, csr_to_ell)
+from repro.data.matrices import PAPER_SUITE, make_matrix
+
+
+def rand_csr(M=200, N=240, nnz=2000, seed=0):
+    rng = np.random.default_rng(seed)
+    return csr_from_coo(rng.integers(0, M, nnz), rng.integers(0, N, nnz),
+                        rng.standard_normal(nnz), (M, N))
+
+
+class TestFormats:
+    def test_coo_roundtrip_sums_duplicates(self):
+        A = csr_from_coo([0, 0, 1], [1, 1, 0], [1.0, 2.0, 5.0], (2, 2))
+        D = csr_to_dense(A)
+        assert D[0, 1] == 3.0 and D[1, 0] == 5.0 and A.nnz == 2
+
+    def test_row_slice_relative_offsets(self):
+        A = rand_csr()
+        sub = A.row_slice(10, 20)
+        assert sub.row_ptr[0] == 0
+        np.testing.assert_allclose(csr_to_dense(sub), csr_to_dense(A)[10:20])
+
+    def test_ell_matches_dense(self):
+        A = rand_csr()
+        e = csr_to_ell(A)
+        x = np.random.default_rng(1).standard_normal(A.ncols)
+        y = (e.data * x[e.cols]).sum(1)[: A.nrows]
+        np.testing.assert_allclose(y, csr_to_dense(A) @ x, atol=1e-6)
+
+    def test_ell_overflow_capped(self):
+        A = rand_csr(nnz=4000)
+        e = csr_to_ell(A, lane=4, max_width=4)
+        assert e.width == 4
+        assert e.overflow_vals.size == A.nnz - (e.data != 0).sum()
+
+    def test_ell_lane_alignment(self):
+        e = csr_to_ell(rand_csr(), lane=128, sublane=8)
+        assert e.data.shape[1] % 128 == 0 and e.data.shape[0] % 8 == 0
+
+    def test_bcsr_reconstruction(self):
+        A = rand_csr(M=64, N=64, nnz=500)
+        b = csr_to_bcsr(A, (8, 8))
+        dense = np.zeros((64, 64), np.float32)
+        Mb = b.block_row_ptr.shape[0] - 1
+        for r in range(Mb):
+            for i in range(int(b.block_row_ptr[r]), int(b.block_row_ptr[r + 1])):
+                c = int(b.block_cols[i])
+                dense[r * 8:(r + 1) * 8, c * 8:(c + 1) * 8] += b.blocks[i]
+        np.testing.assert_allclose(dense, csr_to_dense(A), atol=1e-5)
+
+
+class TestPartition:
+    def test_row_partition_even(self):
+        A = rand_csr()
+        p = partition_rows(A, 8)
+        sizes = p.rows_per_shard()
+        assert sizes.sum() == A.nrows and sizes.max() - sizes.min() <= 1
+
+    def test_nonzero_partition_balances_nnz(self):
+        A = make_matrix("cop20k_A", scale=0.01)
+        pr = partition_rows(A, 8)
+        pn = partition_nonzeros(A, 8)
+        cv = lambda v: v.std() / v.mean()
+        assert cv(pn.nnz_per_shard(A)) < cv(pr.nnz_per_shard(A)) + 1e-9
+        assert cv(pn.nnz_per_shard(A)) < 0.05
+
+    def test_owner_of_rows(self):
+        A = rand_csr()
+        p = partition_rows(A, 4)
+        owners = p.owner_of_rows(A.nrows)
+        for s in range(4):
+            assert set(owners[list(p.rows_of(s))]) == {s}
+
+    def test_thread_splits_cover(self):
+        A = rand_csr()
+        for strat in ("row", "nonzero"):
+            p = make_partition(A, 4, strat)
+            for s in range(4):
+                t = p.thread_splits(A, 8)[s]
+                assert t[0] == p.starts[s] and t[-1] == p.starts[s + 1]
+                assert (np.diff(t) >= 0).all()
+
+
+class TestLayout:
+    @pytest.mark.parametrize("kind", ["block", "cyclic"])
+    def test_roundtrip(self, kind):
+        lay = make_layout(kind, 103, 8)
+        v = np.arange(103, dtype=np.float64)
+        np.testing.assert_array_equal(lay.from_sharded(lay.to_sharded(v)), v)
+
+    def test_owner_semantics(self):
+        b = block_layout(100, 4)       # block = 25
+        assert b.owner_of(np.array([0, 24, 25, 99])).tolist() == [0, 0, 1, 3]
+        c = cyclic_layout(100, 4)
+        assert c.owner_of(np.array([0, 1, 4, 99])).tolist() == [0, 1, 0, 3]
+
+    def test_local_index(self):
+        for kind in ("block", "cyclic"):
+            lay = make_layout(kind, 64, 4)
+            idx = np.arange(64)
+            own, loc = lay.owner_of(idx), lay.local_index(idx)
+            # (owner, local) must be a bijection
+            assert len({(o, l) for o, l in zip(own, loc)}) == 64
+
+
+class TestReorder:
+    @pytest.mark.parametrize("method", REORDERINGS)
+    def test_permutation_valid(self, method):
+        A = make_matrix("ford1", scale=0.05)
+        perm = reordering_permutation(A, method, seed=1)
+        assert sorted(perm) == list(range(A.nrows))
+
+    def test_reorder_preserves_spectrum_sample(self):
+        # P A P^T has identical multiset of values and nnz.
+        A = make_matrix("ford1", scale=0.05)
+        B = reorder(A, "random", seed=3)
+        assert B.nnz == A.nnz
+        np.testing.assert_allclose(np.sort(B.values), np.sort(A.values))
+
+    def test_bfs_rebands_cop20k(self):
+        """The paper's Fig. 9/10 mechanism: BFS pulls nnz to the diagonal."""
+        A = make_matrix("cop20k_A", scale=0.02)
+        B = reorder(A, "bfs")
+        def mean_band(C):
+            rows = np.repeat(np.arange(C.nrows), csr_row_nnz(C))
+            return np.abs(rows - C.col_index).mean()
+        assert mean_band(B) < 0.5 * mean_band(A)
+
+
+class TestTraffic:
+    def test_block_fewer_migrations_than_cyclic(self):
+        """Paper Fig. 3: block layout generates 1.42-6.3x fewer migrations."""
+        for name in ("ford1", "cop20k_A"):
+            A = make_matrix(name, scale=0.02)
+            p = make_partition(A, 8, "row")
+            mb = count_migrations(A, p, make_layout("block", A.ncols, 8),
+                                  make_layout("block", A.nrows, 8)).migrations
+            mc = count_migrations(A, p, make_layout("cyclic", A.ncols, 8),
+                                  make_layout("cyclic", A.nrows, 8)).migrations
+            assert mc > 1.4 * mb
+
+    def test_nonzero_lower_cv(self):
+        """Paper Fig. 7: nnz distribution gives lower mem-instr CV."""
+        A = make_matrix("cop20k_A", scale=0.02)
+        xl = make_layout("block", A.ncols, 8)
+        bl = make_layout("block", A.nrows, 8)
+        cv_row = count_migrations(A, make_partition(A, 8, "row"), xl, bl).mem_instr_cv
+        cv_nnz = count_migrations(A, make_partition(A, 8, "nonzero"), xl, bl).mem_instr_cv
+        assert cv_nnz < cv_row
+
+    def test_cop20k_hotspot_share(self):
+        """Paper §IV-D: ~25% of x loads target shard 0."""
+        A = make_matrix("cop20k_A", scale=0.05)
+        p = make_partition(A, 8, "nonzero")
+        rep = count_migrations(A, p, make_layout("block", A.ncols, 8),
+                               make_layout("block", A.nrows, 8))
+        assert 0.15 < rep.hotspot_share < 0.35
+        T = remote_access_matrix(A, p, make_layout("block", A.ncols, 8))
+        assert T.sum(0).argmax() == 0     # hottest column of traffic = shard 0
+
+    def test_random_kills_hotspot(self):
+        A = make_matrix("cop20k_A", scale=0.02)
+        B = reorder(A, "random")
+        xl = make_layout("block", A.ncols, 8)
+        bl = make_layout("block", A.nrows, 8)
+        r0 = count_migrations(A, make_partition(A, 8, "nonzero"), xl, bl)
+        r1 = count_migrations(B, make_partition(B, 8, "nonzero"), xl, bl)
+        assert r1.inbound_cv < 0.3 * r0.inbound_cv
+        assert r1.migrations > r0.migrations     # and costs migrations
