@@ -4,6 +4,7 @@ Reports us/call of the jnp oracle paths that the models actually execute."""
 import jax.numpy as jnp
 import numpy as np
 from repro.core.sparse_matrix import csr_from_coo, csr_to_bcsr, csr_to_ell
+from repro.data.matrices import powerlaw
 from repro.kernels import ops
 from .common import emit, us
 
@@ -25,6 +26,27 @@ def run():
         t = us(lambda: ops.bell_spmv(bj, cj, x).block_until_ready())
         rows.append((f"bell_ref/{M}x{N}/nnz{nnz}", round(t, 1),
                      f"K={blocks.shape[1]}"))
+        # Segmented (nonzero-balanced) family: oracle path timing on the
+        # uniform matrix above plus a skewed power-law one, where the
+        # row-tiled ELL slab pays max-row-nnz padding and the seg slab
+        # stays at ~chunk granularity (see the pad/chunks column).
+        seg = ops.seg_from_csr(A)
+        t = us(lambda: ops.seg_spmv(seg, x).block_until_ready())
+        rows.append((f"seg_ref/{M}x{N}/nnz{nnz}", round(t, 1),
+                     f"chunks={seg.num_chunks};pieces={seg.n_pieces};"
+                     f"pad={seg.padding_ratio:.2f}"))
+    P = powerlaw(2048, 40_000, seed=0)
+    xp = jnp.asarray(rng.standard_normal(P.ncols), jnp.float32)
+    e = csr_to_ell(P)
+    data, cols = jnp.asarray(e.data), jnp.asarray(e.cols)
+    t = us(lambda: ops.ell_spmv_ref(data, cols, xp).block_until_ready())
+    rows.append((f"ell_ref/powerlaw2048/nnz{P.nnz}", round(t, 1),
+                 f"pad={e.padding_ratio:.2f}"))
+    seg = ops.seg_from_csr(P)
+    t = us(lambda: ops.seg_spmv(seg, xp).block_until_ready())
+    rows.append((f"seg_ref/powerlaw2048/nnz{P.nnz}", round(t, 1),
+                 f"chunks={seg.num_chunks};pieces={seg.n_pieces};"
+                 f"pad={seg.padding_ratio:.2f}"))
     emit(rows, ("name", "us_per_call", "derived"))
 
 

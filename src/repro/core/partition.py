@@ -7,9 +7,18 @@ Two strategies, exactly as studied:
 * ``nonzero``  — contiguous rows are packed until ~NNZ/shards non-zeros per
                  shard, so every shard does the same amount of *work* even
                  when row lengths are wildly skewed (cop20k_A, webbase).
+                 ``nnz`` is an accepted alias so :class:`SpmvPlan` and the
+                 segmented kernel share one spelling.
 
 Both return a :class:`Partition` describing row ranges per shard plus the
 per-thread sub-split used by the Emu machine model.
+
+:func:`nnz_chunk_starts` is the *element-level* analogue used by the
+segmented SpMV kernel (``kernels/spmv_seg.py``): the nnz stream is cut into
+equal-size chunks regardless of row boundaries, which is the merge-path /
+nonzero-split work distribution at grid-step granularity.  Keeping both
+definitions in this module means the Emu simulator traces and the TPU
+kernel path agree on what "nonzero-balanced" means.
 """
 from __future__ import annotations
 
@@ -20,7 +29,11 @@ import numpy as np
 
 from .sparse_matrix import CSRMatrix, csr_row_nnz
 
-__all__ = ["Partition", "partition_rows", "partition_nonzeros", "make_partition"]
+__all__ = ["Partition", "partition_rows", "partition_nonzeros",
+           "make_partition", "nnz_chunk_starts", "DISTRIBUTIONS"]
+
+#: Accepted ``make_partition`` / ``SpmvPlan.distribution`` spellings.
+DISTRIBUTIONS = ("row", "nonzero", "nnz")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,9 +110,25 @@ def partition_nonzeros(csr: CSRMatrix, num_shards: int) -> Partition:
     return Partition("nonzero", num_shards, starts)
 
 
+def nnz_chunk_starts(nnz: int, chunk: int) -> np.ndarray:
+    """Element-space chunk boundaries for the segmented SpMV kernel.
+
+    The nnz stream [0, nnz) is cut into ceil(nnz/chunk) chunks of exactly
+    ``chunk`` elements (the last one short).  Every kernel grid step then
+    owns the same number of non-zeros — the nonzero-split distribution at
+    chunk granularity, independent of how skewed the row lengths are.
+    """
+    if chunk <= 0:
+        raise ValueError(f"chunk must be positive, got {chunk}")
+    n_chunks = max((nnz + chunk - 1) // chunk, 1)
+    starts = np.minimum(np.arange(n_chunks + 1, dtype=np.int64) * chunk, nnz)
+    return starts
+
+
 def make_partition(csr: CSRMatrix, num_shards: int, strategy: str) -> Partition:
     if strategy == "row":
         return partition_rows(csr, num_shards)
     if strategy in ("nonzero", "nnz"):
         return partition_nonzeros(csr, num_shards)
-    raise ValueError(f"unknown work-distribution strategy: {strategy!r}")
+    raise ValueError(f"unknown work-distribution strategy: {strategy!r}; "
+                     f"expected one of {DISTRIBUTIONS}")

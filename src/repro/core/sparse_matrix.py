@@ -9,6 +9,11 @@ keep CSR as the canonical host-side format and add two device formats:
 * BCSR with MXU-aligned dense blocks (default 128x128) for block-sparse
   matmuls (SpMM) — how structured sparsity actually pays on a systolic
   array.
+* SEG: the flat nnz stream cut into equal-size lane-aligned chunks plus
+  per-(chunk, row) "piece" metadata.  The nonzero-balanced format behind
+  ``kernels/spmv_seg.py`` — every kernel grid step owns the same number of
+  non-zeros, so power-law rows cannot converge work on one tile the way
+  they converge threads on one nodelet in the paper's §IV-D.
 
 All host-side structures are numpy; device kernels take jnp views.
 """
@@ -23,6 +28,7 @@ __all__ = [
     "CSRMatrix",
     "EllMatrix",
     "BcsrMatrix",
+    "SegMatrix",
     "csr_from_coo",
     "csr_to_dense",
     "csr_to_ell",
@@ -126,6 +132,44 @@ class BcsrMatrix:
     def density_in_blocks(self) -> float:
         bm, bn = self.block_shape
         return self.nnz / max(self.nblocks * bm * bn, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class SegMatrix:
+    """Nonzero-balanced segmented format (merge-path-style SpMV).
+
+    The CSR nnz stream is reshaped to a (C, L) slab of equal-size chunks
+    (L lane-aligned, C sublane-padded; padded slots hold val 0 / col 0 /
+    row 0, a no-op contribution).  A *piece* is a maximal run of elements
+    in one chunk that belong to one row; rows longer than a chunk span
+    several pieces, short rows share a chunk with their neighbours.  The
+    kernel produces within-chunk prefix sums; the piece arrays drive the
+    cross-chunk carry fix-up ``y[row] += psum[chunk, hi] - psum[chunk, lo-1]``.
+    """
+
+    shape: Tuple[int, int]
+    chunk: int                 # L, elements per chunk (multiple of ``lane``)
+    vals: np.ndarray           # (C, L) float32
+    cols: np.ndarray           # (C, L) int32
+    rows: np.ndarray           # (C, L) int32 row id per slot (0 on padding)
+    piece_chunk: np.ndarray    # (n_pieces,) int32
+    piece_lo: np.ndarray       # (n_pieces,) int32 first in-chunk offset
+    piece_hi: np.ndarray       # (n_pieces,) int32 last in-chunk offset
+    piece_row: np.ndarray      # (n_pieces,) int32 destination row
+    nnz: int
+
+    @property
+    def num_chunks(self) -> int:
+        return int(self.vals.shape[0])
+
+    @property
+    def n_pieces(self) -> int:
+        return int(self.piece_row.shape[0])
+
+    @property
+    def padding_ratio(self) -> float:
+        slots = self.vals.shape[0] * self.vals.shape[1]
+        return 1.0 - self.nnz / max(slots, 1)
 
 
 def csr_from_coo(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,

@@ -26,6 +26,20 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:                                   # jax >= 0.5 exports it at top level
+    from jax import shard_map as _shard_map
+except ImportError:                    # 0.4.x: experimental home
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def _shard_map_norep(fn, **kw):
+    """shard_map with replication checking off (pallas_call has no rep rule);
+    the flag is ``check_rep`` on 0.4.x and ``check_vma`` on newer jax."""
+    try:
+        return _shard_map(fn, check_rep=False, **kw)
+    except TypeError:
+        return _shard_map(fn, check_vma=False, **kw)
+
 from .layout import VectorLayout, make_layout
 from .migration import TrafficReport, count_migrations, remote_access_matrix
 from .partition import Partition, make_partition
@@ -33,17 +47,29 @@ from .reorder import reorder
 from .sparse_matrix import CSRMatrix, csr_to_ell
 from repro.kernels import ops as kops
 
-__all__ = ["SpmvPlan", "DistributedSpmv", "build_distributed"]
+__all__ = ["SpmvPlan", "DistributedSpmv", "build_distributed",
+           "make_spmv_fn", "make_seg_spmv_fn", "build_halo",
+           "make_halo_spmv_fn"]
 
 
 @dataclasses.dataclass(frozen=True)
 class SpmvPlan:
-    """The paper's optimization grid as one config object."""
+    """The paper's optimization grid as one config object.
+
+    ``distribution="nnz"`` is the nonzero-balanced split (alias of
+    ``"nonzero"``): device row-ranges are chosen by cumulative-nnz split
+    instead of equal rows, so a power-law matrix cannot converge all the
+    work on one device the way it converges threads on one nodelet in the
+    paper's §IV-D.  ``kernel="seg"`` additionally builds per-shard
+    nonzero-balanced segmented slabs (kernels/spmv_seg.py) whose *grid* is
+    load-balance-aware too, instead of the row-tiled ELL slabs.
+    """
 
     layout: Literal["block", "cyclic"] = "block"
-    distribution: Literal["row", "nonzero"] = "nonzero"
+    distribution: Literal["row", "nonzero", "nnz"] = "nonzero"
     reordering: Literal["none", "random", "bfs", "metis", "degree"] = "none"
     exchange: Literal["allgather", "halo"] = "halo"
+    kernel: Literal["ell", "seg"] = "ell"
     num_shards: int = 8
     seed: int = 0
 
@@ -64,6 +90,14 @@ class DistributedSpmv:
     row_offset: np.ndarray            # absolute first row per shard (S,)
     traffic: TrafficReport
     shard_traffic: np.ndarray         # (S, S) x-elements moved p<-q
+    # Stacked per-shard segmented slabs (plan.kernel == "seg" only):
+    # vals/cols/rows (S, C_pad, L), pieces (S, P_pad, 4) int32 columns
+    # [chunk, lo, hi, local_row]; padded pieces target the dummy row and
+    # encode (lo=1, hi=0) so their prefix difference is exactly zero.
+    seg_vals: np.ndarray | None = None
+    seg_cols: np.ndarray | None = None
+    seg_rows: np.ndarray | None = None
+    seg_pieces: np.ndarray | None = None
 
     def x_to_device(self, x: np.ndarray) -> np.ndarray:
         return self.x_layout.to_sharded(x)
@@ -93,12 +127,55 @@ def build_distributed(csr: CSRMatrix, plan: SpmvPlan) -> DistributedSpmv:
         cols[p, :r, :w] = s.cols
         if s.overflow_vals.size:
             raise AssertionError("uncapped ELL conversion cannot overflow")
+    seg_arrays = _build_seg_slabs(A, part) if plan.kernel == "seg" else {}
     return DistributedSpmv(
         plan=plan, matrix=A, partition=part, x_layout=x_layout,
         b_layout=b_layout, data=data, cols=cols,
         rows_per_shard=part.rows_per_shard().astype(np.int64),
         row_offset=part.starts[:-1].astype(np.int64),
-        traffic=traffic, shard_traffic=shard_traffic)
+        traffic=traffic, shard_traffic=shard_traffic, **seg_arrays)
+
+
+def _build_seg_slabs(A: CSRMatrix, part: Partition) -> dict:
+    """Stacked per-shard SegMatrix slabs, padded to common shapes.
+
+    Column ids stay global (the allgather path gathers the full x); row ids
+    are shard-local.  Piece padding targets the per-shard dummy row
+    (``rows_pad``) with (lo=1, hi=0) so ``psum[c, hi] - psum[c, lo-1]``
+    evaluates to an exact zero for padded entries.
+    """
+    S = part.num_shards
+    segs = [kops.seg_from_csr(A.row_slice(int(part.starts[p]),
+                                          int(part.starts[p + 1])))
+            for p in range(S)]
+    C_pad = max(s.num_chunks for s in segs)
+    L = segs[0].chunk
+    P_pad = max(max(s.n_pieces for s in segs), 1)
+    rows_pad = int(part.rows_per_shard().max())
+    vals = np.zeros((S, C_pad, L), dtype=np.float32)
+    cols = np.zeros((S, C_pad, L), dtype=np.int32)
+    rows = np.zeros((S, C_pad, L), dtype=np.int32)
+    pieces = np.zeros((S, P_pad, 4), dtype=np.int32)
+    pieces[:, :, 1] = 1                       # (lo=1, hi=0) -> exact zero
+    pieces[:, :, 3] = rows_pad                # dummy row, sliced off later
+    for p, s in enumerate(segs):
+        vals[p, : s.num_chunks] = s.vals
+        cols[p, : s.num_chunks] = s.cols
+        rows[p, : s.num_chunks] = s.rows
+        n = s.n_pieces
+        pieces[p, :n, 0] = s.piece_chunk
+        pieces[p, :n, 1] = s.piece_lo
+        pieces[p, :n, 2] = s.piece_hi
+        pieces[p, :n, 3] = s.piece_row
+    return dict(seg_vals=vals, seg_cols=cols, seg_rows=rows,
+                seg_pieces=pieces)
+
+
+def _gathered_x_to_global(x_all: jnp.ndarray, kind: str) -> jnp.ndarray:
+    """(S, per_shard) all-gathered shards -> global index order (padded)."""
+    if kind == "block":
+        return x_all.reshape(-1)
+    return x_all.T.reshape(-1)              # cyclic: idx = i*S + p
 
 
 def make_spmv_fn(dist: DistributedSpmv, mesh: Mesh, axis: str = "model",
@@ -116,10 +193,7 @@ def make_spmv_fn(dist: DistributedSpmv, mesh: Mesh, axis: str = "model",
         else kops.ell_spmv_ref
 
     def local_x_to_global(x_all: jnp.ndarray) -> jnp.ndarray:
-        # x_all: (S, per_shard) -> global index order (padded length)
-        if kind == "block":
-            return x_all.reshape(-1)
-        return x_all.T.reshape(-1)          # cyclic: idx = i*S + p
+        return _gathered_x_to_global(x_all, kind)
 
     def shard_fn(data, cols, x_shard):
         # data/cols: (1, rows_pad, W); x_shard: (1, per_shard)
@@ -128,10 +202,41 @@ def make_spmv_fn(dist: DistributedSpmv, mesh: Mesh, axis: str = "model",
         y = spmv_local(data[0], cols[0], x_global)
         return y[None]
 
-    from jax import shard_map
-    fn = shard_map(
+    fn = _shard_map_norep(
         shard_fn, mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis)),
+        out_specs=P(axis))
+    return jax.jit(fn)
+
+
+def make_seg_spmv_fn(dist: DistributedSpmv, mesh: Mesh, axis: str = "model",
+                     *, use_kernel: bool = False, interpret: bool = True):
+    """Segmented-kernel analogue of :func:`make_spmv_fn`.
+
+    f(seg_vals, seg_cols, seg_rows, seg_pieces, x_shards) -> (S, rows_pad)
+    shards.  Requires ``plan.kernel == "seg"`` so the slabs exist.  Both
+    the device *row ranges* (distribution="nnz") and the local kernel grid
+    (equal-nnz chunks) are load-balanced — the full nonzero-split story.
+    """
+    if dist.seg_vals is None:
+        raise ValueError("build_distributed was not run with plan.kernel='seg'")
+    kind = dist.x_layout.kind
+    rows_pad = int(dist.rows_per_shard.max())
+
+    def shard_fn(vals, cols, rows, pieces, x_shard):
+        x_all = jax.lax.all_gather(x_shard[0], axis)       # (S, per_shard)
+        x_global = _gathered_x_to_global(x_all, kind)
+        pc = pieces[0]
+        y = kops.seg_spmv(
+            (vals[0], cols[0], rows[0], pc[:, 0], pc[:, 1], pc[:, 2],
+             pc[:, 3]),
+            x_global, num_rows=rows_pad + 1,               # +1: dummy row
+            use_kernel=use_kernel, interpret=interpret)
+        return y[None, :rows_pad]
+
+    fn = _shard_map_norep(
+        shard_fn, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis)),
         out_specs=P(axis))
     return jax.jit(fn)
 
@@ -221,8 +326,7 @@ def make_halo_spmv_fn(dist: DistributedSpmv, halo: HaloProgram, mesh: Mesh,
         y = spmv_local(data[0], cols[0], x_aug)
         return y[None]
 
-    from jax import shard_map
-    fn = shard_map(
+    fn = _shard_map_norep(
         shard_fn, mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P(axis)),
         out_specs=P(axis))

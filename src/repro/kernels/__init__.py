@@ -1,3 +1,21 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas SpMV kernels + pure-jnp oracles (``ref.py``) + jit'd wrappers
+(``ops.py``).
+
+Three kernel families, one per sparse format/work-distribution choice:
+
+* **ELL** (``spmv_ell.py``) — row-tiled padded-ELL SpMV (+ COO overflow
+  tail = HYB via ``ops.hyb_spmv``).  Grid is shape-aware: (rows, width)
+  tiles, so one power-law row widens every tile's reduction.
+* **BELL** (``spmv_bell.py``) — Block-ELL SpMV/SpMM over MXU-aligned dense
+  blocks; how structured sparsity pays on a systolic array.
+* **Segmented** (``spmv_seg.py``) — nonzero-balanced merge-path-style
+  SpMV: the nnz stream is cut into equal-size chunks, the kernel emits
+  within-chunk prefix sums, and a jit'd cross-chunk carry fix-up
+  assembles rows.  Grid is load-balance-aware: every step owns the same
+  number of non-zeros regardless of row skew (the TPU analogue of the
+  paper's nonzero work distribution, §III-C).
+
+Every kernel has the same contract: pure-jnp oracle as the default
+execution path, ``use_kernel=True`` for the Pallas path (TPU), and
+``interpret=True`` to run the Pallas path on CPU.
+"""

@@ -15,13 +15,17 @@ import numpy as np
 from . import ref
 from .spmv_ell import ell_spmv as _ell_spmv_pallas
 from .spmv_bell import bell_spmv as _bell_spmv_pallas, bell_spmm as _bell_spmm_pallas
+from .spmv_seg import seg_psum as _seg_psum_pallas
+from repro.core.partition import nnz_chunk_starts
+from repro.core.sparse_matrix import SegMatrix
 
 __all__ = ["ell_spmv_ref", "ell_spmv", "hyb_spmv", "bell_spmv", "bell_spmm",
-           "bell_from_bcsr"]
+           "bell_from_bcsr", "seg_spmv", "seg_spmv_ref", "seg_from_csr"]
 
 ell_spmv_ref = jax.jit(ref.ell_spmv_ref)
 bell_spmv_ref = jax.jit(ref.bell_spmv_ref)
 bell_spmm_ref = jax.jit(ref.bell_spmm_ref)
+seg_spmv_ref = jax.jit(ref.seg_spmv_ref, static_argnames=("num_rows",))
 
 
 def ell_spmv(data, cols, x, *, interpret: bool = False, **tiles):
@@ -59,6 +63,101 @@ def bell_spmm(blocks, bcols, X, *, use_kernel: bool = False,
         return _bell_spmm_pallas(blocks, bcols, X, tile_b=tile_b,
                                  interpret=interpret)
     return bell_spmm_ref(blocks, bcols, X)
+
+
+@functools.partial(jax.jit, static_argnames=("num_rows",))
+def _seg_fixup(psum, piece_chunk, piece_lo, piece_hi, piece_row,
+               num_rows: int):
+    """Cross-chunk carry fix-up: scatter per-(chunk, row) pieces into y.
+
+    A piece covering in-chunk offsets [lo, hi] contributes
+    ``psum[chunk, hi] - psum[chunk, lo-1]`` (0 when lo == 0) to its row.
+    Prefix differences stay chunk-local, so fp32 error is bounded by one
+    chunk's scan, not the whole stream's.
+    """
+    hi = psum[piece_chunk, piece_hi]
+    lo = jnp.where(piece_lo > 0,
+                   psum[piece_chunk, jnp.maximum(piece_lo - 1, 0)],
+                   jnp.zeros((), dtype=psum.dtype))
+    y = jnp.zeros((num_rows,), dtype=psum.dtype)
+    return y.at[piece_row].add(hi - lo)
+
+
+def seg_spmv(seg: "SegMatrix | tuple", x, *, num_rows: int | None = None,
+             use_kernel: bool = False, interpret: bool = False,
+             tile_c: int = 8):
+    """Nonzero-balanced segmented SpMV: y = A @ x over the chunked stream.
+
+    ``seg`` is a host :class:`SegMatrix` (or the equivalent array tuple
+    ``(vals, cols, rows, piece_chunk, piece_lo, piece_hi, piece_row)``).
+    Same contract as the other ops: the jnp scatter-add oracle is the
+    default execution path; ``use_kernel=True`` runs the Pallas per-chunk
+    prefix-sum kernel (``interpret=True`` on CPU) followed by the jit'd
+    cross-chunk carry fix-up.
+    """
+    if isinstance(seg, SegMatrix):
+        arrays = (seg.vals, seg.cols, seg.rows, seg.piece_chunk,
+                  seg.piece_lo, seg.piece_hi, seg.piece_row)
+        if num_rows is None:
+            num_rows = seg.shape[0]
+    else:
+        arrays = seg
+        if num_rows is None:
+            raise ValueError("num_rows is required with raw seg arrays")
+    vals, cols, rows, p_chunk, p_lo, p_hi, p_row = map(jnp.asarray, arrays)
+    if use_kernel:
+        psum = _seg_psum_pallas(vals, cols, x, tile_c=tile_c,
+                                interpret=interpret)
+        return _seg_fixup(psum, p_chunk, p_lo, p_hi, p_row, num_rows)
+    return seg_spmv_ref(vals, cols, rows, x, num_rows=num_rows)
+
+
+def seg_from_csr(csr, *, chunk: int = 512, lane: int = 128,
+                 sublane: int = 8) -> SegMatrix:
+    """Convert host CSRMatrix -> nonzero-balanced SegMatrix.
+
+    ``chunk`` is rounded up to a ``lane`` multiple and the chunk count to a
+    ``sublane`` multiple (TPU tiling).  Chunk boundaries come from
+    :func:`repro.core.partition.nnz_chunk_starts` — the same element-level
+    work-distribution definition the partition layer owns — so the kernel
+    grid and the Emu-side accounting agree on what a chunk is.
+    """
+    L = ((max(chunk, 1) + lane - 1) // lane) * lane
+    nnz = csr.nnz
+    starts = nnz_chunk_starts(nnz, L)
+    C = starts.shape[0] - 1
+    C_pad = ((C + sublane - 1) // sublane) * sublane
+
+    vals = np.zeros((C_pad, L), dtype=np.float32)
+    cols = np.zeros((C_pad, L), dtype=np.int32)
+    rows = np.zeros((C_pad, L), dtype=np.int32)
+    row_of_nnz = np.repeat(np.arange(csr.nrows, dtype=np.int64),
+                           np.diff(csr.row_ptr))
+    flat_c = np.arange(nnz, dtype=np.int64) // L
+    flat_l = np.arange(nnz, dtype=np.int64) % L
+    vals[flat_c, flat_l] = csr.values
+    cols[flat_c, flat_l] = csr.col_index
+    rows[flat_c, flat_l] = row_of_nnz
+
+    # Pieces: maximal same-row runs within a chunk.  A new piece starts at
+    # every chunk boundary and every row change; padded tail slots are
+    # excluded entirely (they carry value 0 anyway).
+    if nnz:
+        is_start = np.zeros(nnz, dtype=bool)
+        is_start[0] = True
+        is_start[1:] = row_of_nnz[1:] != row_of_nnz[:-1]
+        is_start[np.arange(0, nnz, L)] = True
+        p_start = np.flatnonzero(is_start)
+        p_end = np.concatenate([p_start[1:] - 1, [nnz - 1]])
+        piece_chunk = (p_start // L).astype(np.int32)
+        piece_lo = (p_start % L).astype(np.int32)
+        piece_hi = (p_end % L).astype(np.int32)
+        piece_row = row_of_nnz[p_start].astype(np.int32)
+    else:
+        piece_chunk = piece_lo = piece_hi = piece_row = np.zeros(0, np.int32)
+    return SegMatrix(shape=csr.shape, chunk=L, vals=vals, cols=cols,
+                     rows=rows, piece_chunk=piece_chunk, piece_lo=piece_lo,
+                     piece_hi=piece_hi, piece_row=piece_row, nnz=nnz)
 
 
 def bell_from_bcsr(bcsr) -> tuple[np.ndarray, np.ndarray]:

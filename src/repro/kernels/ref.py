@@ -8,7 +8,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["ell_spmv_ref", "bell_spmv_ref", "coo_spmv_ref", "bell_spmm_ref"]
+__all__ = ["ell_spmv_ref", "bell_spmv_ref", "coo_spmv_ref", "bell_spmm_ref",
+           "seg_spmv_ref", "seg_psum_ref"]
 
 
 def ell_spmv_ref(data: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
@@ -21,6 +22,23 @@ def coo_spmv_ref(rows: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
     """Scatter-add oracle for the HYB overflow tail."""
     contrib = vals * jnp.take(x, cols, axis=0)
     return jnp.zeros((num_rows,), dtype=contrib.dtype).at[rows].add(contrib)
+
+
+def seg_spmv_ref(vals: jnp.ndarray, cols: jnp.ndarray, rows: jnp.ndarray,
+                 x: jnp.ndarray, num_rows: int) -> jnp.ndarray:
+    """Segmented SpMV oracle over the chunked nnz stream.
+
+    vals/cols/rows: (C, L) slab (padded slots: val 0 / col 0 / row 0).
+    Scatter-adds every product into its destination row — the order-free
+    definition the chunked prefix-sum kernel must reproduce.
+    """
+    contrib = vals * jnp.take(x, cols, axis=0)
+    return jnp.zeros((num_rows,), dtype=contrib.dtype).at[rows].add(contrib)
+
+
+def seg_psum_ref(vals: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Within-chunk inclusive prefix sums — oracle for kernels.spmv_seg."""
+    return jnp.cumsum(vals * jnp.take(x, cols, axis=0), axis=1)
 
 
 def bell_spmv_ref(blocks: jnp.ndarray, bcols: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: nonzero-balanced segmented-sum SpMV.
+
+The row-tiled ELL kernel (spmv_ell.py) inherits the paper's §IV-D failure
+mode at tile granularity: a power-law row makes its tile's reduction width
+explode while every other tile pads.  This kernel is the nonzero-split fix
+(merge-path style, cf. Elafrou et al. / Merrill & Garland): the flat nnz
+stream is cut into equal-size lane-aligned chunks — every grid step owns
+exactly ``chunk`` non-zeros no matter how skewed the rows are — and the
+kernel computes, per chunk, the products and their within-chunk inclusive
+prefix sums:
+
+    psum[c, l] = sum_{k <= l} vals[c, k] * x[cols[c, k]]
+
+Row results are then assembled by the cross-chunk carry fix-up (a cheap
+jit'd gather/scatter in ops.seg_spmv): each (chunk, row) *piece* contributes
+``psum[c, hi] - psum[c, lo-1]`` to its row, so a row spanning many chunks
+sums one carry per chunk and a chunk holding many short rows yields them
+all from one scan.  The grid is therefore load-balance-aware rather than
+shape-aware — the first kernel in this repo whose work distribution, not
+its operand shape, defines the grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["seg_psum"]
+
+
+def _seg_kernel(vals_ref, cols_ref, x_ref, psum_ref):
+    vals = vals_ref[...]                       # (TC, L)
+    cols = cols_ref[...]                       # (TC, L)
+    x = x_ref[...]                             # (N,) resident in VMEM
+    prod = vals * jnp.take(x, cols, axis=0)    # VMEM dynamic gather
+    psum_ref[...] = jnp.cumsum(prod, axis=1)   # within-chunk inclusive scan
+
+
+@functools.partial(jax.jit, static_argnames=("tile_c", "interpret"))
+def seg_psum(vals: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray,
+             *, tile_c: int = 8, interpret: bool = False) -> jnp.ndarray:
+    """Per-chunk inclusive prefix sums of ``vals * x[cols]``.
+
+    vals/cols: (C, L) nnz-stream slab with L % 128 == 0, C % 8 == 0.
+    x: (N,) — fits VMEM alongside the tiles (the distributed layer shards
+    x so each local slab sees only its gathered vector).
+    Returns psum: (C, L) in x.dtype.
+    """
+    C, L = vals.shape
+    tc = min(tile_c, C)
+    if C % tc:
+        raise ValueError(f"tile_c must divide chunk count: {C} vs {tc}")
+    grid = (C // tc,)
+    return pl.pallas_call(
+        _seg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tc, L), lambda c: (c, 0)),           # vals tile
+            pl.BlockSpec((tc, L), lambda c: (c, 0)),           # cols tile
+            pl.BlockSpec((x.shape[0],), lambda c: (0,)),       # full x in VMEM
+        ],
+        out_specs=pl.BlockSpec((tc, L), lambda c: (c, 0)),
+        out_shape=jax.ShapeDtypeStruct((C, L), x.dtype),
+        interpret=interpret,
+    )(vals, cols, x)

@@ -31,7 +31,9 @@ _WRITER: Optional["_AsyncWriter"] = None
 
 
 def _flatten_with_names(tree: Tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree.flatten_with_path only exists on jax >= 0.5; the tree_util
+    # spelling works on every version this repo supports.
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     names = ["/".join(str(k) for k in path) for path, _ in flat]
     leaves = [l for _, l in flat]
     return names, leaves, treedef

@@ -14,6 +14,7 @@ import numpy as np
 import pytest
 
 from repro.configs.registry import get_smoke_config
+from repro.launch.mesh import auto_axis_types
 from repro.models import model as mm, params as pp
 from repro.optim import adamw
 from repro.train.loop import RunConfig, make_train_step
@@ -24,12 +25,13 @@ _SUBPROC = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import json
     import jax, jax.numpy as jnp, numpy as np
-    from repro.core.spmv import SpmvPlan, build_distributed, make_spmv_fn
+    from repro.core.spmv import (SpmvPlan, build_distributed, make_spmv_fn,
+                                 make_seg_spmv_fn)
     from repro.core.sparse_matrix import csr_to_dense
     from repro.data.matrices import make_matrix
+    from repro.launch.mesh import auto_axis_types
 
-    mesh = jax.make_mesh((8,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.make_mesh((8,), ("model",), **auto_axis_types(1))
     A = make_matrix("cop20k_A", scale=0.005)
     x = np.random.default_rng(1).standard_normal(A.ncols).astype(np.float32)
     out = {}
@@ -65,6 +67,22 @@ _SUBPROC = textwrap.dedent("""
         r = int(d.rows_per_shard[p]); o = int(d.row_offset[p])
         b[o:o+r] = np.asarray(y[p])[:r]
     out["halo"] = bool(np.allclose(b, csr_to_dense(d.matrix) @ x, atol=1e-3))
+    # segmented nonzero-balanced kernel path, both distributions
+    for strat in ("nnz", "row"):
+        seg_plan = SpmvPlan(layout="block", distribution=strat, kernel="seg",
+                            num_shards=8)
+        d = build_distributed(A, seg_plan)
+        fn = make_seg_spmv_fn(d, mesh, use_kernel=True, interpret=True)
+        with mesh:
+            y = fn(jnp.array(d.seg_vals), jnp.array(d.seg_cols),
+                   jnp.array(d.seg_rows), jnp.array(d.seg_pieces),
+                   jnp.array(d.x_to_device(x)))
+        b = np.zeros(A.nrows)
+        for p in range(8):
+            r = int(d.rows_per_shard[p]); o = int(d.row_offset[p])
+            b[o:o+r] = np.asarray(y[p])[:r]
+        out[f"seg/{strat}"] = bool(np.allclose(b, csr_to_dense(d.matrix) @ x,
+                                               atol=1e-3))
     F = make_matrix("ford1", scale=0.05)
     df = build_distributed(F, plan)
     hf = build_halo(df)
@@ -87,8 +105,7 @@ def test_distributed_spmv_8dev_subprocess():
 def test_train_step_factory_single_device():
     """The jitted train step runs on a 1x1 mesh (CPU) and reduces loss."""
     cfg = get_smoke_config("qwen3_4b")
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = jax.make_mesh((1, 1), ("data", "model"), **auto_axis_types(2))
     run = RunConfig(fsdp=False, remat=True, donate=False, grad_accum=2)
     _, jit_for, _ = make_train_step(cfg, adamw.AdamWConfig(lr=1e-2), mesh, run)
     params = pp.init_params(cfg, jax.random.PRNGKey(0))

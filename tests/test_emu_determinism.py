@@ -1,0 +1,58 @@
+"""Golden determinism for the Emu tick simulator.
+
+The simulator is the reproduction vehicle for every Emu-side figure, so its
+output must be a pure function of (config, matrix, partition, layout):
+identical tick counts, migration totals, per-nodelet instruction counts and
+residency traces across repeated runs — no hidden RNG, no dict-order or
+wall-clock dependence.
+"""
+import numpy as np
+import pytest
+
+from repro.core.emu import EmuConfig, build_thread_traces, run_spmv
+from repro.core.layout import make_layout
+from repro.core.partition import make_partition
+from repro.data.matrices import make_matrix
+
+CFG = EmuConfig()
+
+
+@pytest.fixture(scope="module")
+def cop():
+    return make_matrix("cop20k_A", scale=0.01)
+
+
+@pytest.mark.parametrize("strategy", ["row", "nnz"])
+def test_simulation_is_deterministic(cop, strategy):
+    part = make_partition(cop, CFG.nodelets, strategy)
+    lay = make_layout("block", cop.ncols, CFG.nodelets)
+    r1 = run_spmv(cop, part, lay, CFG)
+    r2 = run_spmv(cop, part, lay, CFG)
+    assert r1.ticks == r2.ticks
+    assert r1.migrations == r2.migrations
+    assert r1.seconds == r2.seconds
+    np.testing.assert_array_equal(r1.instr_per_nodelet, r2.instr_per_nodelet)
+    np.testing.assert_array_equal(r1.residency, r2.residency)
+
+
+def test_traces_are_deterministic(cop):
+    part = make_partition(cop, 8, "nnz")
+    lay = make_layout("block", cop.ncols, 8)
+    n1, w1, h1 = build_thread_traces(cop, part, lay, 16)
+    n2, w2, h2 = build_thread_traces(cop, part, lay, 16)
+    np.testing.assert_array_equal(h1, h2)
+    assert len(n1) == len(n2)
+    for a, b in zip(n1, n2):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(w1, w2):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_matrix_generation_is_deterministic():
+    """The synthetic suite is seeded: same name+scale+seed -> same matrix
+    (the precondition for any golden simulator numbers)."""
+    A = make_matrix("rmat", scale=0.005, seed=3)
+    B = make_matrix("rmat", scale=0.005, seed=3)
+    np.testing.assert_array_equal(A.row_ptr, B.row_ptr)
+    np.testing.assert_array_equal(A.col_index, B.col_index)
+    np.testing.assert_array_equal(A.values, B.values)

@@ -1,14 +1,34 @@
 """Per-kernel tests: Pallas (interpret=True) vs pure-jnp oracle vs dense.
 
 Shape/dtype sweeps + hypothesis property tests, per the assignment brief.
+``hypothesis`` is an optional extra: without it only the property-test
+class is skipped — the sweep tests always collect and run.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):            # no-op stand-ins so the decorated
+        return lambda f: f           # (skipped) class still defines
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    class _AnyStrategy:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
 
 from repro.core.sparse_matrix import csr_from_coo, csr_to_bcsr, csr_to_dense, csr_to_ell
+from repro.data.matrices import powerlaw
 from repro.kernels import ops, ref
 
 
@@ -86,6 +106,92 @@ class TestBellKernel:
                                    rtol=1e-3, atol=1e-3)
 
 
+class TestSegKernel:
+    """Nonzero-balanced segmented SpMV: kernel vs oracle vs dense."""
+
+    @pytest.mark.parametrize("M,nnz", [(512, 4000), (2048, 16000)])
+    def test_matches_oracle_and_dense_on_powerlaw(self, M, nnz):
+        """Skewed power-law matrix (max-row-nnz >> mean): the load-balance
+        case the row-tiled ELL kernel handles worst."""
+        A = powerlaw(M, nnz, seed=3)
+        row_nnz = np.diff(A.row_ptr)
+        assert row_nnz.max() > 5 * row_nnz.mean()       # genuinely skewed
+        x = jnp.asarray(np.random.default_rng(0).standard_normal(M),
+                        jnp.float32)
+        seg = ops.seg_from_csr(A)
+        y_ref = np.asarray(ops.seg_spmv(seg, x))
+        y_pal = np.asarray(ops.seg_spmv(seg, x, use_kernel=True,
+                                        interpret=True))
+        np.testing.assert_allclose(y_pal, y_ref, rtol=1e-5, atol=1e-5)
+        dense = csr_to_dense(A) @ np.asarray(x)
+        np.testing.assert_allclose(y_ref, dense, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(y_pal, dense, rtol=1e-4, atol=1e-5)
+
+    def test_row_spanning_many_chunks(self):
+        """One dense row (nnz >> chunk) must sum one carry per chunk."""
+        rng = np.random.default_rng(1)
+        M = 512
+        r = np.concatenate([np.zeros(5000, int), rng.integers(1, M, 1000)])
+        c = rng.integers(0, M, 6000)
+        A = csr_from_coo(r, c, rng.standard_normal(6000), (M, M))
+        x = jnp.asarray(rng.standard_normal(M), jnp.float32)
+        seg = ops.seg_from_csr(A, chunk=128)
+        assert np.diff(A.row_ptr)[0] > 3 * seg.chunk    # spans >= 4 chunks
+        y = np.asarray(ops.seg_spmv(seg, x, use_kernel=True, interpret=True))
+        np.testing.assert_allclose(y, csr_to_dense(A) @ np.asarray(x),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_chunk_and_tile_sweep(self):
+        A = powerlaw(1024, 8000, seed=5)
+        x = jnp.asarray(np.random.default_rng(2).standard_normal(1024),
+                        jnp.float32)
+        base = None
+        for chunk in (128, 256, 512):
+            seg = ops.seg_from_csr(A, chunk=chunk)
+            for tc in (1, 2, 8):
+                if seg.num_chunks % tc:
+                    continue
+                y = np.asarray(ops.seg_spmv(seg, x, use_kernel=True,
+                                            interpret=True, tile_c=tc))
+                if base is None:
+                    base = y
+                np.testing.assert_allclose(y, base, rtol=1e-5, atol=1e-5)
+
+    def test_empty_rows_and_empty_matrix(self):
+        A = csr_from_coo([1, 1, 5], [0, 3, 2], [1.0, 2.0, 3.0], (8, 8))
+        x = jnp.asarray(np.arange(8, dtype=np.float32))
+        seg = ops.seg_from_csr(A)
+        y = np.asarray(ops.seg_spmv(seg, x, use_kernel=True, interpret=True))
+        np.testing.assert_allclose(y, csr_to_dense(A) @ np.asarray(x),
+                                   atol=1e-6)
+        E = csr_from_coo(np.zeros(0, int), np.zeros(0, int), np.zeros(0),
+                         (16, 16))
+        se = ops.seg_from_csr(E)
+        ye = np.asarray(ops.seg_spmv(se, jnp.zeros(16, jnp.float32),
+                                     use_kernel=True, interpret=True))
+        assert ye.shape == (16,) and not ye.any()
+
+    def test_grid_is_nnz_balanced(self):
+        """Structural invariant: every chunk except the last holds exactly
+        ``chunk`` non-zeros, no matter how skewed the rows are — the whole
+        point of the format."""
+        A = powerlaw(1024, 12000, seed=7)
+        seg = ops.seg_from_csr(A, chunk=256)
+        per_chunk = np.zeros(seg.num_chunks, np.int64)
+        flat_c = np.arange(A.nnz) // seg.chunk
+        np.add.at(per_chunk, flat_c, 1)
+        full = per_chunk[per_chunk > 0]
+        assert (full[:-1] == seg.chunk).all() and full[-1] <= seg.chunk
+        # pieces tile the stream exactly once
+        assert seg.piece_row.size >= A.shape[0] - (np.diff(A.row_ptr) == 0).sum()
+        covered = 0
+        for ch, lo, hi in zip(seg.piece_chunk, seg.piece_lo, seg.piece_hi):
+            assert 0 <= lo <= hi < seg.chunk
+            covered += hi - lo + 1
+        assert covered == A.nnz
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
 class TestKernelProperties:
     @settings(max_examples=20, deadline=None)
     @given(M=st.sampled_from([8, 24, 64]),
@@ -102,6 +208,19 @@ class TestKernelProperties:
         lhs = f(2.0 * x + 3.0 * y2)
         np.testing.assert_allclose(lhs, 2.0 * f(x) + 3.0 * f(y2),
                                    rtol=1e-3, atol=1e-3)
+
+    @settings(max_examples=15, deadline=None)
+    @given(M=st.sampled_from([64, 256]), nnz=st.integers(16, 2000),
+           seed=st.integers(0, 2**16))
+    def test_seg_matches_ell_oracle(self, M, nnz, seed):
+        """The segmented and ELL formats of one matrix agree on A @ x."""
+        A, x = rand_problem(M, M, nnz, seed=seed)
+        e = csr_to_ell(A)
+        y_ell = np.asarray(ref.ell_spmv_ref(
+            jnp.asarray(e.data), jnp.asarray(e.cols), jnp.asarray(x)))[:M]
+        seg = ops.seg_from_csr(A)
+        y_seg = np.asarray(ops.seg_spmv(seg, jnp.asarray(x)))
+        np.testing.assert_allclose(y_seg, y_ell, rtol=1e-4, atol=1e-5)
 
     @settings(max_examples=15, deadline=None)
     @given(nnz=st.integers(16, 600), seed=st.integers(0, 2**16))

@@ -64,8 +64,20 @@ class TestSmoke:
                                   "xlstm_1_3b", "deepseek_moe_16b"])
 def test_decode_matches_prefill(arch):
     """Greedy decode logits == teacher-forced forward logits position-wise."""
+    import dataclasses
     cfg = get_smoke_config(arch)
     params = pp.init_params(cfg, jax.random.PRNGKey(0))
+    if cfg.moe is not None:
+        # decode==prefill only holds dropless: prefill routes all B*S tokens
+        # through the capacity buffer at once while decode sees B per step,
+        # so any capacity drop breaks position-wise equality by design; and
+        # bf16 activations can flip a near-tied top-k expert choice between
+        # the two paths, which is a discontinuity no tolerance covers.
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+        params = jax.tree.map(
+            lambda a: a.astype(jnp.float32) if a.dtype == jnp.bfloat16 else a,
+            params)
     B, S = 2, 8
     key = jax.random.PRNGKey(1)
     toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)

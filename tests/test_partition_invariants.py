@@ -1,0 +1,119 @@
+"""Partition / reorder invariants (satellite of the segmented-SpMV PR).
+
+Every ``make_partition`` mode must cover all rows exactly once; every
+``reorder`` permutation must be a bijection that conserves nnz and keeps
+``A @ x`` equal under the symmetric permutation; the element-level chunking
+behind the segmented kernel must tile the nnz stream exactly.
+"""
+import numpy as np
+import pytest
+
+from repro.core.partition import (DISTRIBUTIONS, make_partition,
+                                  nnz_chunk_starts, partition_nonzeros)
+from repro.core.reorder import REORDERINGS, reorder, reordering_permutation
+from repro.core.sparse_matrix import csr_from_coo, csr_to_dense, csr_row_nnz
+from repro.data.matrices import make_matrix, powerlaw
+
+
+def rand_csr(M=300, N=300, nnz=3000, seed=0):
+    rng = np.random.default_rng(seed)
+    return csr_from_coo(rng.integers(0, M, nnz), rng.integers(0, N, nnz),
+                        rng.standard_normal(nnz), (M, N))
+
+
+class TestPartitionCoverage:
+    @pytest.mark.parametrize("strategy", DISTRIBUTIONS)
+    @pytest.mark.parametrize("num_shards", [1, 4, 8])
+    def test_rows_covered_exactly_once(self, strategy, num_shards):
+        A = powerlaw(512, 4000, seed=2)
+        p = make_partition(A, num_shards, strategy)
+        assert p.starts[0] == 0 and p.starts[-1] == A.nrows
+        assert (np.diff(p.starts) >= 0).all()
+        owners = p.owner_of_rows(A.nrows)
+        counts = np.zeros(num_shards, np.int64)
+        np.add.at(counts, owners, 1)
+        assert counts.sum() == A.nrows
+        # each shard's claimed rows are exactly the rows it owns
+        for s in range(num_shards):
+            assert counts[s] == len(p.rows_of(s))
+
+    def test_nnz_is_alias_of_nonzero(self):
+        A = rand_csr()
+        np.testing.assert_array_equal(make_partition(A, 8, "nnz").starts,
+                                      make_partition(A, 8, "nonzero").starts)
+
+    def test_unknown_strategy_raises(self):
+        with pytest.raises(ValueError, match="work-distribution"):
+            make_partition(rand_csr(), 8, "zigzag")
+
+    @pytest.mark.parametrize("strategy", DISTRIBUTIONS)
+    def test_thread_splits_cover_each_shard(self, strategy):
+        A = make_matrix("cop20k_A", scale=0.005)
+        p = make_partition(A, 4, strategy)
+        splits = p.thread_splits(A, 8)
+        for s in range(4):
+            t = splits[s]
+            assert t[0] == p.starts[s] and t[-1] == p.starts[s + 1]
+            assert (np.diff(t) >= 0).all()
+
+    def test_nonzero_balances_on_skew(self):
+        A = powerlaw(2048, 20000, seed=1)
+        pn = partition_nonzeros(A, 8)
+        nnz = pn.nnz_per_shard(A).astype(float)
+        assert nnz.std() / nnz.mean() < 0.1
+
+
+class TestNnzChunking:
+    @pytest.mark.parametrize("nnz,chunk", [(0, 128), (1, 128), (127, 128),
+                                           (128, 128), (129, 128),
+                                           (10_000, 512)])
+    def test_chunks_tile_stream_exactly(self, nnz, chunk):
+        starts = nnz_chunk_starts(nnz, chunk)
+        sizes = np.diff(starts)
+        assert starts[0] == 0 and starts[-1] == nnz
+        assert (sizes >= 0).all()
+        if nnz > chunk:
+            assert (sizes[:-1] == chunk).all()
+        assert sizes.sum() == nnz
+
+    def test_bad_chunk_raises(self):
+        with pytest.raises(ValueError):
+            nnz_chunk_starts(100, 0)
+
+
+class TestReorderInvariants:
+    @pytest.mark.parametrize("method", REORDERINGS)
+    def test_permutation_is_bijection(self, method):
+        A = make_matrix("ford1", scale=0.03)
+        perm = reordering_permutation(A, method, seed=4)
+        assert perm.shape == (A.nrows,)
+        assert np.array_equal(np.sort(perm), np.arange(A.nrows))
+
+    @pytest.mark.parametrize("method", REORDERINGS)
+    def test_conserves_nnz_and_values(self, method):
+        A = make_matrix("cop20k_A", scale=0.005)
+        B = reorder(A, method, seed=4)
+        assert B.nnz == A.nnz
+        np.testing.assert_allclose(np.sort(B.values), np.sort(A.values))
+
+    @pytest.mark.parametrize("method", REORDERINGS)
+    def test_spmv_equal_under_permutation(self, method):
+        """B = P A P^T with B[perm[i], perm[j]] = A[i, j]; then
+        (B @ xp)[perm] == A @ x where xp[perm] = x."""
+        A = make_matrix("ford1", scale=0.03)
+        perm = reordering_permutation(A, method, seed=4)
+        B = A.permuted(perm, perm)
+        rng = np.random.default_rng(0)
+        x = rng.standard_normal(A.ncols)
+        xp = np.empty_like(x)
+        xp[perm] = x
+        np.testing.assert_allclose((csr_to_dense(B) @ xp)[perm],
+                                   csr_to_dense(A) @ x, atol=1e-9)
+
+    def test_degree_orders_by_row_nnz(self):
+        A = powerlaw(512, 5000, seed=3)
+        B = reorder(A, "degree")
+        nnz = csr_row_nnz(B)
+        # heaviest rows first (stable sort on descending degree)
+        assert nnz[0] == csr_row_nnz(A).max()
+        assert (np.diff(nnz) <= 0).all()
