@@ -1,0 +1,82 @@
+"""Autotuner benchmark: chosen plan vs best static plan (Emu model).
+
+For every synthetic-suite matrix (pattern-preserving scaled, see
+``common.SIM_SCALES``) this enumerates the full static grid (reordering x
+layout x distribution) on the Emu timeline simulator, asks
+``SpmvPlan.auto`` (the ``core/plan.py`` cost-model autotuner, Emu-sim
+probe enabled) for its pick, and reports the regret:
+
+    chosen_time / best_static_time   (acceptance bar: <= 1.25)
+
+Run it standalone (CSV to stdout; ~3-5 min, the timeline simulator is
+Python) or via ``python -m benchmarks.run``:
+
+    PYTHONPATH=src python -m benchmarks.autotune_bench --probe 8
+    PYTHONPATH=src python -m benchmarks.autotune_bench --matrices rmat ford1
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core.emu import EmuConfig, run_spmv
+from repro.core.layout import make_layout
+from repro.core.partition import make_partition
+from repro.core.reorder import REORDERINGS, reorder
+from repro.core.spmv import SpmvPlan
+from repro.data.matrices import make_matrix
+from .common import SIM_SCALES, emit
+
+GRID_LAYOUTS = ("block", "cyclic")
+GRID_DISTS = ("row", "nonzero")
+
+
+def run(matrices=None, probe: int = 8, shards: int = 8):
+    names = matrices or list(SIM_SCALES)
+    cfg = EmuConfig(nodelets=shards)
+    rows = []
+    worst = 0.0
+    for name in names:
+        A = make_matrix(name, scale=SIM_SCALES[name])
+        sim = {}
+        for reo in REORDERINGS:
+            B = reorder(A, reo, parts=shards)
+            for lay in GRID_LAYOUTS:
+                for dist in GRID_DISTS:
+                    part = make_partition(B, shards, dist)
+                    res = run_spmv(B, part,
+                                   make_layout(lay, B.ncols, shards), cfg)
+                    sim[(reo, lay, dist)] = res
+        best_key = min(sim, key=lambda k: sim[k].seconds)
+        best = sim[best_key]
+
+        plan = SpmvPlan.auto(A, num_shards=shards, probe=probe)
+        chosen = sim[(plan.reordering, plan.layout, plan.distribution)]
+        regret = chosen.seconds / max(best.seconds, 1e-12)
+        worst = max(worst, regret)
+        rows.append((f"autotune/{name}",
+                     f"{plan.reordering}/{plan.layout}/{plan.distribution}"
+                     f"/{plan.kernel}",
+                     round(chosen.bandwidth_mbs, 1),
+                     "/".join(best_key), round(best.bandwidth_mbs, 1),
+                     round(regret, 3)))
+    emit(rows, ("name", "chosen_plan", "chosen_mbs", "best_static",
+                "best_mbs", "regret"))
+    status = "PASS" if worst <= 1.25 else "FAIL"
+    print(f"# max regret {worst:.3f} (bar 1.25) -> {status}")
+    return worst
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--matrices", nargs="*", default=None,
+                    help=f"suite names (default: all of {list(SIM_SCALES)})")
+    ap.add_argument("--probe", type=int, default=8,
+                    help="distinct bases the autotuner probes on the Emu "
+                         "simulator (0 = analytic cost model only)")
+    ap.add_argument("--shards", type=int, default=8)
+    args = ap.parse_args()
+    run(matrices=args.matrices, probe=args.probe, shards=args.shards)
+
+
+if __name__ == "__main__":
+    main()

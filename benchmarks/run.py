@@ -10,8 +10,8 @@ import traceback
 
 
 def main() -> None:
-    from . import (fig3_layout, fig6_distribution, fig7_cv, fig8_residency,
-                   fig10_reorder, fig12_cache, kernels_bench)
+    from . import (autotune_bench, fig3_layout, fig6_distribution, fig7_cv,
+                   fig8_residency, fig10_reorder, fig12_cache, kernels_bench)
     sections = [
         ("Fig.3 cyclic-vs-block", fig3_layout.run),
         ("Fig.6 row-vs-nonzero", fig6_distribution.run),
@@ -20,6 +20,7 @@ def main() -> None:
         ("Fig.10 reorderings (Emu)", fig10_reorder.run),
         ("Fig.12 reorderings (cache CPU)", fig12_cache.run),
         ("kernel microbench", kernels_bench.run),
+        ("Autotuner chosen-vs-best-static", autotune_bench.run),
     ]
     try:
         from . import roofline

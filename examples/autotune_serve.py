@@ -1,0 +1,45 @@
+"""Autotuned SpMV serving in ~30 lines.
+
+Ingest three structurally different matrices into the sparse serving
+engine; each gets its own cost-model-tuned plan at load time (no
+hand-picked layouts/kernels), then serve y = A @ x requests and print
+which plan each matrix ended up with and why it differs.
+
+    PYTHONPATH=src python examples/autotune_serve.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core.sparse_matrix import csr_to_dense
+from repro.data.matrices import make_matrix
+from repro.serve.engine import SparseMatrixEngine
+
+
+def main():
+    eng = SparseMatrixEngine(num_shards=8)
+    suite = {"cop20k_A": 0.02, "webbase-1M": 0.002, "audikw_1": 0.001}
+    rng = np.random.default_rng(0)
+
+    print(f"{'matrix':12s} {'chosen plan':34s} {'migrations':>10s} "
+          f"{'hot-share':>9s} {'served-ok':>9s}")
+    for name, scale in suite.items():
+        A = make_matrix(name, scale=scale)
+        eng.ingest(name, A)                       # autotunes here
+        x = rng.standard_normal(A.ncols)
+        y = eng.spmv(name, x)
+        ok = np.allclose(y, csr_to_dense(A) @ x, atol=1e-6)
+        s = eng.stats()[name]
+        p = s["plan"]
+        plan = f"{p['reordering']}/{p['layout']}/{p['distribution']}/{p['kernel']}"
+        print(f"{name:12s} {plan:34s} {s['migrations']:10d} "
+              f"{s['hotspot_share']:9.3f} {str(ok):>9s}")
+
+    print("\nhot-spot FEM -> reordered; power-law -> nonzero split; "
+          "wide-band -> plain block. The study, applied as policy.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,3 +1,13 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+#
+# Module map (see docs/ARCHITECTURE.md for the full picture):
+#   sparse_matrix / partition / layout / reorder — formats + the study axes
+#   migration / emu / cache_model               — exact counts + machine models
+#   spmv                                        — SpmvPlan, distributed programs
+#   plan                                        — the cost-model plan autotuner
+#
+# Submodules import numpy only, except spmv/plan (jax); import them
+# directly (e.g. `from repro.core.partition import make_partition`) so the
+# numpy-only layers stay importable without jax.

@@ -29,7 +29,8 @@ from .layout import VectorLayout
 from .partition import Partition
 from .sparse_matrix import CSRMatrix, csr_row_nnz
 
-__all__ = ["TrafficReport", "count_migrations", "remote_access_matrix"]
+__all__ = ["TrafficReport", "count_migrations", "remote_access_matrix",
+           "migration_arrivals"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,6 +115,38 @@ def count_migrations(csr: CSRMatrix, part: Partition, x_layout: VectorLayout,
         inbound_x_loads=inbound,
         nnz_per_nodelet=nnz_per_nodelet,
     )
+
+
+def migration_arrivals(csr: CSRMatrix, part: Partition,
+                       x_layout: VectorLayout) -> np.ndarray:
+    """(P,) migrations *arriving at* each nodelet under the thread walk.
+
+    Same walk as :func:`count_migrations` (home, x owners..., home per row),
+    but attributed to the *destination* nodelet of each owner change.  This
+    is the ingress pressure the Nodelet Queue Manager must absorb — the
+    quantity that saturates on cop20k_A's nodelet 0 (§IV-D) and that the
+    plan cost model (``core/plan.py``) uses as its hot-spot term.
+    """
+    P = part.num_shards
+    M = csr.nrows
+    nnz_per_row = csr_row_nnz(csr)
+    rows = np.repeat(np.arange(M), nnz_per_row)
+    home = part.owner_of_rows(M)
+    home_of_nnz = home[rows]
+    owners = x_layout.owner_of(csr.col_index)
+
+    arrivals = np.zeros(P, dtype=np.int64)
+    if csr.nnz > 1:
+        same_row = rows[1:] == rows[:-1]
+        moved = same_row & (owners[1:] != owners[:-1])
+        np.add.at(arrivals, owners[1:][moved], 1)
+    starts = csr.row_ptr[:-1][nnz_per_row > 0]
+    enter = owners[starts] != home_of_nnz[starts]
+    np.add.at(arrivals, owners[starts][enter], 1)
+    ends = (csr.row_ptr[1:] - 1)[nnz_per_row > 0]
+    leave = owners[ends] != home_of_nnz[ends]
+    np.add.at(arrivals, home_of_nnz[ends][leave], 1)
+    return arrivals
 
 
 def remote_access_matrix(csr: CSRMatrix, part: Partition,

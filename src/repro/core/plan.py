@@ -1,0 +1,494 @@
+"""Cost-model-driven SpMV plan autotuner (the paper's study as policy).
+
+The paper's core result is a *cost-benefit study*: no single layout /
+work-distribution / reordering wins on a migratory-thread machine — the
+right choice depends on sparsity structure (reordering buys up to 70% on
+Emu vs <= 16% on a cache machine, §IV-E; the nonzero split only pays on
+skewed matrices, §IV-C).  This module turns that study into an executable
+policy, in the spirit of feature-based SpMV optimization selection
+(Elafrou et al., 2017):
+
+1. :func:`extract_features` — structural features of a
+   :class:`~repro.core.sparse_matrix.CSRMatrix` (row-nnz CV, bandwidth,
+   power-law tail share, hot-column share via
+   :func:`~repro.core.migration.remote_access_matrix`).
+2. :func:`estimate_cost` — an analytic cost model for one
+   :class:`~repro.core.spmv.SpmvPlan`, grounded in the Emu machine
+   constants (:class:`~repro.core.emu.EmuConfig`) and the exact migration
+   counts of :mod:`repro.core.migration`; TPU-side terms (ELL padding,
+   collective volume) follow :mod:`repro.core.cache_model`'s style of
+   analytic accounting.
+3. :func:`autotune` — score the full candidate grid, optionally refine the
+   top candidates with a short empirical probe (the Emu timeline simulator,
+   :func:`~repro.core.emu.run_spmv`), and return a ranked, JSON-
+   serializable :class:`PlanChoice`.
+
+``SpmvPlan.auto(csr)`` (in :mod:`repro.core.spmv`) is the one-call
+entry point; ``serve.engine.SparseMatrixEngine`` applies it to every
+ingested matrix at load time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from .emu import EmuConfig, run_spmv
+from .layout import make_layout
+from .migration import count_migrations, migration_arrivals, remote_access_matrix
+from .partition import Partition, make_partition
+from .reorder import REORDERINGS, reordering_permutation
+from .sparse_matrix import CSRMatrix, ELL_LANE, ELL_SUBLANE, csr_row_nnz
+from .spmv import SpmvPlan
+from repro.kernels.ops import SEG_CHUNK
+
+__all__ = ["MatrixFeatures", "PlanCost", "RankedPlan", "PlanChoice",
+           "extract_features", "estimate_cost", "autotune"]
+
+#: Weight of the TPU-side padding term relative to Emu issue cycles.  Small
+#: enough that Emu-visible terms dominate across (layout, distribution,
+#: reordering) bases; decisive between the ``ell``/``seg`` kernels, which
+#: the Emu terms cannot distinguish.
+_W_PAD = 0.02
+#: Cycles charged per x element moved by the collective exchange (halo
+#: all-to-all vs all-gather) — again sub-dominant, decisive within a base.
+_W_COMM = 0.25
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class MatrixFeatures:
+    """Structural features that drive plan selection.
+
+    All fields are plain Python scalars so the dataclass JSON round-trips
+    exactly.  Extraction is deterministic: every statistic is an exact
+    vectorized reduction over the matrix (no sampling, no RNG).
+
+    Attributes
+    ----------
+    nrows, ncols, nnz : int
+        Matrix dimensions and stored non-zeros.
+    density : float
+        ``nnz / (nrows * ncols)``.
+    row_nnz_mean, row_nnz_cv, row_nnz_max : float
+        Mean / coefficient of variation / max of per-row non-zero counts.
+        High CV is the paper's §IV-C trigger for the nonzero distribution.
+    tail_share : float
+        Fraction of all non-zeros held by the heaviest 1% of rows — the
+        power-law-tail indicator (webbase/rmat style matrices).
+    bandwidth_mean, bandwidth_p95 : float
+        Mean and 95th-percentile of ``|i - j| / ncols`` over stored
+        entries.  Small values mean a banded matrix whose block layout is
+        already migration-cheap (ford1/audikw_1).
+    hot_col_share : float
+        Largest per-shard share of all x loads under a row partition +
+        block layout, computed from
+        :func:`~repro.core.migration.remote_access_matrix` — the §IV-D
+        hot-spot indicator (cop20k_A's nodelet 0 serves ~25%).
+    remote_frac : float
+        Off-diagonal mass of the same access matrix: the fraction of x
+        loads that are remote at all.
+    """
+
+    nrows: int
+    ncols: int
+    nnz: int
+    density: float
+    row_nnz_mean: float
+    row_nnz_cv: float
+    row_nnz_max: float
+    tail_share: float
+    bandwidth_mean: float
+    bandwidth_p95: float
+    hot_col_share: float
+    remote_frac: float
+
+    def to_dict(self) -> dict:
+        """Return the features as a plain ``dict`` (JSON-ready)."""
+        return dataclasses.asdict(self)
+
+
+def extract_features(csr: CSRMatrix, *, num_shards: int = 8) -> MatrixFeatures:
+    """Extract plan-selection features from a CSR matrix.
+
+    Parameters
+    ----------
+    csr : CSRMatrix
+        Host matrix (any shape; hot-column share uses a row partition over
+        ``num_shards`` shards).
+    num_shards : int, optional
+        Shard count the hot-column / remote-fraction statistics are
+        measured against (default 8, the Emu Chick nodelet count).
+
+    Returns
+    -------
+    MatrixFeatures
+        Deterministic scalar features (see the class docstring).
+
+    Examples
+    --------
+    >>> import numpy as np
+    >>> from repro.core.sparse_matrix import csr_from_coo
+    >>> from repro.core.plan import extract_features
+    >>> eye = csr_from_coo(np.arange(8), np.arange(8), np.ones(8), (8, 8))
+    >>> f = extract_features(eye, num_shards=4)
+    >>> (f.nnz, round(f.row_nnz_cv, 3), round(f.bandwidth_mean, 3))
+    (8, 0.0, 0.0)
+    >>> f.remote_frac        # diagonal: every x load is shard-local
+    0.0
+    """
+    per_row = csr_row_nnz(csr).astype(np.float64)
+    mean = float(per_row.mean()) if csr.nrows else 0.0
+    cv = float(per_row.std() / mean) if mean else 0.0
+    top = max(int(np.ceil(csr.nrows * 0.01)), 1)
+    tail = float(np.sort(per_row)[-top:].sum() / max(csr.nnz, 1))
+
+    rows_of_nnz = np.repeat(np.arange(csr.nrows), csr_row_nnz(csr))
+    if csr.nnz:
+        dist = np.abs(rows_of_nnz - csr.col_index.astype(np.int64))
+        bw_mean = float(dist.mean() / max(csr.ncols, 1))
+        bw_p95 = float(np.percentile(dist, 95) / max(csr.ncols, 1))
+    else:
+        bw_mean = bw_p95 = 0.0
+
+    part = make_partition(csr, num_shards, "row")
+    T = remote_access_matrix(csr, part, make_layout("block", csr.ncols,
+                                                    num_shards))
+    tot = float(T.sum())
+    hot = float(T.sum(axis=0).max() / tot) if tot else 0.0
+    remote = float((tot - np.trace(T)) / tot) if tot else 0.0
+
+    return MatrixFeatures(
+        nrows=csr.nrows, ncols=csr.ncols, nnz=csr.nnz,
+        density=float(csr.nnz / max(csr.nrows * csr.ncols, 1)),
+        row_nnz_mean=mean, row_nnz_cv=cv, row_nnz_max=float(per_row.max())
+        if csr.nrows else 0.0,
+        tail_share=tail, bandwidth_mean=bw_mean, bandwidth_p95=bw_p95,
+        hot_col_share=hot, remote_frac=remote)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanCost:
+    """Analytic cost breakdown for one plan, in Gossamer-Core cycles.
+
+    ``issue_cycles`` is the critical-path memory-instruction term (max over
+    nodelets, :class:`~repro.core.emu.EmuConfig` ``access_cycles`` each);
+    ``ingress_cycles`` the migration-arrival service time at the hottest
+    nodelet (the §IV-D collapse mechanism); ``migration_cycles`` the
+    per-thread migration overhead; ``padding_cycles`` the (down-weighted)
+    TPU-side wasted-slot term that separates the ``ell``/``seg`` kernels;
+    ``comm_cycles`` the (down-weighted) collective-volume term that
+    separates ``halo``/``allgather``.  ``total`` is the ranking key.
+    """
+
+    issue_cycles: float
+    ingress_cycles: float
+    migration_cycles: float
+    padding_cycles: float
+    comm_cycles: float
+    total: float
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class RankedPlan:
+    """One scored candidate: the plan, its model cost, optional probe time."""
+
+    plan: SpmvPlan
+    cost: PlanCost
+    probe_seconds: float | None = None
+    probe_mbs: float | None = None
+
+    def to_dict(self) -> dict:
+        return {"plan": dataclasses.asdict(self.plan),
+                "cost": self.cost.to_dict(),
+                "probe_seconds": self.probe_seconds,
+                "probe_mbs": self.probe_mbs}
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanChoice:
+    """Ranked autotuning result (best candidate first).
+
+    ``ranking[0].plan`` is the chosen plan; :meth:`to_json` /
+    :meth:`from_json` round-trip the whole object, so a serving layer can
+    persist the decision next to the ingested matrix.
+    """
+
+    features: MatrixFeatures
+    ranking: tuple[RankedPlan, ...]
+    probed: int
+
+    @property
+    def plan(self) -> SpmvPlan:
+        """The winning :class:`~repro.core.spmv.SpmvPlan`."""
+        return self.ranking[0].plan
+
+    def to_json(self, indent: int | None = None) -> str:
+        """Serialize to a JSON string (stable field order)."""
+        return json.dumps({
+            "features": self.features.to_dict(),
+            "ranking": [r.to_dict() for r in self.ranking],
+            "probed": self.probed,
+        }, indent=indent)
+
+    @classmethod
+    def from_json(cls, s: str) -> "PlanChoice":
+        """Inverse of :meth:`to_json` (exact dataclass equality)."""
+        d = json.loads(s)
+        ranking = tuple(
+            RankedPlan(plan=SpmvPlan(**r["plan"]),
+                       cost=PlanCost(**r["cost"]),
+                       probe_seconds=r["probe_seconds"],
+                       probe_mbs=r["probe_mbs"])
+            for r in d["ranking"])
+        return cls(features=MatrixFeatures(**d["features"]),
+                   ranking=ranking, probed=int(d["probed"]))
+
+
+# --------------------------------------------------------------------------
+# cost model
+# --------------------------------------------------------------------------
+
+def _base_metrics(A: CSRMatrix, part: Partition, layout: str,
+                  emu: EmuConfig) -> dict:
+    """Emu-visible cost terms shared by every (kernel, exchange) variant."""
+    S = part.num_shards
+    xl = make_layout(layout, A.ncols, S)
+    bl = make_layout(layout, A.nrows, S)
+    tr = count_migrations(A, part, xl, bl)
+    arrivals = migration_arrivals(A, part, xl)
+    issue = float(tr.mem_instr_per_nodelet.max()) * emu.access_cycles
+    ingress = float(arrivals.max()) * emu.tick_cycles / emu.ingress_rate
+    migration = tr.migrations / S * emu.migration_overhead_cycles
+
+    # Exchange volumes (x elements per shard): all-gather replicates the
+    # padded vector; halo moves S * H where H is the max unique remote-x
+    # set any (reader, owner) pair exchanges (build_halo pads to the max).
+    rows_of_nnz = np.repeat(np.arange(A.nrows), csr_row_nnz(A))
+    home_of_nnz = part.owner_of_rows(A.nrows)[rows_of_nnz]
+    owners = xl.owner_of(A.col_index)
+    remote = owners != home_of_nnz
+    if remote.any():
+        key = home_of_nnz[remote].astype(np.int64) * A.ncols + \
+            A.col_index[remote].astype(np.int64)
+        uniq = np.unique(key)
+        up, ucol = uniq // A.ncols, uniq % A.ncols
+        pair_counts = np.zeros((S, S), dtype=np.int64)
+        np.add.at(pair_counts, (up, xl.owner_of(ucol)), 1)
+        H = int(pair_counts.max())
+    else:
+        H = 0
+    return {"issue": issue, "ingress": ingress, "migration": migration,
+            "halo_elems": S * max(H, 1), "allgather_elems": xl.padded_length(),
+            "part": part}
+
+
+def _padding_slots(A: CSRMatrix, part: Partition, kernel: str) -> float:
+    """Wasted compute slots per shard for the padded device format."""
+    S = part.num_shards
+    per_row = csr_row_nnz(A)
+    worst = 0.0
+    for p in range(S):
+        r0, r1 = int(part.starts[p]), int(part.starts[p + 1])
+        nnz_p = int(A.row_ptr[r1] - A.row_ptr[r0])
+        if kernel == "seg":
+            slots = _round_up(max(nnz_p, 1), SEG_CHUNK)
+        else:
+            W = _round_up(int(per_row[r0:r1].max()) if r1 > r0 else 1,
+                          ELL_LANE)
+            slots = _round_up(max(r1 - r0, 1), ELL_SUBLANE) * W
+        worst = max(worst, float(slots - nnz_p))
+    return worst
+
+
+def estimate_cost(csr: CSRMatrix, plan: SpmvPlan, *,
+                  emu: EmuConfig | None = None) -> PlanCost:
+    """Analytic cost of executing SpMV under ``plan`` on the Emu model.
+
+    The matrix is reordered per ``plan.reordering`` before accounting, so
+    the returned cost is for the plan exactly as ``build_distributed``
+    would realize it.
+
+    Parameters
+    ----------
+    csr : CSRMatrix
+        Square host matrix (reorderings are symmetric permutations).
+    plan : SpmvPlan
+        Candidate configuration to score.
+    emu : EmuConfig, optional
+        Machine constants; defaults to ``EmuConfig(nodelets=plan.num_shards)``.
+
+    Returns
+    -------
+    PlanCost
+        Cycle-denominated breakdown; ``total`` is the ranking key.
+
+    Examples
+    --------
+    A banded matrix is cheaper under a block layout than a cyclic one
+    (paper Fig. 3):
+
+    >>> import numpy as np
+    >>> from repro.core.plan import estimate_cost
+    >>> from repro.core.spmv import SpmvPlan
+    >>> from repro.data.matrices import banded
+    >>> A = banded(512, 4096, 8, seed=0)
+    >>> blk = estimate_cost(A, SpmvPlan(layout="block"))
+    >>> cyc = estimate_cost(A, SpmvPlan(layout="cyclic"))
+    >>> blk.total < cyc.total
+    True
+    """
+    emu = emu or EmuConfig(nodelets=plan.num_shards)
+    perm = reordering_permutation(csr, plan.reordering, seed=plan.seed,
+                                  parts=plan.num_shards)
+    A = csr if plan.reordering == "none" else csr.permuted(perm, perm)
+    part = make_partition(A, plan.num_shards, plan.distribution)
+    base = _base_metrics(A, part, plan.layout, emu)
+    return _assemble_cost(base, _padding_slots(A, part, plan.kernel),
+                          plan.exchange, emu)
+
+
+def _assemble_cost(base: dict, pad_slots: float, exchange: str,
+                   emu: EmuConfig) -> PlanCost:
+    pad = _W_PAD * pad_slots * emu.access_cycles
+    elems = base["halo_elems"] if exchange == "halo" else \
+        base["allgather_elems"]
+    comm = _W_COMM * float(elems)
+    total = max(base["issue"], base["ingress"]) + base["migration"] + \
+        pad + comm
+    return PlanCost(issue_cycles=float(base["issue"]),
+                    ingress_cycles=float(base["ingress"]),
+                    migration_cycles=float(base["migration"]),
+                    padding_cycles=float(pad), comm_cycles=float(comm),
+                    total=float(total))
+
+
+# --------------------------------------------------------------------------
+# autotuner
+# --------------------------------------------------------------------------
+
+def autotune(csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
+             layouts: Sequence[str] = ("block", "cyclic"),
+             distributions: Sequence[str] = ("row", "nonzero"),
+             reorderings: Iterable[str] = REORDERINGS,
+             kernels: Sequence[str] = ("ell", "seg"),
+             exchanges: Sequence[str] = ("halo", "allgather"),
+             probe: int = 0, emu: EmuConfig | None = None) -> PlanChoice:
+    """Rank the candidate plan grid for one matrix.
+
+    Scores every plan in ``layouts x distributions x reorderings x kernels
+    x exchanges`` with :func:`estimate_cost` (reordered matrices and
+    per-base migration accounting are computed once and shared), then
+    optionally re-ranks the model's top candidates with a short empirical
+    probe: the Emu timeline simulator (:func:`~repro.core.emu.run_spmv`)
+    run on the ``probe`` best distinct (reordering, layout, distribution)
+    bases.  Probed candidates rank by measured seconds (model total as the
+    tiebreak) ahead of unprobed ones.
+
+    Parameters
+    ----------
+    csr : CSRMatrix
+        Square host matrix.
+    num_shards : int, optional
+        Shards/nodelets the plan targets (default 8).
+    seed : int, optional
+        Seed threaded into the stochastic reorderings (default 0).
+    layouts, distributions, reorderings, kernels, exchanges : sequence of str
+        Candidate axes; defaults are the full paper grid.
+    probe : int, optional
+        Number of distinct bases to simulate (0 = analytic only).  The
+        simulator is O(total instructions) in Python, so probing is meant
+        for scaled-down matrices (see ``benchmarks/autotune_bench.py``).
+    emu : EmuConfig, optional
+        Machine constants for both the model and the probe.
+
+    Returns
+    -------
+    PlanChoice
+        Features + full ranking, best candidate first.
+
+    Examples
+    --------
+    >>> import numpy as np
+    >>> from repro.core.plan import autotune
+    >>> from repro.data.matrices import powerlaw
+    >>> A = powerlaw(256, 2048, seed=0)
+    >>> choice = autotune(A, num_shards=4)
+    >>> choice.plan.distribution      # skewed rows -> nonzero split wins
+    'nonzero'
+    >>> len(choice.ranking) == 2 * 2 * 5 * 2 * 2
+    True
+    """
+    emu = emu or EmuConfig(nodelets=num_shards)
+
+    reordered: dict[str, CSRMatrix] = {}
+    for method in reorderings:
+        perm = reordering_permutation(csr, method, seed=seed,
+                                      parts=num_shards)
+        reordered[method] = csr if method == "none" else \
+            csr.permuted(perm, perm)
+
+    bases: dict[tuple, dict] = {}
+    pads: dict[tuple, float] = {}
+    candidates: list[RankedPlan] = []
+    for method, A in reordered.items():
+        for dist in distributions:
+            part = make_partition(A, num_shards, dist)
+            for kernel in kernels:
+                pads[(method, dist, kernel)] = _padding_slots(A, part, kernel)
+            for layout in layouts:
+                key = (method, layout, dist)
+                bases[key] = _base_metrics(A, part, layout, emu)
+                for kernel in kernels:
+                    for exchange in exchanges:
+                        plan = SpmvPlan(layout=layout, distribution=dist,
+                                        reordering=method, exchange=exchange,
+                                        kernel=kernel, num_shards=num_shards,
+                                        seed=seed)
+                        cost = _assemble_cost(bases[key],
+                                              pads[(method, dist, kernel)],
+                                              exchange, emu)
+                        candidates.append(RankedPlan(plan=plan, cost=cost))
+
+    candidates.sort(key=lambda r: r.cost.total)
+
+    n_probed = 0
+    if probe > 0:
+        probe_times: dict[tuple, tuple[float, float]] = {}
+        for cand in candidates:
+            key = (cand.plan.reordering, cand.plan.layout,
+                   cand.plan.distribution)
+            if key in probe_times:
+                continue
+            if len(probe_times) >= probe:
+                continue
+            A = reordered[cand.plan.reordering]
+            part = make_partition(A, num_shards, cand.plan.distribution)
+            res = run_spmv(A, part,
+                           make_layout(cand.plan.layout, A.ncols, num_shards),
+                           emu)
+            probe_times[key] = (float(res.seconds), float(res.bandwidth_mbs))
+        probed = []
+        for cand in candidates:
+            key = (cand.plan.reordering, cand.plan.layout,
+                   cand.plan.distribution)
+            if key in probe_times:
+                sec, mbs = probe_times[key]
+                cand = dataclasses.replace(cand, probe_seconds=sec,
+                                           probe_mbs=mbs)
+            probed.append(cand)
+        probed.sort(key=lambda r: (r.probe_seconds is None,
+                                   r.probe_seconds or 0.0, r.cost.total))
+        candidates = probed
+        n_probed = len(probe_times)
+
+    return PlanChoice(features=extract_features(csr, num_shards=num_shards),
+                      ranking=tuple(candidates), probed=n_probed)

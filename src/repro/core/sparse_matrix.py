@@ -25,6 +25,8 @@ from typing import Tuple
 import numpy as np
 
 __all__ = [
+    "ELL_LANE",
+    "ELL_SUBLANE",
     "CSRMatrix",
     "EllMatrix",
     "BcsrMatrix",
@@ -35,6 +37,13 @@ __all__ = [
     "csr_to_bcsr",
     "csr_row_nnz",
 ]
+
+#: TPU tiling of the padded ELL slab: width is rounded to a multiple of
+#: ``ELL_LANE``, rows to a multiple of ``ELL_SUBLANE``.  Single source of
+#: truth — the plan cost model (``core/plan.py``) imports these so its
+#: padding arithmetic always matches what :func:`csr_to_ell` builds.
+ELL_LANE = 128
+ELL_SUBLANE = 8
 
 
 @dataclasses.dataclass(frozen=True)
@@ -210,7 +219,7 @@ def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
-def csr_to_ell(csr: CSRMatrix, lane: int = 128, sublane: int = 8,
+def csr_to_ell(csr: CSRMatrix, lane: int = ELL_LANE, sublane: int = ELL_SUBLANE,
                max_width: int | None = None) -> EllMatrix:
     """Convert to padded ELL (+ COO overflow).
 

@@ -43,13 +43,13 @@ def _shard_map_norep(fn, **kw):
 from .layout import VectorLayout, make_layout
 from .migration import TrafficReport, count_migrations, remote_access_matrix
 from .partition import Partition, make_partition
-from .reorder import reorder
-from .sparse_matrix import CSRMatrix, csr_to_ell
+from .reorder import reordering_permutation
+from .sparse_matrix import CSRMatrix, ELL_LANE, ELL_SUBLANE, csr_to_ell
 from repro.kernels import ops as kops
 
 __all__ = ["SpmvPlan", "DistributedSpmv", "build_distributed",
            "make_spmv_fn", "make_seg_spmv_fn", "build_halo",
-           "make_halo_spmv_fn"]
+           "make_halo_spmv_fn", "local_spmv"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +72,21 @@ class SpmvPlan:
     kernel: Literal["ell", "seg"] = "ell"
     num_shards: int = 8
     seed: int = 0
+
+    @classmethod
+    def auto(cls, csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
+             probe: int = 0, **grid) -> "SpmvPlan":
+        """Pick a plan for ``csr`` with the cost-model autotuner.
+
+        Thin wrapper over :func:`repro.core.plan.autotune` (which see for
+        the candidate grid and the ``probe`` refinement); returns only the
+        winning plan.  Use ``autotune`` directly when the full ranking or
+        the JSON-serializable :class:`~repro.core.plan.PlanChoice` is
+        needed (the serving engine persists it per ingested matrix).
+        """
+        from .plan import autotune
+        return autotune(csr, num_shards=num_shards, seed=seed, probe=probe,
+                        **grid).plan
 
 
 @dataclasses.dataclass
@@ -98,6 +113,10 @@ class DistributedSpmv:
     seg_cols: np.ndarray | None = None
     seg_rows: np.ndarray | None = None
     seg_pieces: np.ndarray | None = None
+    # Symmetric permutation applied by plan.reordering: perm[old] = new.
+    # None for reordering="none"; local_spmv uses it to accept/return
+    # vectors in the caller's original index order.
+    perm: np.ndarray | None = None
 
     def x_to_device(self, x: np.ndarray) -> np.ndarray:
         return self.x_layout.to_sharded(x)
@@ -107,7 +126,14 @@ class DistributedSpmv:
 
 
 def build_distributed(csr: CSRMatrix, plan: SpmvPlan) -> DistributedSpmv:
-    A = reorder(csr, plan.reordering, seed=plan.seed, parts=plan.num_shards)
+    if csr.nrows != csr.ncols:
+        raise ValueError("paper applies symmetric reorderings to square matrices")
+    perm = None
+    A = csr
+    if plan.reordering != "none":
+        perm = reordering_permutation(csr, plan.reordering, seed=plan.seed,
+                                      parts=plan.num_shards)
+        A = csr.permuted(perm, perm)
     part = make_partition(A, plan.num_shards, plan.distribution)
     x_layout = make_layout(plan.layout, A.ncols, plan.num_shards)
     b_layout = make_layout(plan.layout, A.nrows, plan.num_shards)
@@ -116,7 +142,7 @@ def build_distributed(csr: CSRMatrix, plan: SpmvPlan) -> DistributedSpmv:
 
     S = plan.num_shards
     slabs = [csr_to_ell(A.row_slice(int(part.starts[p]), int(part.starts[p + 1])),
-                        lane=128, sublane=8) for p in range(S)]
+                        lane=ELL_LANE, sublane=ELL_SUBLANE) for p in range(S)]
     rows_pad = max(s.data.shape[0] for s in slabs)
     width = max(s.width for s in slabs)
     data = np.zeros((S, rows_pad, width), dtype=np.float32)
@@ -133,7 +159,8 @@ def build_distributed(csr: CSRMatrix, plan: SpmvPlan) -> DistributedSpmv:
         b_layout=b_layout, data=data, cols=cols,
         rows_per_shard=part.rows_per_shard().astype(np.int64),
         row_offset=part.starts[:-1].astype(np.int64),
-        traffic=traffic, shard_traffic=shard_traffic, **seg_arrays)
+        traffic=traffic, shard_traffic=shard_traffic, perm=perm,
+        **seg_arrays)
 
 
 def _build_seg_slabs(A: CSRMatrix, part: Partition) -> dict:
@@ -239,6 +266,48 @@ def make_seg_spmv_fn(dist: DistributedSpmv, mesh: Mesh, axis: str = "model",
         in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis)),
         out_specs=P(axis))
     return jax.jit(fn)
+
+
+def local_spmv(dist: DistributedSpmv, x: np.ndarray) -> np.ndarray:
+    """Single-host execution of a built plan: y = A @ x, original order.
+
+    Runs the same per-shard slabs the device path consumes, but with plain
+    numpy on one host — no mesh, no jit.  ``x`` and the returned ``y`` are
+    in the *caller's* index order; the reordering permutation recorded in
+    ``dist.perm`` is applied/inverted internally.  This is the execution
+    path for correctness tests and for small single-host serving
+    (``serve.engine.SparseMatrixEngine``).
+    """
+    if x.shape[0] != dist.matrix.ncols:
+        raise ValueError(f"x has {x.shape[0]} elements, matrix expects "
+                         f"{dist.matrix.ncols}")
+    xr = x if dist.perm is None else _apply_perm(x, dist.perm)
+    x_pad = np.zeros(dist.x_layout.padded_length(), dtype=np.float64)
+    x_pad[: dist.matrix.ncols] = xr
+
+    S = dist.plan.num_shards
+    y = np.zeros(dist.matrix.nrows, dtype=np.float64)
+    for p in range(S):
+        r = int(dist.rows_per_shard[p])
+        o = int(dist.row_offset[p])
+        if dist.plan.kernel == "seg":
+            rows_pad = int(dist.rows_per_shard.max())
+            contrib = dist.seg_vals[p].astype(np.float64) * \
+                x_pad[dist.seg_cols[p]]
+            yp = np.zeros(rows_pad + 1)
+            np.add.at(yp, dist.seg_rows[p], contrib)
+            y[o:o + r] = yp[:r]
+        else:
+            slab = dist.data[p].astype(np.float64) * x_pad[dist.cols[p]]
+            y[o:o + r] = slab.sum(axis=1)[:r]
+    return y if dist.perm is None else y[dist.perm]
+
+
+def _apply_perm(v: np.ndarray, perm: np.ndarray) -> np.ndarray:
+    """v in old order -> v in new order (perm[old] = new)."""
+    out = np.empty_like(v)
+    out[perm] = v
+    return out
 
 
 # --------------------------------------------------------------------------

@@ -4,7 +4,7 @@
 Three kernel families, one per sparse format/work-distribution choice:
 
 * **ELL** (``spmv_ell.py``) — row-tiled padded-ELL SpMV (+ COO overflow
-  tail = HYB via ``ops.hyb_spmv``).  Grid is shape-aware: (rows, width)
+  tail = HYB via :func:`hyb_spmv`).  Grid is shape-aware: (rows, width)
   tiles, so one power-law row widens every tile's reduction.
 * **BELL** (``spmv_bell.py``) — Block-ELL SpMV/SpMM over MXU-aligned dense
   blocks; how structured sparsity pays on a systolic array.
@@ -17,5 +17,37 @@ Three kernel families, one per sparse format/work-distribution choice:
 
 Every kernel has the same contract: pure-jnp oracle as the default
 execution path, ``use_kernel=True`` for the Pallas path (TPU), and
-``interpret=True`` to run the Pallas path on CPU.
+``interpret=True`` to run the Pallas path on CPU.  The public API is
+re-exported here (from ``ops.py``), so callers write
+``from repro.kernels import ell_spmv`` without caring which file owns the
+kernel.
+
+Examples
+--------
+The ELL oracle against a dense product:
+
+>>> import numpy as np
+>>> from repro.kernels import ell_spmv_ref
+>>> data = np.array([[2.0, 0.0], [1.0, 3.0]], np.float32)
+>>> cols = np.array([[1, 0], [0, 1]], np.int32)
+>>> x = np.array([1.0, 10.0], np.float32)
+>>> np.asarray(ell_spmv_ref(data, cols, x)).tolist()   # [2*10, 1*1+3*10]
+[20.0, 31.0]
+
+The segmented path built straight from a CSR matrix:
+
+>>> from repro.core.sparse_matrix import csr_from_coo, csr_to_dense
+>>> from repro.kernels import seg_from_csr, seg_spmv
+>>> A = csr_from_coo(np.array([0, 1, 1]), np.array([1, 0, 1]),
+...                  np.array([5.0, 2.0, 4.0]), (2, 2))
+>>> seg = seg_from_csr(A, chunk=128)
+>>> y = np.asarray(seg_spmv(seg, np.array([1.0, 2.0], np.float32)))
+>>> np.allclose(y, csr_to_dense(A) @ np.array([1.0, 2.0]))
+True
 """
+from .ops import (bell_from_bcsr, bell_spmm, bell_spmv, ell_spmv,
+                  ell_spmv_ref, hyb_spmv, seg_from_csr, seg_spmv,
+                  seg_spmv_ref)
+
+__all__ = ["ell_spmv", "ell_spmv_ref", "hyb_spmv", "bell_spmv", "bell_spmm",
+           "bell_from_bcsr", "seg_spmv", "seg_spmv_ref", "seg_from_csr"]

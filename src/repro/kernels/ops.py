@@ -19,8 +19,13 @@ from .spmv_seg import seg_psum as _seg_psum_pallas
 from repro.core.partition import nnz_chunk_starts
 from repro.core.sparse_matrix import SegMatrix
 
-__all__ = ["ell_spmv_ref", "ell_spmv", "hyb_spmv", "bell_spmv", "bell_spmm",
-           "bell_from_bcsr", "seg_spmv", "seg_spmv_ref", "seg_from_csr"]
+__all__ = ["SEG_CHUNK", "ell_spmv_ref", "ell_spmv", "hyb_spmv", "bell_spmv",
+           "bell_spmm", "bell_from_bcsr", "seg_spmv", "seg_spmv_ref",
+           "seg_from_csr"]
+
+#: Default elements per segmented chunk (lane-aligned).  Single source of
+#: truth shared with the plan cost model's padding arithmetic.
+SEG_CHUNK = 512
 
 ell_spmv_ref = jax.jit(ref.ell_spmv_ref)
 bell_spmv_ref = jax.jit(ref.bell_spmv_ref)
@@ -112,7 +117,7 @@ def seg_spmv(seg: "SegMatrix | tuple", x, *, num_rows: int | None = None,
     return seg_spmv_ref(vals, cols, rows, x, num_rows=num_rows)
 
 
-def seg_from_csr(csr, *, chunk: int = 512, lane: int = 128,
+def seg_from_csr(csr, *, chunk: int = SEG_CHUNK, lane: int = 128,
                  sublane: int = 8) -> SegMatrix:
     """Convert host CSRMatrix -> nonzero-balanced SegMatrix.
 

@@ -1,17 +1,25 @@
-"""Batched serving engine: prefill + decode over the distributed runtime.
+"""Batched serving engine: prefill + decode over the distributed runtime,
+plus the sparse-matrix serving path (:class:`SparseMatrixEngine`).
 
 Small-scale runnable on CPU (examples/serve_lm.py); the same step functions
-lower on the production mesh for the dry-run's decode cells.
+lower on the production mesh for the dry-run's decode cells.  The sparse
+engine autotunes an :class:`~repro.core.spmv.SpmvPlan` for every ingested
+matrix at load time (``core/plan.py``) and serves SpMV requests through the
+plan-built slabs, so callers never pick layouts/kernels by hand.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.plan import PlanChoice, autotune
+from repro.core.sparse_matrix import CSRMatrix
+from repro.core.spmv import DistributedSpmv, SpmvPlan, build_distributed, \
+    local_spmv
 from repro.models import model as mm
 from repro.models.config import ModelConfig
 
@@ -20,6 +28,87 @@ from repro.models.config import ModelConfig
 class ServeConfig:
     max_len: int = 256
     temperature: float = 0.0      # 0 = greedy
+
+
+@dataclasses.dataclass
+class IngestedMatrix:
+    """One served matrix: its autotuned choice + device-ready program."""
+
+    name: str
+    choice: PlanChoice
+    dist: DistributedSpmv
+    spmv_count: int = 0
+
+
+class SparseMatrixEngine:
+    """Serving front-end for SpMV: ingest once, autotune, serve many.
+
+    ``ingest`` runs the cost-model autotuner (optionally with an Emu-sim
+    probe) and builds the distributed program for the winning plan;
+    ``spmv`` answers y = A @ x requests in the caller's original index
+    order via the plan's slabs.  ``plans()`` exposes every decision as
+    JSON (the :class:`~repro.core.plan.PlanChoice` round-trips), so an
+    operator can audit *why* a matrix got its layout/kernel.
+    """
+
+    def __init__(self, *, num_shards: int = 8, probe: int = 0,
+                 seed: int = 0):
+        self.num_shards = num_shards
+        self.probe = probe
+        self.seed = seed
+        self._matrices: Dict[str, IngestedMatrix] = {}
+
+    def ingest(self, name: str, csr: CSRMatrix,
+               plan: SpmvPlan | None = None) -> PlanChoice:
+        """Register ``csr`` under ``name`` with a load-time-tuned plan.
+
+        Pass an explicit ``plan`` to bypass the autotuner (the choice is
+        then recorded as a single-candidate ranking with its model cost).
+        The engine's shard count is authoritative: an explicit plan is
+        re-targeted to ``self.num_shards`` so the built program, its cost,
+        and the recorded features all describe the same deployment.
+        Re-ingesting a name replaces the previous matrix.
+        """
+        from repro.core.plan import estimate_cost, RankedPlan, \
+            extract_features
+        if plan is None:
+            choice = autotune(csr, num_shards=self.num_shards,
+                              seed=self.seed, probe=self.probe)
+        else:
+            plan = dataclasses.replace(plan, num_shards=self.num_shards)
+            choice = PlanChoice(
+                features=extract_features(csr, num_shards=self.num_shards),
+                ranking=(RankedPlan(plan=plan,
+                                    cost=estimate_cost(csr, plan)),),
+                probed=0)
+        dist = build_distributed(csr, choice.plan)
+        self._matrices[name] = IngestedMatrix(name=name, choice=choice,
+                                              dist=dist)
+        return choice
+
+    def spmv(self, name: str, x: np.ndarray) -> np.ndarray:
+        """y = A @ x for the ingested matrix ``name`` (original order)."""
+        m = self._matrices[name]
+        m.spmv_count += 1
+        return local_spmv(m.dist, x)
+
+    def plan(self, name: str) -> SpmvPlan:
+        """The plan serving ``name``."""
+        return self._matrices[name].choice.plan
+
+    def plans(self) -> Dict[str, str]:
+        """name -> PlanChoice JSON for every ingested matrix."""
+        return {n: m.choice.to_json() for n, m in self._matrices.items()}
+
+    def stats(self) -> Dict[str, dict]:
+        """Lightweight per-matrix serving stats (JSON-serializable)."""
+        return {
+            n: {"plan": dataclasses.asdict(m.choice.plan),
+                "nnz": m.dist.matrix.nnz,
+                "migrations": m.dist.traffic.migrations,
+                "hotspot_share": m.dist.traffic.hotspot_share,
+                "spmv_count": m.spmv_count}
+            for n, m in self._matrices.items()}
 
 
 class Engine:

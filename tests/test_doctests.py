@@ -1,0 +1,18 @@
+"""Doctest guard: the runnable ``>>>`` examples in the documented modules
+stay correct under tier-1 (CI additionally runs ``pytest --doctest-modules``
+on the same set).
+"""
+import doctest
+
+import repro.core.plan
+import repro.core.reorder
+import repro.kernels
+
+MODULES = (repro.core.plan, repro.core.reorder, repro.kernels)
+
+
+def test_doctests_pass_and_exist():
+    for mod in MODULES:
+        result = doctest.testmod(mod, verbose=False)
+        assert result.failed == 0, f"{mod.__name__}: {result.failed} failed"
+        assert result.attempted > 0, f"{mod.__name__}: no doctests found"

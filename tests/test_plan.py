@@ -1,0 +1,138 @@
+"""Planner tests: deterministic features, JSON round-trip, auto-plan
+correctness on the synthetic suite, and the regret bound vs the Emu model.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.emu import EmuConfig, run_spmv
+from repro.core.layout import make_layout
+from repro.core.partition import make_partition
+from repro.core.plan import (MatrixFeatures, PlanChoice, autotune,
+                             estimate_cost, extract_features)
+from repro.core.reorder import REORDERINGS, reorder
+from repro.core.sparse_matrix import csr_to_dense
+from repro.core.spmv import SpmvPlan, build_distributed, local_spmv
+from repro.data.matrices import make_matrix
+
+# The ISSUE's synthetic suite: rmat, banded, power-law, dense-block
+SUITE = {
+    "rmat": 0.002,
+    "ford1": 0.05,          # banded
+    "webbase-1M": 0.001,    # power-law
+    "nd24k": 0.0005,        # dense blocks
+}
+
+
+def test_features_deterministic_for_fixed_seed():
+    A = make_matrix("rmat", scale=0.002, seed=3)
+    B = make_matrix("rmat", scale=0.002, seed=3)
+    f1 = extract_features(A, num_shards=8)
+    f2 = extract_features(B, num_shards=8)
+    assert f1 == f2
+    # features are plain scalars (JSON-able, no numpy leakage)
+    for k, v in f1.to_dict().items():
+        assert isinstance(v, (int, float)), (k, type(v))
+
+
+def test_features_read_structure():
+    """The features separate the suite archetypes the way the model needs."""
+    banded = extract_features(make_matrix("ford1", scale=0.05))
+    plaw = extract_features(make_matrix("webbase-1M", scale=0.001))
+    hot = extract_features(make_matrix("cop20k_A", scale=0.02))
+    assert banded.bandwidth_mean < plaw.bandwidth_mean
+    assert banded.row_nnz_cv < plaw.row_nnz_cv
+    # the banded mesh keeps most x loads shard-local; the scattered
+    # power-law matrix does not
+    assert banded.remote_frac < 0.5 * plaw.remote_frac
+    # the arrowhead matrix concentrates x loads on shard 0 (paper §IV-D):
+    # clearly above the uniform 1/8 share and above the banded baseline
+    assert hot.hot_col_share > 1.4 / 8
+    assert hot.hot_col_share > banded.hot_col_share
+    assert MatrixFeatures(**banded.to_dict()) == banded
+
+
+def test_plan_choice_json_roundtrip():
+    A = make_matrix("rmat", scale=0.002)
+    choice = autotune(A, num_shards=4)
+    s = choice.to_json()
+    json.loads(s)                          # really is JSON
+    back = PlanChoice.from_json(s)
+    assert back == choice
+    assert back.plan == choice.plan
+    # probe fields survive too
+    probed = autotune(A, num_shards=4, probe=2)
+    assert probed.probed == 2
+    assert probed.ranking[0].probe_seconds is not None
+    assert PlanChoice.from_json(probed.to_json()) == probed
+    # probed reports bases actually simulated, not the requested budget
+    small = autotune(A, num_shards=4, reorderings=("none",), probe=8)
+    assert small.probed == 2 * 2            # layouts x distributions
+
+
+def test_ranking_sorted_and_full_grid():
+    A = make_matrix("ford1", scale=0.05)
+    choice = autotune(A, num_shards=4)
+    totals = [r.cost.total for r in choice.ranking]
+    assert totals == sorted(totals)
+    assert len(choice.ranking) == 2 * 2 * len(REORDERINGS) * 2 * 2
+    assert choice.probed == 0
+
+
+@pytest.mark.parametrize("name", list(SUITE))
+def test_auto_plan_matches_ref_on_suite(name):
+    A = make_matrix(name, scale=SUITE[name], seed=0)
+    plan = SpmvPlan.auto(A, num_shards=4)
+    dist = build_distributed(A, plan)
+    x = np.random.default_rng(1).standard_normal(A.ncols)
+    y = local_spmv(dist, x)
+    ref = csr_to_dense(A) @ x
+    np.testing.assert_allclose(y, ref, atol=1e-6, rtol=1e-6)
+
+
+def test_estimate_cost_prefers_block_on_banded():
+    A = make_matrix("ford1", scale=0.05)
+    blk = estimate_cost(A, SpmvPlan(layout="block"))
+    cyc = estimate_cost(A, SpmvPlan(layout="cyclic"))
+    assert blk.total < cyc.total
+
+
+def test_auto_regret_within_bound_vs_emu_model():
+    """Chosen plan is never >1.25x slower than the best static plan."""
+    name, scale = "cop20k_A", 0.005
+    A = make_matrix(name, scale=scale)
+    cfg = EmuConfig(nodelets=4)
+    sim = {}
+    for reo in REORDERINGS:
+        B = reorder(A, reo, parts=4)
+        for lay in ("block", "cyclic"):
+            for strat in ("row", "nonzero"):
+                part = make_partition(B, 4, strat)
+                res = run_spmv(B, part, make_layout(lay, B.ncols, 4), cfg)
+                sim[(reo, lay, strat)] = res.seconds
+    best = min(sim.values())
+    plan = SpmvPlan.auto(A, num_shards=4, probe=8)
+    chosen = sim[(plan.reordering, plan.layout, plan.distribution)]
+    assert chosen <= 1.25 * best, (plan, chosen / best)
+
+
+def test_sparse_matrix_engine_serves_tuned_plans():
+    from repro.serve.engine import SparseMatrixEngine
+    eng = SparseMatrixEngine(num_shards=4)
+    A = make_matrix("cop20k_A", scale=0.005)
+    choice = eng.ingest("cop", A)
+    assert eng.plan("cop") == choice.plan
+    x = np.random.default_rng(2).standard_normal(A.ncols)
+    np.testing.assert_allclose(eng.spmv("cop", x), csr_to_dense(A) @ x,
+                               atol=1e-6)
+    # decisions are persisted as JSON and stats are serializable
+    assert json.loads(eng.plans()["cop"])["ranking"]
+    assert json.dumps(eng.stats())
+    # explicit plan bypasses the autotuner but still serves correctly,
+    # re-targeted to the engine's shard count (plan default is 8)
+    eng.ingest("manual", A, plan=SpmvPlan(layout="cyclic"))
+    assert eng.plan("manual").layout == "cyclic"
+    assert eng.plan("manual").num_shards == 4
+    np.testing.assert_allclose(eng.spmv("manual", x), csr_to_dense(A) @ x,
+                               atol=1e-6)

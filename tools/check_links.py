@@ -1,0 +1,59 @@
+#!/usr/bin/env python3
+"""Markdown link checker: every relative link must resolve to a real file.
+
+Dependency-free so it runs identically in CI and locally:
+
+    python tools/check_links.py README.md docs/*.md
+
+Checks inline links/images ``[text](target)``. External schemes (http/https/
+mailto) and pure in-page anchors (``#...``) are skipped; ``path#anchor``
+checks only the path part.  Exits non-zero listing every broken link.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# [text](target) — target without whitespace; tolerates image links.
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SKIP = ("http://", "https://", "mailto:", "#")
+
+
+def check_file(md: Path) -> list[str]:
+    errors = []
+    text = md.read_text(encoding="utf-8")
+    # Drop fenced code blocks: they hold example output, not links.
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(_SKIP):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        resolved = (md.parent / path).resolve()
+        if not resolved.exists():
+            errors.append(f"{md}: broken link -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    files = [Path(a) for a in argv] or sorted(
+        p for p in [Path("README.md"), *Path("docs").glob("*.md")]
+        if p.exists())
+    errors = []
+    for md in files:
+        if not md.exists():
+            errors.append(f"{md}: file not found")
+            continue
+        errors.extend(check_file(md))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} file(s): "
+          f"{'OK' if not errors else f'{len(errors)} broken link(s)'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
