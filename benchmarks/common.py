@@ -1,9 +1,13 @@
 """Shared benchmark utilities: the scaled paper suite + CSV emission.
 
-All figure benchmarks run the Emu machine model on pattern-preserving
-scaled-down versions of Table I (full-scale migration *counting* is exact;
-the timeline simulator runs scaled for CPU-time reasons — scales noted in
-every CSV row).
+All figure benchmarks run the Emu machine model on the Table I suite.
+Migration *counting* is exact and always runs at ``COUNT_SCALES``.  The
+timeline simulator historically ran tiny ``SIM_SCALES`` because the
+Python-loop engine was O(total instructions); the vectorized tick engine
+(PR 3) runs the **full synthetic matrix sizes** (``FULL_SIM_SCALES``) for
+the Fig. 6/8/11 benchmarks — only the two largest matrices stay capped,
+by host memory for the flattened segment traces, not by simulator speed.
+Every CSV row carries its scale through these tables.
 """
 from __future__ import annotations
 
@@ -15,7 +19,8 @@ from repro.core.partition import make_partition
 from repro.core.reorder import reorder
 from repro.data.matrices import make_matrix
 
-# name -> simulator scale (timeline sim is O(total instrs) in python)
+# name -> legacy simulator scale (the Python-loop engine is O(total
+# instrs); these sizes keep it usable for equivalence tests and --fast).
 SIM_SCALES = {
     "ford1": 0.25,
     "cop20k_A": 0.02,
@@ -23,6 +28,19 @@ SIM_SCALES = {
     "rmat": 0.01,
     "nd24k": 0.002,
     "audikw_1": 0.001,
+}
+
+# name -> vectorized-engine simulator scale: the full Table-I synthetic
+# sizes wherever the flattened traces fit comfortably in host memory
+# (~16 B per stored nonzero); nd24k (28.7M nnz) and audikw_1 (77.6M nnz)
+# are capped by that memory bound, not by simulator throughput.
+FULL_SIM_SCALES = {
+    "ford1": 1.0,
+    "cop20k_A": 1.0,
+    "webbase-1M": 1.0,
+    "rmat": 1.0,
+    "nd24k": 0.5,
+    "audikw_1": 0.1,
 }
 
 COUNT_SCALES = {       # exact migration counting is vectorized -> larger
@@ -36,12 +54,21 @@ COUNT_SCALES = {       # exact migration counting is vectorized -> larger
 
 
 def sim_bandwidth(name: str, *, layout="block", strategy="nonzero",
-                  reordering="none", seed=0, cfg: EmuConfig | None = None):
-    A = make_matrix(name, scale=SIM_SCALES[name], seed=seed)
+                  reordering="none", seed=0, cfg: EmuConfig | None = None,
+                  scale: float | None = None, engine: str = "vectorized"):
+    """Simulate one suite matrix; returns (matrix, EmuResult).
+
+    ``scale`` defaults to the legacy ``SIM_SCALES`` entry; the full-size
+    figure benchmarks pass ``FULL_SIM_SCALES[name]``.  ``engine`` selects
+    the tick engine (``vectorized`` / ``numpy`` / ``cext`` /
+    ``reference``).
+    """
+    A = make_matrix(name, scale=SIM_SCALES[name] if scale is None else scale,
+                    seed=seed)
     A = reorder(A, reordering, seed=seed)
     part = make_partition(A, 8, strategy)
     res = run_spmv(A, part, make_layout(layout, A.ncols, 8),
-                   cfg or EmuConfig())
+                   cfg or EmuConfig(), engine=engine)
     return A, res
 
 

@@ -1,15 +1,18 @@
 """Fig. 6 — SpMV bandwidth: row vs non-zero work distribution (Emu model).
 Paper: nonzero up to 3.34x better despite ~1.69x more migrations.
 
-Run standalone to sweep a chosen distribution against the ``row`` baseline:
+Runs the **full synthetic matrix sizes** (``common.FULL_SIM_SCALES``) on
+the vectorized Emu engine by default.  Run standalone to sweep a chosen
+distribution against the ``row`` baseline:
 
     python -m benchmarks.fig6_distribution --distribution nnz \
         --matrices webbase-1M rmat
+    python -m benchmarks.fig6_distribution --fast     # legacy small sizes
 
 Each CSV row reports bandwidth, the migration ratio, and the per-nodelet
 instruction-count CV from the tick simulator (``row_cv`` vs ``<dist>_cv``)
-— the paper's Fig. 7 balance metric.  On the power-law generators the
-nonzero split must come out with the lower CV.
+— the paper's Fig. 7 balance metric (``EmuResult.instr_cv``).  On the
+power-law generators the nonzero split must come out with the lower CV.
 """
 import argparse
 
@@ -17,25 +20,27 @@ from repro.core.layout import make_layout
 from repro.core.migration import count_migrations
 from repro.core.partition import make_partition
 from repro.data.matrices import make_matrix
-from .common import COUNT_SCALES, SIM_SCALES, emit, sim_bandwidth
+from .common import COUNT_SCALES, FULL_SIM_SCALES, SIM_SCALES, emit, \
+    sim_bandwidth
 
 
-def run(distribution: str = "nonzero", matrices=None):
-    names = matrices or list(SIM_SCALES)
+def run(distribution: str = "nonzero", matrices=None, fast: bool = False):
+    names = matrices or list(FULL_SIM_SCALES)
+    scales = SIM_SCALES if fast else FULL_SIM_SCALES
     rows = []
     for name in names:
         bws, cvs, migs = {}, {}, {}
         for strat in ("row", distribution):
-            _, res = sim_bandwidth(name, strategy=strat)
+            _, res = sim_bandwidth(name, strategy=strat, scale=scales[name])
             bws[strat] = res.bandwidth_mbs
-            cvs[strat] = res.residency_cv
+            cvs[strat] = res.instr_cv
         A = make_matrix(name, scale=COUNT_SCALES[name])
         for strat in ("row", distribution):
             p = make_partition(A, 8, strat)
             migs[strat] = count_migrations(
                 A, p, make_layout("block", A.ncols, 8),
                 make_layout("block", A.nrows, 8)).migrations
-        rows.append((f"fig6/{name}", round(bws["row"], 1),
+        rows.append((f"fig6/{name}@{scales[name]}", round(bws["row"], 1),
                      round(bws[distribution], 1),
                      round(bws[distribution] / max(bws["row"], 1e-9), 2),
                      round(migs[distribution] / max(migs["row"], 1), 2),
@@ -53,5 +58,8 @@ if __name__ == "__main__":
     ap.add_argument("--matrices", nargs="*", default=None,
                     choices=list(SIM_SCALES),
                     help="subset of the paper suite (default: all)")
+    ap.add_argument("--fast", action="store_true",
+                    help="legacy scaled-down workloads (SIM_SCALES)")
     args = ap.parse_args()
-    run(distribution=args.distribution, matrices=args.matrices)
+    run(distribution=args.distribution, matrices=args.matrices,
+        fast=args.fast)

@@ -1,27 +1,45 @@
 """Figs. 8 & 11 — per-nodelet thread residency over time on cop20k_A,
-original vs random reordering (the hot-spot collapse and its mitigation)."""
+original vs random reordering (the hot-spot collapse and its mitigation).
+
+Runs the **full synthetic matrix size** (120k rows / 2.6M nnz) on the
+vectorized Emu engine by default; pass ``fast=True`` (or run via
+``python -m benchmarks.run``) for the legacy scaled-down workload.
+
+    PYTHONPATH=src python -m benchmarks.fig8_residency
+"""
+import argparse
+
 import numpy as np
-from .common import emit, sim_bandwidth
+
+from .common import FULL_SIM_SCALES, SIM_SCALES, emit, sim_bandwidth
 
 
-def run():
+def run(fast: bool = False):
+    scale = (SIM_SCALES if fast else FULL_SIM_SCALES)["cop20k_A"]
     rows = []
     for reord in ("none", "random"):
-        _, res = sim_bandwidth("cop20k_A", reordering=reord)
+        _, res = sim_bandwidth("cop20k_A", reordering=reord, scale=scale)
         r = res.residency
         # sample 8 time points across the run
         idx = np.linspace(0, len(r) - 1, 8).astype(int)
         for i in idx:
-            rows.append((f"fig8/cop20k_A/{reord}", i,
-                         *[int(v) for v in r[i]]))
-        # summary: mean residency of nodelet 0 vs others mid-run
+            rows.append((f"fig8/cop20k_A@{scale}/{reord}",
+                         i * res.sample_every, *[int(v) for v in r[i]]))
+        # summary: mean residency of nodelet 0 vs others mid-run, plus the
+        # residency CV (time-averaged per-nodelet skew) and tick count
         mid = r[len(r) // 4: max(len(r) // 2, len(r) // 4 + 1)]
-        rows.append((f"fig8/cop20k_A/{reord}/summary", -1,
+        rows.append((f"fig8/cop20k_A@{scale}/{reord}/summary", -1,
                      round(float(mid.mean(axis=0)[0]), 1),
                      round(float(np.delete(mid.mean(axis=0), 0).mean()), 1),
-                     res.ticks, round(res.bandwidth_mbs, 1), 0, 0, 0))
-    emit(rows, ("name", "tick", "n0", "n1", "n2", "n3", "n4", "n5", "n6/x", "n7/x"))
+                     res.ticks, round(res.bandwidth_mbs, 1),
+                     round(res.residency_cv, 3), round(res.instr_cv, 3), 0))
+    emit(rows, ("name", "tick", "n0", "n1", "n2", "n3", "n4", "n5",
+                "n6/x", "n7/x"))
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true",
+                    help="legacy scaled-down workload (SIM_SCALES)")
+    args = ap.parse_args()
+    run(fast=args.fast)

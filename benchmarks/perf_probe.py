@@ -1,11 +1,18 @@
-"""Per-cell perf probe for the §Perf hillclimb.
+"""Per-cell perf probe for the §Perf hillclimb + the Emu engine probe.
 
-Compiles one (arch, shape) cell with RunConfig overrides and prints the
-roofline terms + the top-N collective ops — the "profile" the iteration
-loop reads (no real TPU, so the lowered IR is the profiler).
+TPU mode compiles one (arch, shape) cell with RunConfig overrides and
+prints the roofline terms + the top-N collective ops — the "profile" the
+iteration loop reads (no real TPU, so the lowered IR is the profiler).
 
     PYTHONPATH=src python -m benchmarks.perf_probe gemma_7b train_4k \
         --fsdp 1 --grad-accum 8 --top 8
+
+Emu mode times the tick engines on the Fig. 8 residency workload and
+appends a ticks/sec trajectory entry to ``BENCH_emu.json`` (repo root):
+
+    PYTHONPATH=src python -m benchmarks.perf_probe --emu
+    PYTHONPATH=src python -m benchmarks.perf_probe --emu --smoke \
+        --budget-seconds 60       # CI: fail if the vectorized path is slow
 """
 from __future__ import annotations
 
@@ -15,7 +22,10 @@ os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
                            " --xla_force_host_platform_device_count=512").strip()
 
 import argparse
+import json
 import re
+import sys
+import time
 
 import numpy as np
 
@@ -44,10 +54,108 @@ def top_collectives(hlo: str, n: int = 10):
     return rows[:n]
 
 
+_BENCH_PATH = os.path.normpath(
+    os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                 "..", "BENCH_emu.json"))
+
+
+def _time_engine(engine: str, scale: float):
+    """Wall-clock the Fig. 8 workload (cop20k_A, original order) once."""
+    from repro.core.emu import EmuConfig, build_thread_traces, simulate, \
+        useful_bytes
+    from repro.core.layout import make_layout
+    from repro.core.partition import make_partition
+    from repro.data.matrices import make_matrix
+
+    cfg = EmuConfig()
+    A = make_matrix("cop20k_A", scale=scale)
+    part = make_partition(A, 8, "nonzero")
+    lay = make_layout("block", A.ncols, 8)
+    t0 = time.perf_counter()
+    nodes, weights, homes = build_thread_traces(A, part, lay,
+                                                cfg.threads_per_nodelet)
+    t1 = time.perf_counter()
+    res = simulate(nodes, weights, homes, cfg, useful_bytes(A),
+                   engine=engine)
+    t2 = time.perf_counter()
+    return {"trace_seconds": round(t1 - t0, 4),
+            "sim_seconds": round(t2 - t1, 4),
+            "ticks": res.ticks,
+            "ticks_per_sec": round(res.ticks / max(t2 - t1, 1e-9)),
+            "residency_rows": int(res.residency.shape[0]),
+            "sample_every": res.sample_every}
+
+
+def _emu_backend() -> str:
+    from repro.core import _emu_cext
+    return "cext" if _emu_cext.load_kernel() is not None else "numpy"
+
+
+def run_emu_probe(scale: float, ref_scale: float, smoke: bool,
+                  budget_seconds: float, out: str | None) -> int:
+    """Time the Fig. 8 workload; record a BENCH_emu.json trajectory entry.
+
+    Full mode measures the vectorized engine at ``scale`` and the
+    reference engine at ``ref_scale`` (the legacy fig8 size — the Python
+    loop cannot run the full matrix in reasonable time), and appends the
+    entry.  Smoke mode runs the vectorized engine only and fails (exit 1)
+    when it misses ``budget_seconds`` — the CI tripwire against the
+    Python-loop path regressing back into the default.
+    """
+    entry = {"workload": "fig8/cop20k_A", "backend": _emu_backend(),
+             "scale": scale, "vectorized": _time_engine("vectorized", scale)}
+    vec_wall = entry["vectorized"]["trace_seconds"] + \
+        entry["vectorized"]["sim_seconds"]
+    if smoke:
+        ok = vec_wall <= budget_seconds
+        print(f"emu smoke: backend={entry['backend']} scale={scale} "
+              f"wall={vec_wall:.2f}s budget={budget_seconds:.0f}s "
+              f"ticks/sec={entry['vectorized']['ticks_per_sec']} "
+              f"-> {'PASS' if ok else 'FAIL'}")
+        return 0 if ok else 1
+    ref = _time_engine("reference", ref_scale)
+    vec_at_ref = _time_engine("vectorized", ref_scale)
+    speedup = ref["sim_seconds"] / max(vec_at_ref["sim_seconds"], 1e-9)
+    entry.update({"ref_scale": ref_scale, "reference": ref,
+                  "vectorized_at_ref_scale": vec_at_ref,
+                  "sim_speedup_at_ref_scale": round(speedup, 1)})
+    path = out or _BENCH_PATH
+    doc = {"entries": []}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                loaded = json.load(f)
+            if isinstance(loaded.get("entries"), list):
+                doc = loaded
+        except (OSError, ValueError):
+            pass                 # corrupt/truncated file: start fresh
+    doc["entries"].append(entry)
+    tmp = f"{path}.tmp{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    os.replace(tmp, path)
+    print(json.dumps(entry, indent=2))
+    print(f"# speedup {speedup:.1f}x (bar 20x) -> "
+          f"{'PASS' if speedup >= 20 else 'FAIL'}; recorded in {path}")
+    return 0 if speedup >= 20 else 1
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("arch")
-    ap.add_argument("shape")
+    ap.add_argument("arch", nargs="?")
+    ap.add_argument("shape", nargs="?")
+    ap.add_argument("--emu", action="store_true",
+                    help="probe the Emu tick engines instead of a TPU cell")
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="fig8 matrix scale for the vectorized timing")
+    ap.add_argument("--ref-scale", type=float, default=0.02,
+                    help="scale for the reference-vs-vectorized speedup")
+    ap.add_argument("--smoke", action="store_true",
+                    help="vectorized-only wall-clock budget check (CI)")
+    ap.add_argument("--budget-seconds", type=float, default=60.0)
+    ap.add_argument("--out", default=None,
+                    help="BENCH_emu.json path (default: repo root)")
     ap.add_argument("--fsdp", type=int, default=-1)
     ap.add_argument("--grad-accum", type=int, default=-1)
     ap.add_argument("--remat", type=int, default=1)
@@ -55,6 +163,12 @@ def main():
     ap.add_argument("--top", type=int, default=10)
     ap.add_argument("--multi-pod", action="store_true")
     args = ap.parse_args()
+
+    if args.emu:
+        sys.exit(run_emu_probe(args.scale, args.ref_scale, args.smoke,
+                               args.budget_seconds, args.out))
+    if args.arch is None or args.shape is None:
+        ap.error("arch and shape are required unless --emu is given")
 
     from repro.configs.registry import get_config
     from repro.launch.dryrun import analyze, lower_cell, _partial_unroll

@@ -14,9 +14,11 @@ def main() -> None:
                    fig8_residency, fig10_reorder, fig12_cache, kernels_bench)
     sections = [
         ("Fig.3 cyclic-vs-block", fig3_layout.run),
-        ("Fig.6 row-vs-nonzero", fig6_distribution.run),
+        # fast=True keeps the all-sections sweep snappy; run the fig6/fig8
+        # modules standalone for the full synthetic matrix sizes.
+        ("Fig.6 row-vs-nonzero", lambda: fig6_distribution.run(fast=True)),
         ("Fig.7 mem-instr CV", fig7_cv.run),
-        ("Fig.8/11 residency", fig8_residency.run),
+        ("Fig.8/11 residency", lambda: fig8_residency.run(fast=True)),
         ("Fig.10 reorderings (Emu)", fig10_reorder.run),
         ("Fig.12 reorderings (cache CPU)", fig12_cache.run),
         ("kernel microbench", kernels_bench.run),

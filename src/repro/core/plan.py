@@ -18,10 +18,11 @@ policy, in the spirit of feature-based SpMV optimization selection
    counts of :mod:`repro.core.migration`; TPU-side terms (ELL padding,
    collective volume) follow :mod:`repro.core.cache_model`'s style of
    analytic accounting.
-3. :func:`autotune` — score the full candidate grid, optionally refine the
-   top candidates with a short empirical probe (the Emu timeline simulator,
-   :func:`~repro.core.emu.run_spmv`), and return a ranked, JSON-
-   serializable :class:`PlanChoice`.
+3. :func:`autotune` — score the full candidate grid, refine the top
+   candidates with a short empirical probe (the vectorized Emu timeline
+   simulator, :func:`~repro.core.emu.run_spmv`; on by default, see
+   :data:`DEFAULT_PROBE`), and return a ranked, JSON-serializable
+   :class:`PlanChoice`.
 
 ``SpmvPlan.auto(csr)`` (in :mod:`repro.core.spmv`) is the one-call
 entry point; ``serve.engine.SparseMatrixEngine`` applies it to every
@@ -44,8 +45,14 @@ from .sparse_matrix import CSRMatrix, ELL_LANE, ELL_SUBLANE, csr_row_nnz
 from .spmv import SpmvPlan
 from repro.kernels.ops import SEG_CHUNK
 
-__all__ = ["MatrixFeatures", "PlanCost", "RankedPlan", "PlanChoice",
-           "extract_features", "estimate_cost", "autotune"]
+__all__ = ["DEFAULT_PROBE", "MatrixFeatures", "PlanCost", "RankedPlan",
+           "PlanChoice", "extract_features", "estimate_cost", "autotune"]
+
+#: Bases the autotuner re-ranks with the Emu timeline simulator when the
+#: caller does not pass ``probe``.  Probing is on by default since the
+#: vectorized tick engine made a probe cost milliseconds instead of
+#: minutes; pass ``probe=0`` for the analytic-only ranking.
+DEFAULT_PROBE = 4
 
 #: Weight of the TPU-side padding term relative to Emu issue cycles.  Small
 #: enough that Emu-visible terms dominate across (layout, distribution,
@@ -381,7 +388,8 @@ def autotune(csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
              reorderings: Iterable[str] = REORDERINGS,
              kernels: Sequence[str] = ("ell", "seg"),
              exchanges: Sequence[str] = ("halo", "allgather"),
-             probe: int = 0, emu: EmuConfig | None = None) -> PlanChoice:
+             probe: int | None = None,
+             emu: EmuConfig | None = None) -> PlanChoice:
     """Rank the candidate plan grid for one matrix.
 
     Scores every plan in ``layouts x distributions x reorderings x kernels
@@ -404,9 +412,11 @@ def autotune(csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
     layouts, distributions, reorderings, kernels, exchanges : sequence of str
         Candidate axes; defaults are the full paper grid.
     probe : int, optional
-        Number of distinct bases to simulate (0 = analytic only).  The
-        simulator is O(total instructions) in Python, so probing is meant
-        for scaled-down matrices (see ``benchmarks/autotune_bench.py``).
+        Number of distinct bases to simulate; defaults to
+        :data:`DEFAULT_PROBE` (0 = analytic only).  The probe runs the
+        vectorized Emu engine, so re-ranking is cheap enough to stay on
+        for serving-time ingestion (``serve.engine.SparseMatrixEngine``);
+        ``benchmarks/autotune_bench.py`` checks the resulting regret.
     emu : EmuConfig, optional
         Machine constants for both the model and the probe.
 
@@ -422,12 +432,15 @@ def autotune(csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
     >>> from repro.data.matrices import powerlaw
     >>> A = powerlaw(256, 2048, seed=0)
     >>> choice = autotune(A, num_shards=4)
+    >>> choice.probed                 # simulator re-ranking, on by default
+    4
     >>> choice.plan.distribution      # skewed rows -> nonzero split wins
     'nonzero'
     >>> len(choice.ranking) == 2 * 2 * 5 * 2 * 2
     True
     """
     emu = emu or EmuConfig(nodelets=num_shards)
+    probe = DEFAULT_PROBE if probe is None else probe
 
     reordered: dict[str, CSRMatrix] = {}
     for method in reorderings:

@@ -75,12 +75,13 @@ class SpmvPlan:
 
     @classmethod
     def auto(cls, csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
-             probe: int = 0, **grid) -> "SpmvPlan":
+             probe: int | None = None, **grid) -> "SpmvPlan":
         """Pick a plan for ``csr`` with the cost-model autotuner.
 
         Thin wrapper over :func:`repro.core.plan.autotune` (which see for
-        the candidate grid and the ``probe`` refinement); returns only the
-        winning plan.  Use ``autotune`` directly when the full ranking or
+        the candidate grid and the ``probe`` refinement — simulator
+        re-ranking of the top ``plan.DEFAULT_PROBE`` bases unless
+        overridden); returns only the winning plan.  Use ``autotune`` directly when the full ranking or
         the JSON-serializable :class:`~repro.core.plan.PlanChoice` is
         needed (the serving engine persists it per ingested matrix).
         """
@@ -335,15 +336,18 @@ def build_halo(dist: DistributedSpmv) -> HaloProgram:
     S = dist.plan.num_shards
     lay = dist.x_layout
     per = lay.padded_length() // S
-    owners = lay.owner_of(dist.cols.reshape(S, -1))
-    # active mask: padded ELL slots point at col 0 with value 0; they can
-    # be treated like any access (value 0 nullifies them).
+    # Padded ELL slots (and stored explicit zeros) carry value 0 and point
+    # at col 0; they contribute nothing to y, so they must not widen the
+    # halo — otherwise every shard p != 0 appears to read global id 0 from
+    # shard 0 and H (hence comm_elems_per_shard) is inflated.
     needed = [[None] * S for _ in range(S)]
     for p in range(S):
         cols_p = dist.cols[p].reshape(-1)
+        act_p = dist.data[p].reshape(-1) != 0
         own_p = lay.owner_of(cols_p)
         for q in range(S):
-            ids = np.unique(cols_p[own_p == q]) if q != p else np.zeros(0, np.int64)
+            ids = np.unique(cols_p[act_p & (own_p == q)]) if q != p \
+                else np.zeros(0, np.int64)
             needed[p][q] = ids
     H = max((ids.size for row in needed for ids in row), default=1)
     H = max(H, 1)
@@ -363,7 +367,8 @@ def build_halo(dist: DistributedSpmv) -> HaloProgram:
         own_p = lay.owner_of(cols_p)
         local = lay.local_index(cols_p)
         remap = np.where(own_p == p, local, 0)
-        rem_mask = own_p != p
+        # Zero-value slots keep remap 0: x_local[0] times value 0 is 0.
+        rem_mask = (own_p != p) & (dist.data[p] != 0)
         if rem_mask.any():
             flat = cols_p[rem_mask]
             remap_rem = np.array([recv_pos[p][int(g)] for g in flat],

@@ -43,15 +43,18 @@ class IngestedMatrix:
 class SparseMatrixEngine:
     """Serving front-end for SpMV: ingest once, autotune, serve many.
 
-    ``ingest`` runs the cost-model autotuner (optionally with an Emu-sim
-    probe) and builds the distributed program for the winning plan;
+    ``ingest`` runs the cost-model autotuner (with Emu-simulator probe
+    re-ranking by default — the vectorized tick engine makes a probe cost
+    milliseconds, so serving ingestion gets measured rankings, not just
+    analytic ones; pass ``probe=0`` to opt out) and builds the
+    distributed program for the winning plan;
     ``spmv`` answers y = A @ x requests in the caller's original index
     order via the plan's slabs.  ``plans()`` exposes every decision as
     JSON (the :class:`~repro.core.plan.PlanChoice` round-trips), so an
     operator can audit *why* a matrix got its layout/kernel.
     """
 
-    def __init__(self, *, num_shards: int = 8, probe: int = 0,
+    def __init__(self, *, num_shards: int = 8, probe: int | None = None,
                  seed: int = 0):
         self.num_shards = num_shards
         self.probe = probe

@@ -1,0 +1,219 @@
+"""Engine equivalence for the Emu tick simulator + halo padding fixes.
+
+The vectorized engines (pure numpy and, where a C toolchain exists, the
+compiled tick kernel) must be **tick-for-tick identical** to the legacy
+per-thread Python loop (``simulate_reference``): same tick counts, same
+migration totals, same per-nodelet instruction counts, same residency
+traces.  The suite sweeps the synthetic archetypes (power-law, banded,
+uniform) across both vector layouts and both work distributions, plus
+congestion-heavy machine configs that exercise queue throttling,
+destination backpressure and the trickle-credit floor.
+
+Also pins the `build_halo` padded-slot fix: zero-value ELL slots (padding
+or stored explicit zeros) must not widen the halo.
+"""
+import numpy as np
+import pytest
+
+from repro.core import _emu_cext
+from repro.core.emu import (EmuConfig, build_thread_traces, run_spmv,
+                            simulate, simulate_reference)
+from repro.core.layout import make_layout
+from repro.core.partition import make_partition
+from repro.core.sparse_matrix import csr_from_coo
+from repro.core.spmv import SpmvPlan, build_distributed, build_halo
+from repro.data.matrices import banded, powerlaw
+
+# Small machine so the O(threads) reference loop stays affordable, with a
+# queue small enough that the congestion/throttling paths actually fire.
+CFG = EmuConfig(nodelets=4, threads_per_nodelet=16, migration_queue_cap=8,
+                me_rate=3, ingress_rate=3, resident_cap=20,
+                latency_hide_threads=8)
+
+ENGINES = ["numpy"]
+if _emu_cext.load_kernel() is not None:
+    ENGINES.append("cext")
+
+
+def uniform(M: int, nnz: int, *, seed: int = 0):
+    """Uniformly scattered random pattern (the suite's third archetype)."""
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, M, nnz)
+    cols = rng.integers(0, M, nnz)
+    vals = rng.standard_normal(nnz)
+    return csr_from_coo(np.concatenate([rows, np.arange(M)]),
+                        np.concatenate([cols, np.arange(M)]),
+                        np.concatenate([vals, np.ones(M)]), (M, M))
+
+
+MATRICES = {
+    "powerlaw": lambda: powerlaw(192, 1800, seed=1),
+    "banded": lambda: banded(192, 1500, 6, seed=2),
+    "uniform": lambda: uniform(192, 1500, seed=3),
+}
+
+
+def assert_equivalent(a, b):
+    assert a.ticks == b.ticks
+    assert a.migrations == b.migrations
+    assert a.seconds == b.seconds
+    assert a.sample_every == b.sample_every
+    np.testing.assert_array_equal(a.instr_per_nodelet, b.instr_per_nodelet)
+    np.testing.assert_array_equal(a.residency, b.residency)
+
+
+def workload(matrix_key, layout, distribution, cfg=CFG):
+    A = MATRICES[matrix_key]()
+    part = make_partition(A, cfg.nodelets, distribution)
+    lay = make_layout(layout, A.ncols, cfg.nodelets)
+    return build_thread_traces(A, part, lay, cfg.threads_per_nodelet)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("matrix_key", list(MATRICES))
+@pytest.mark.parametrize("layout", ["block", "cyclic"])
+@pytest.mark.parametrize("distribution", ["row", "nnz"])
+def test_engine_matches_reference(engine, matrix_key, layout, distribution):
+    nodes, weights, homes = workload(matrix_key, layout, distribution)
+    ref = simulate_reference(nodes, weights, homes, CFG, 1e6)
+    fast = simulate(nodes, weights, homes, CFG, 1e6, engine=engine)
+    assert ref.ticks < CFG.max_ticks          # the workload terminates
+    assert_equivalent(fast, ref)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_engine_matches_reference_under_heavy_congestion(engine):
+    """Tiny queues + slow Migration Engine: throttle cap, congestion floor,
+    rate floor and destination-credit floor all bind."""
+    cfg = EmuConfig(nodelets=4, threads_per_nodelet=16,
+                    migration_queue_cap=4, me_rate=1, ingress_rate=1,
+                    resident_cap=17, latency_hide_threads=16,
+                    congestion_floor=0.5)
+    A = MATRICES["powerlaw"]()
+    part = make_partition(A, cfg.nodelets, "row")
+    lay = make_layout("cyclic", A.ncols, cfg.nodelets)
+    nodes, weights, homes = build_thread_traces(A, part, lay,
+                                                cfg.threads_per_nodelet)
+    ref = simulate_reference(nodes, weights, homes, cfg, 1e6)
+    fast = simulate(nodes, weights, homes, cfg, 1e6, engine=engine)
+    assert ref.migrations > 0
+    assert_equivalent(fast, ref)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_residency_sampling_stride_is_honored(engine):
+    """target_samples bounds the stored trace in *both* engines: the
+    stride is derived from the workload, not hardcoded to 1."""
+    cfg = EmuConfig(nodelets=4, threads_per_nodelet=16,
+                    migration_queue_cap=8, me_rate=3, ingress_rate=3,
+                    resident_cap=20, latency_hide_threads=8,
+                    target_samples=8)
+    nodes, weights, homes = workload("banded", "block", "row", cfg)
+    ref = simulate_reference(nodes, weights, homes, cfg, 1e6)
+    fast = simulate(nodes, weights, homes, cfg, 1e6, engine=engine)
+    assert ref.sample_every > 1
+    assert ref.residency.shape[0] == -(-ref.ticks // ref.sample_every)
+    assert ref.residency.shape[0] < ref.ticks
+    assert_equivalent(fast, ref)
+
+
+def test_run_spmv_default_engine_matches_reference():
+    """The public entry point's default engine is pinned too."""
+    A = MATRICES["banded"]()
+    part = make_partition(A, CFG.nodelets, "nnz")
+    lay = make_layout("block", A.ncols, CFG.nodelets)
+    ref = run_spmv(A, part, lay, CFG, engine="reference")
+    fast = run_spmv(A, part, lay, CFG)
+    assert_equivalent(fast, ref)
+    assert fast.bandwidth_mbs == ref.bandwidth_mbs
+
+
+def test_cv_metrics_are_distinct():
+    """instr_cv is the Fig. 7 balance metric; residency_cv reads the
+    trace.  (residency_cv used to silently alias instr_cv.)"""
+    A = MATRICES["powerlaw"]()
+    part = make_partition(A, CFG.nodelets, "row")
+    res = run_spmv(A, part, make_layout("block", A.ncols, CFG.nodelets), CFG)
+    m = res.instr_per_nodelet
+    assert res.instr_cv == pytest.approx(float(m.std() / m.mean()))
+    r = res.residency.astype(np.float64).mean(axis=0)
+    assert res.residency_cv == pytest.approx(float(r.std() / r.mean()))
+    assert res.instr_cv != res.residency_cv
+
+
+# ---------------------------------------------------------------------------
+# build_halo: zero-value slots must not widen the halo
+# ---------------------------------------------------------------------------
+
+def expected_halo(dist):
+    """Brute-force H from the built slabs, counting value!=0 slots only."""
+    S = dist.plan.num_shards
+    lay = dist.x_layout
+    H = 0
+    for p in range(S):
+        cols = dist.cols[p].reshape(-1)
+        vals = dist.data[p].reshape(-1)
+        own = lay.owner_of(cols)
+        for q in range(S):
+            if q == p:
+                continue
+            ids = np.unique(cols[(own == q) & (vals != 0)])
+            H = max(H, ids.size)
+    return max(H, 1)
+
+
+def test_halo_ignores_padded_ell_slots():
+    """Padded ELL slots point at (col 0, value 0); before the fix every
+    shard p != 0 counted global id 0 as a remote read from shard 0, so a
+    shard whose widest exchange is with shard 0 reported H one too large.
+    """
+    M, S, k = 256, 4, 5
+    # shard 1 (rows 64..127 under the block row split) reads remote
+    # columns 1..k, all owned by shard 0; column 0 itself is never read.
+    rows = [64] * k + list(range(M))
+    cols = list(range(1, k + 1)) + list(range(M))
+    vals = np.ones(len(rows))
+    A = csr_from_coo(np.array(rows), np.array(cols), vals, (M, M))
+    dist = build_distributed(A, SpmvPlan(layout="block", distribution="row",
+                                         exchange="halo", num_shards=S))
+    # row 64 has k+1 entries, everything else 1 -> the slabs are padded
+    assert (dist.data == 0).any()
+    halo = build_halo(dist)
+    assert halo.halo == k                       # k+1 under the old bug
+    assert halo.comm_elems_per_shard == S * k
+    assert halo.halo == expected_halo(dist)
+
+
+def test_halo_matches_brute_force_on_random_matrix():
+    A = uniform(256, 1200, seed=5)
+    dist = build_distributed(A, SpmvPlan(layout="block", distribution="row",
+                                         exchange="halo", num_shards=4))
+    halo = build_halo(dist)
+    assert halo.halo == expected_halo(dist)
+    assert halo.comm_elems_per_shard == 4 * halo.halo
+
+
+def test_halo_unchanged_by_rows_of_explicit_zeros():
+    """Appending rows of stored explicit zeros (same dims, empty rows gain
+    zero-valued entries) must not change the halo exchange."""
+    M, S = 256, 4
+    rng = np.random.default_rng(7)
+    # entries only in the first 200 rows; rows 200.. are empty
+    rows = rng.integers(0, 200, 900)
+    cols = rng.integers(0, M, 900)
+    vals = rng.standard_normal(900)
+    A = csr_from_coo(rows, cols, vals, (M, M))
+    # the same matrix, but the empty tail rows now hold explicit zeros
+    # pointing at remote columns
+    zr = np.repeat(np.arange(200, M), 4)
+    zc = rng.integers(0, M, zr.size)
+    B = csr_from_coo(np.concatenate([rows, zr]),
+                     np.concatenate([cols, zc]),
+                     np.concatenate([vals, np.zeros(zr.size)]), (M, M))
+    plan = SpmvPlan(layout="block", distribution="row", exchange="halo",
+                    num_shards=S)
+    ha = build_halo(build_distributed(A, plan))
+    hb = build_halo(build_distributed(B, plan))
+    assert hb.halo == ha.halo
+    assert hb.comm_elems_per_shard == ha.comm_elems_per_shard
+    np.testing.assert_array_equal(ha.send_idx, hb.send_idx)

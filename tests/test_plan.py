@@ -71,9 +71,23 @@ def test_plan_choice_json_roundtrip():
     assert small.probed == 2 * 2            # layouts x distributions
 
 
+def test_autotune_probes_by_default():
+    """Simulator re-ranking is on unless the caller opts out (probe=0)."""
+    from repro.core.plan import DEFAULT_PROBE
+
+    A = make_matrix("rmat", scale=0.002)
+    choice = autotune(A, num_shards=4)
+    assert choice.probed == DEFAULT_PROBE > 0
+    assert choice.ranking[0].probe_seconds is not None
+    # the winner is a measured candidate, ranked by simulated seconds
+    probed = [r for r in choice.ranking if r.probe_seconds is not None]
+    secs = [r.probe_seconds for r in probed]
+    assert secs == sorted(secs)
+
+
 def test_ranking_sorted_and_full_grid():
     A = make_matrix("ford1", scale=0.05)
-    choice = autotune(A, num_shards=4)
+    choice = autotune(A, num_shards=4, probe=0)
     totals = [r.cost.total for r in choice.ranking]
     assert totals == sorted(totals)
     assert len(choice.ranking) == 2 * 2 * len(REORDERINGS) * 2 * 2
