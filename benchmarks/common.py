@@ -11,6 +11,8 @@ Every CSV row carries its scale through these tables.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 from repro.core.emu import EmuConfig, run_spmv
@@ -51,6 +53,38 @@ COUNT_SCALES = {       # exact migration counting is vectorized -> larger
     "nd24k": 0.05,
     "audikw_1": 0.02,
 }
+
+
+#: Repo-root trajectory file shared by perf_probe (--emu / --drift).
+BENCH_PATH = os.path.normpath(
+    os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                 "..", "BENCH_emu.json"))
+
+
+def append_bench_entry(entry: dict, path: str | None = None) -> str:
+    """Append one entry to the ``BENCH_emu.json`` trajectory (atomic write).
+
+    Corrupt/truncated files are treated as empty rather than fatal, so a
+    crashed previous run never blocks recording new numbers.
+    """
+    path = path or BENCH_PATH
+    doc = {"entries": []}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                loaded = json.load(f)
+            if isinstance(loaded, dict) and \
+                    isinstance(loaded.get("entries"), list):
+                doc = loaded
+        except (OSError, ValueError):
+            pass                 # corrupt/truncated file: start fresh
+    doc["entries"].append(entry)
+    tmp = f"{path}.tmp{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    os.replace(tmp, path)
+    return path
 
 
 def sim_bandwidth(name: str, *, layout="block", strategy="nonzero",

@@ -1,0 +1,222 @@
+"""Drift-aware serving benchmark: does online re-planning earn its keep?
+
+Replays a drifting request mix against two :class:`SparseMatrixEngine`
+instances serving the same matrix — one frozen on its ingest-time plan
+(the pre-PR-4 behaviour), one with the online rebalancer enabled — and
+reports what the paper's Fig. 8 story predicts: once traffic converges on
+columns owned by a single shard, only re-arranging the work restores
+balance.
+
+Workload: ``phase 1`` draws sparse request vectors with uniformly random
+column support; ``phase 2`` drifts the support onto a power-law
+(zipf-weighted) mix concentrated on the columns the active program placed
+on one shard — the serving analogue of the paper's cop20k_A nodelet-0
+convergence (§IV-D).
+
+Reported:
+
+* per-shard traffic-weighted load CV for the frozen and rebalanced
+  engines at the end of the stream, plus the **fresh-autotune reference**
+  (a from-scratch traffic-weighted autotune on the final workload) — the
+  acceptance bar is rebalanced CV <= 2x fresh CV;
+* Emu-modeled seconds per served SpMV under the drifted traffic for the
+  frozen plan vs the swapped-in plan (the vectorized tick engine on the
+  traffic-thinned matrix — the same drift oracle the rebalancer gates
+  swaps with), and the modeled throughput uplift;
+* host wall-clock serving throughput (requests/s) for both engines over
+  the steady-state tail, for reference (the host numpy path mostly
+  measures slab shapes, not migration behaviour — the modeled number is
+  the paper-grounded one).
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.drift_bench            # full
+    PYTHONPATH=src python -m benchmarks.drift_bench --fast     # CI smoke
+    PYTHONPATH=src python -m benchmarks.perf_probe --drift     # + record
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core.plan import autotune
+from repro.core.spmv import build_distributed
+from repro.data.matrices import make_matrix
+from repro.serve.engine import SparseMatrixEngine
+from repro.serve.rebalance import LoadMonitor, RebalanceConfig, \
+    probe_plan_seconds, weighted_shard_load
+
+
+def make_request_stream(N: int, hot_cols: np.ndarray, *, k: int,
+                        n_uniform: int, n_hot: int, zipf_a: float = 1.6,
+                        seed: int = 0):
+    """Yield (phase, x) request vectors: uniform support, then skewed.
+
+    Hot-phase supports are zipf-ranked over ``hot_cols`` (heaviest column
+    first), so the drifted mix is a power-law over a shard-concentrated
+    column set — uniform → power-law skew, as the acceptance criterion
+    asks.
+    """
+    rng = np.random.default_rng(seed)
+    for _ in range(n_uniform):
+        x = np.zeros(N)
+        x[rng.integers(0, N, k)] = rng.standard_normal(k)
+        yield "uniform", x
+    for _ in range(n_hot):
+        x = np.zeros(N)
+        ranks = np.minimum(rng.zipf(zipf_a, k) - 1, hot_cols.size - 1)
+        x[hot_cols[ranks]] = rng.standard_normal(k)
+        yield "hot", x
+
+
+def _weighted_cv(dist, w_caller: np.ndarray) -> float:
+    load = weighted_shard_load(dist, w_caller)
+    mu = load.mean()
+    return float(load.std() / mu) if mu else 0.0
+
+
+def run_drift_bench(*, matrix: str = "cop20k_A", scale: float = 0.005,
+                    shards: int = 4, window: int = 32, k_frac: float = 0.05,
+                    hot_windows: int = 10, seed: int = 0,
+                    probe: int = 2) -> dict:
+    """Run the scenario; returns the headline dict (printed by main)."""
+    A = make_matrix(matrix, scale=scale)
+    N = A.ncols
+    cfg = RebalanceConfig(window=window, patience=2, cooldown=2, probe=probe,
+                          seed=seed)
+
+    frozen = SparseMatrixEngine(num_shards=shards, rebalance=None)
+    live = SparseMatrixEngine(num_shards=shards, rebalance=cfg)
+    frozen.ingest("A", A)
+    live.ingest("A", A)
+    ingest_plan = live.plan("A")
+
+    # Observer on the frozen engine (never triggers anything — the frozen
+    # engine has no monitor by construction; this just measures its CV).
+    frozen_mon = LoadMonitor(frozen._matrices["A"].dist, cfg)
+
+    # Hot set: the columns the *active program* placed on shard 0.
+    d = live._matrices["A"].dist
+    order = np.arange(N) if d.perm is None else d.perm
+    hot_cols = np.flatnonzero(d.x_layout.owner_of(order) == 0)
+
+    k = max(int(N * k_frac), 8)
+    n_uniform, n_hot = 2 * window, hot_windows * window
+    stream = list(make_request_stream(N, hot_cols, k=k,
+                                      n_uniform=n_uniform, n_hot=n_hot,
+                                      seed=seed))
+
+    tail = window            # steady-state tail for wall-clock throughput
+    t_frozen = t_live = 0.0
+    for i, (_, x) in enumerate(stream):
+        timed = i >= len(stream) - tail
+        t0 = time.perf_counter()
+        frozen.spmv("A", x)
+        t1 = time.perf_counter()
+        live.spmv("A", x)
+        t2 = time.perf_counter()
+        frozen_mon.observe(x)
+        if timed:
+            t_frozen += t1 - t0
+            t_live += t2 - t1
+
+    m = live._matrices["A"]
+    w_final = m.monitor.activity()          # caller order, mean 1
+    served_plan = live.plan("A")
+
+    # Fresh-autotune reference: what a from-scratch traffic-weighted tune
+    # would pick for the final workload, and the CV it would achieve.
+    fresh = autotune(A, num_shards=shards, seed=seed, probe=probe,
+                     col_weight=w_final)
+    fresh_dist = build_distributed(A, fresh.plan)
+    cv_fresh = _weighted_cv(fresh_dist, w_final)
+    cv_frozen = _weighted_cv(frozen._matrices["A"].dist, w_final)
+    cv_live = _weighted_cv(m.dist, w_final)
+
+    sec_frozen = probe_plan_seconds(A, ingest_plan, w_final)
+    sec_live = probe_plan_seconds(A, served_plan, w_final)
+
+    swaps = [e for e in m.rebalance_log if e.swapped]
+    return {
+        "workload": f"drift/{matrix}", "scale": scale, "shards": shards,
+        "window": window, "requests": len(stream),
+        "ingest_plan": f"{ingest_plan.reordering}/{ingest_plan.layout}/"
+                       f"{ingest_plan.distribution}/{ingest_plan.kernel}",
+        "served_plan": f"{served_plan.reordering}/{served_plan.layout}/"
+                       f"{served_plan.distribution}/{served_plan.kernel}",
+        "swaps": len(swaps),
+        "rejected": sum(not e.swapped for e in m.rebalance_log),
+        "load_cv": {"frozen": round(cv_frozen, 4),
+                    "rebalanced": round(cv_live, 4),
+                    "fresh_autotune": round(cv_fresh, 4),
+                    "ratio_vs_fresh": round(cv_live / max(cv_fresh, 1e-12),
+                                            3)},
+        "modeled_spmv_seconds": {"frozen": sec_frozen,
+                                 "rebalanced": sec_live,
+                                 "speedup": round(sec_frozen /
+                                                  max(sec_live, 1e-12), 3)},
+        "host_requests_per_sec": {
+            "frozen": round(tail / max(t_frozen, 1e-9)),
+            "rebalanced": round(tail / max(t_live, 1e-9))},
+    }
+
+
+def check(entry: dict) -> bool:
+    """The acceptance gates CI smoke-tests: swap happened, CV restored to
+    within 2x of the fresh-autotune reference, modeled throughput up."""
+    return (entry["swaps"] >= 1 and
+            entry["load_cv"]["ratio_vs_fresh"] <= 2.0 and
+            entry["modeled_spmv_seconds"]["speedup"] > 1.0)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--matrix", default="cop20k_A")
+    ap.add_argument("--scale", type=float, default=0.005)
+    ap.add_argument("--shards", type=int, default=4)
+    ap.add_argument("--window", type=int, default=32)
+    ap.add_argument("--hot-windows", type=int, default=10)
+    ap.add_argument("--probe", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fast", action="store_true",
+                    help="CI smoke: smaller matrix/stream, same gates")
+    ap.add_argument("--json", action="store_true",
+                    help="print the entry as JSON only")
+    args = ap.parse_args()
+
+    kw = dict(matrix=args.matrix, scale=args.scale, shards=args.shards,
+              window=args.window, hot_windows=args.hot_windows,
+              probe=args.probe, seed=args.seed)
+    if args.fast:
+        kw.update(scale=min(args.scale, 0.003), window=16, hot_windows=6)
+    entry = run_drift_bench(**kw)
+    ok = check(entry)
+
+    if args.json:
+        print(json.dumps(entry, indent=2))
+    else:
+        print(f"drift bench: {entry['workload']} scale={entry['scale']} "
+              f"shards={entry['shards']} requests={entry['requests']}")
+        print(f"  plan      : {entry['ingest_plan']} -> "
+              f"{entry['served_plan']} "
+              f"({entry['swaps']} swap(s), {entry['rejected']} rejected)")
+        cv = entry["load_cv"]
+        print(f"  load CV   : frozen {cv['frozen']:.3f} | rebalanced "
+              f"{cv['rebalanced']:.3f} | fresh autotune "
+              f"{cv['fresh_autotune']:.3f} "
+              f"(ratio {cv['ratio_vs_fresh']:.2f}, bar 2.0)")
+        s = entry["modeled_spmv_seconds"]
+        print(f"  modeled   : {s['frozen']:.3e}s -> {s['rebalanced']:.3e}s "
+              f"per served SpMV ({s['speedup']:.2f}x)")
+        h = entry["host_requests_per_sec"]
+        print(f"  host      : {h['frozen']} -> {h['rebalanced']} req/s "
+              f"(steady-state tail; reference only)")
+        print(f"  -> {'PASS' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -13,6 +13,12 @@ appends a ticks/sec trajectory entry to ``BENCH_emu.json`` (repo root):
     PYTHONPATH=src python -m benchmarks.perf_probe --emu
     PYTHONPATH=src python -m benchmarks.perf_probe --emu --smoke \
         --budget-seconds 60       # CI: fail if the vectorized path is slow
+
+Drift mode runs the serving rebalancer benchmark
+(``benchmarks/drift_bench.py``) and records its headline numbers (load-CV
+restoration + modeled throughput uplift) as a ``BENCH_emu.json`` entry:
+
+    PYTHONPATH=src python -m benchmarks.perf_probe --drift
 """
 from __future__ import annotations
 
@@ -54,9 +60,7 @@ def top_collectives(hlo: str, n: int = 10):
     return rows[:n]
 
 
-_BENCH_PATH = os.path.normpath(
-    os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                 "..", "BENCH_emu.json"))
+from benchmarks.common import append_bench_entry
 
 
 def _time_engine(engine: str, scale: float):
@@ -119,26 +123,31 @@ def run_emu_probe(scale: float, ref_scale: float, smoke: bool,
     entry.update({"ref_scale": ref_scale, "reference": ref,
                   "vectorized_at_ref_scale": vec_at_ref,
                   "sim_speedup_at_ref_scale": round(speedup, 1)})
-    path = out or _BENCH_PATH
-    doc = {"entries": []}
-    if os.path.exists(path):
-        try:
-            with open(path) as f:
-                loaded = json.load(f)
-            if isinstance(loaded.get("entries"), list):
-                doc = loaded
-        except (OSError, ValueError):
-            pass                 # corrupt/truncated file: start fresh
-    doc["entries"].append(entry)
-    tmp = f"{path}.tmp{os.getpid()}"
-    with open(tmp, "w") as f:
-        json.dump(doc, f, indent=2)
-        f.write("\n")
-    os.replace(tmp, path)
+    path = append_bench_entry(entry, out)
     print(json.dumps(entry, indent=2))
     print(f"# speedup {speedup:.1f}x (bar 20x) -> "
           f"{'PASS' if speedup >= 20 else 'FAIL'}; recorded in {path}")
     return 0 if speedup >= 20 else 1
+
+
+def run_drift_probe(out: str | None) -> int:
+    """Record the drift-bench headline numbers in ``BENCH_emu.json``.
+
+    Runs the full serving-rebalancer scenario (see
+    ``benchmarks/drift_bench.py``) and appends its entry; exit status is
+    the bench's own acceptance gate (swap happened, load CV within 2x of
+    the fresh-autotune reference, modeled throughput up).
+    """
+    from benchmarks.drift_bench import check, run_drift_bench
+    entry = run_drift_bench()
+    ok = check(entry)
+    path = append_bench_entry(entry, out)
+    print(json.dumps(entry, indent=2))
+    print(f"# drift: load-CV ratio "
+          f"{entry['load_cv']['ratio_vs_fresh']} (bar 2.0), modeled "
+          f"speedup {entry['modeled_spmv_seconds']['speedup']}x -> "
+          f"{'PASS' if ok else 'FAIL'}; recorded in {path}")
+    return 0 if ok else 1
 
 
 def main():
@@ -147,6 +156,9 @@ def main():
     ap.add_argument("shape", nargs="?")
     ap.add_argument("--emu", action="store_true",
                     help="probe the Emu tick engines instead of a TPU cell")
+    ap.add_argument("--drift", action="store_true",
+                    help="run the serving drift bench and record headline "
+                         "numbers (benchmarks/drift_bench.py)")
     ap.add_argument("--scale", type=float, default=1.0,
                     help="fig8 matrix scale for the vectorized timing")
     ap.add_argument("--ref-scale", type=float, default=0.02,
@@ -167,6 +179,8 @@ def main():
     if args.emu:
         sys.exit(run_emu_probe(args.scale, args.ref_scale, args.smoke,
                                args.budget_seconds, args.out))
+    if args.drift:
+        sys.exit(run_drift_probe(args.out))
     if args.arch is None or args.shape is None:
         ap.error("arch and shape are required unless --emu is given")
 

@@ -93,16 +93,42 @@ def partition_rows(csr: CSRMatrix, num_shards: int) -> Partition:
     return Partition("row", num_shards, _even_row_starts(csr.nrows, num_shards))
 
 
-def partition_nonzeros(csr: CSRMatrix, num_shards: int) -> Partition:
+def partition_nonzeros(csr: CSRMatrix, num_shards: int,
+                       nnz_weight: np.ndarray | None = None) -> Partition:
     """Contiguous row blocks with ~equal non-zeros (paper's *non-zero*).
 
     Walk ``row_ptr`` accumulating rows until the NNZ/shards threshold is
     met — vectorized as a searchsorted over the cumulative nnz curve.
+
+    ``nnz_weight`` (optional, (nnz,) float, aligned with the stored-entry
+    order) switches the split from equal stored non-zeros to equal
+    *expected work*: the cumulative curve is the weighted one, so under a
+    skewed serving workload (each entry's weight = its column's observed
+    activity) every shard gets the same share of traffic-visible work —
+    the paper's nonzero split re-derived against what the request stream
+    actually touches.  Note the serving re-plan path does **not** pass
+    weights here: :class:`~repro.core.spmv.SpmvPlan` stays a weight-free,
+    JSON-round-trippable config (so ``build_distributed`` can always
+    rebuild the exact program from the persisted plan), and the
+    rebalancer instead re-ranks weight-free plans under traffic-weighted
+    *costs*.  The weighted split is the primitive for callers that manage
+    their own partitions (pinned by ``tests/test_rebalance.py``).
     """
     M = csr.nrows
-    total = csr.nnz
+    if nnz_weight is None:
+        curve = csr.row_ptr[1:].astype(np.float64)
+        total = float(csr.nnz)
+    else:
+        w = np.asarray(nnz_weight, dtype=np.float64)
+        if w.shape[0] != csr.nnz:
+            raise ValueError(f"nnz_weight has {w.shape[0]} entries, "
+                             f"matrix stores {csr.nnz}")
+        per_row = np.zeros(M, dtype=np.float64)
+        np.add.at(per_row, np.repeat(np.arange(M), csr_row_nnz(csr)), w)
+        curve = np.cumsum(per_row)
+        total = float(curve[-1]) if M else 0.0
     targets = (np.arange(1, num_shards, dtype=np.float64) * total / num_shards)
-    cut = np.searchsorted(csr.row_ptr[1:], targets, side="left") + 1
+    cut = np.searchsorted(curve, targets, side="left") + 1
     starts = np.concatenate([[0], cut, [M]]).astype(np.int64)
     # Monotonicity guard for degenerate matrices (empty rows at the ends).
     np.maximum.accumulate(starts, out=starts)
@@ -125,10 +151,11 @@ def nnz_chunk_starts(nnz: int, chunk: int) -> np.ndarray:
     return starts
 
 
-def make_partition(csr: CSRMatrix, num_shards: int, strategy: str) -> Partition:
+def make_partition(csr: CSRMatrix, num_shards: int, strategy: str,
+                   nnz_weight: np.ndarray | None = None) -> Partition:
     if strategy == "row":
         return partition_rows(csr, num_shards)
     if strategy in ("nonzero", "nnz"):
-        return partition_nonzeros(csr, num_shards)
+        return partition_nonzeros(csr, num_shards, nnz_weight=nnz_weight)
     raise ValueError(f"unknown work-distribution strategy: {strategy!r}; "
                      f"expected one of {DISTRIBUTIONS}")

@@ -38,15 +38,18 @@ import numpy as np
 
 from .emu import EmuConfig, run_spmv
 from .layout import make_layout
-from .migration import count_migrations, migration_arrivals, remote_access_matrix
+from .migration import count_migrations, migration_arrivals, \
+    remote_access_matrix, shard_load_map
 from .partition import Partition, make_partition
 from .reorder import REORDERINGS, reordering_permutation
-from .sparse_matrix import CSRMatrix, ELL_LANE, ELL_SUBLANE, csr_row_nnz
+from .sparse_matrix import CSRMatrix, ELL_LANE, ELL_SUBLANE, csr_from_coo, \
+    csr_row_nnz
 from .spmv import SpmvPlan
 from repro.kernels.ops import SEG_CHUNK
 
 __all__ = ["DEFAULT_PROBE", "MatrixFeatures", "PlanCost", "RankedPlan",
-           "PlanChoice", "extract_features", "estimate_cost", "autotune"]
+           "PlanChoice", "extract_features", "estimate_cost", "autotune",
+           "feature_key"]
 
 #: Bases the autotuner re-ranks with the Emu timeline simulator when the
 #: caller does not pass ``probe``.  Probing is on by default since the
@@ -179,6 +182,42 @@ def extract_features(csr: CSRMatrix, *, num_shards: int = 8) -> MatrixFeatures:
         hot_col_share=hot, remote_frac=remote)
 
 
+def feature_key(features: MatrixFeatures) -> tuple:
+    """Coarse structural signature for feature-keyed plan caching.
+
+    Sizes are binned to half-octaves (2x in nnz never collides, ~1.4x
+    may) and the shape statistics are rounded to the resolution at which
+    the cost model actually changes its mind; two matrices with equal
+    keys are structurally similar enough that the autotuned plan for one
+    is a sound choice for the other.  ``SparseMatrixEngine`` uses this to
+    skip the full autotune grid when re-ingesting look-alike matrices;
+    the leading version tag lets the binning evolve without silently
+    reusing stale persisted keys.
+
+    Examples
+    --------
+    >>> from repro.core.plan import extract_features, feature_key
+    >>> from repro.data.matrices import make_matrix
+    >>> a = extract_features(make_matrix("rmat", scale=0.002, seed=0))
+    >>> b = extract_features(make_matrix("rmat", scale=0.002, seed=7))
+    >>> feature_key(a) == feature_key(b)        # same structure, new seed
+    True
+    >>> c = extract_features(make_matrix("ford1", scale=0.05))
+    >>> feature_key(a) == feature_key(c)        # different archetype
+    False
+    """
+    def half_octave(v: int) -> int:
+        return int(round(2.0 * np.log2(max(v, 1))))
+
+    return ("fk1", half_octave(features.nrows), half_octave(features.ncols),
+            half_octave(features.nnz),
+            round(features.row_nnz_cv, 1), round(features.tail_share, 2),
+            round(features.bandwidth_mean, 1),
+            round(features.bandwidth_p95, 1),
+            round(features.hot_col_share, 1),
+            round(features.remote_frac, 1))
+
+
 @dataclasses.dataclass(frozen=True)
 class PlanCost:
     """Analytic cost breakdown for one plan, in Gossamer-Core cycles.
@@ -265,14 +304,27 @@ class PlanChoice:
 # --------------------------------------------------------------------------
 
 def _base_metrics(A: CSRMatrix, part: Partition, layout: str,
-                  emu: EmuConfig) -> dict:
-    """Emu-visible cost terms shared by every (kernel, exchange) variant."""
+                  emu: EmuConfig,
+                  col_weight: np.ndarray | None = None) -> dict:
+    """Emu-visible cost terms shared by every (kernel, exchange) variant.
+
+    ``col_weight`` (per-column activity, in ``A``'s index order) switches
+    the issue and ingress terms to their traffic-weighted versions, so the
+    ranking optimizes for the workload actually observed instead of the
+    dense all-columns-hot one; the migration-overhead and exchange-volume
+    terms stay structural (they are properties of the built program, not
+    of one request).
+    """
     S = part.num_shards
     xl = make_layout(layout, A.ncols, S)
     bl = make_layout(layout, A.nrows, S)
     tr = count_migrations(A, part, xl, bl)
-    arrivals = migration_arrivals(A, part, xl)
-    issue = float(tr.mem_instr_per_nodelet.max()) * emu.access_cycles
+    arrivals = migration_arrivals(A, part, xl, col_weight=col_weight)
+    if col_weight is None:
+        issue = float(tr.mem_instr_per_nodelet.max()) * emu.access_cycles
+    else:
+        lm, base = shard_load_map(A, part, xl, bl)
+        issue = float((lm @ col_weight + base).max()) * emu.access_cycles
     ingress = float(arrivals.max()) * emu.tick_cycles / emu.ingress_rate
     migration = tr.migrations / S * emu.migration_overhead_cycles
 
@@ -316,8 +368,56 @@ def _padding_slots(A: CSRMatrix, part: Partition, kernel: str) -> float:
     return worst
 
 
+def _permute_weights(w: np.ndarray, perm: np.ndarray | None) -> np.ndarray:
+    """Carry per-column weights through a symmetric reordering.
+
+    ``perm[old] = new`` (the :func:`~repro.core.reorder.reordering_permutation`
+    convention), so the weight of old column j must land at new index
+    ``perm[j]``.
+    """
+    if perm is None:
+        return w
+    out = np.empty_like(w)
+    out[perm] = w
+    return out
+
+
+def _active_submatrix(A: CSRMatrix, col_weight: np.ndarray,
+                      seed: int = 0) -> CSRMatrix:
+    """Traffic-importance-thinned structure (same shape) for probing.
+
+    Each stored entry survives with probability ``min(w[col]/mean(w), 1)``
+    — columns at or above mean activity keep every entry, colder columns
+    are thinned in proportion to how rarely the request stream touches
+    them.  The result is the structure *one expected request* exercises:
+    probing it with the Emu engine measures how a plan handles the
+    observed traffic, not the dense all-columns-hot workload.  Uniform
+    weights return ``A`` unchanged (the probe degrades to the structural
+    one), and thinning is deterministic for a given ``seed``.
+
+    Callers comparing plans must thin **once in a common index order** and
+    permute the thinned matrix per plan — thinning after reordering would
+    hand each plan a different entry set.
+    """
+    w = np.asarray(col_weight, dtype=np.float64)
+    mean = w.mean() if w.size else 0.0
+    if mean <= 0:
+        return A
+    p = np.minimum(w / mean, 1.0)
+    if (p >= 1.0).all():
+        return A
+    rng = np.random.default_rng(seed)
+    keep = rng.random(A.nnz) < p[A.col_index]
+    if keep.all() or not keep.any():
+        return A
+    rows = np.repeat(np.arange(A.nrows), csr_row_nnz(A))
+    return csr_from_coo(rows[keep], A.col_index[keep], A.values[keep],
+                        A.shape, sum_duplicates=False)
+
+
 def estimate_cost(csr: CSRMatrix, plan: SpmvPlan, *,
-                  emu: EmuConfig | None = None) -> PlanCost:
+                  emu: EmuConfig | None = None,
+                  col_weight: np.ndarray | None = None) -> PlanCost:
     """Analytic cost of executing SpMV under ``plan`` on the Emu model.
 
     The matrix is reordered per ``plan.reordering`` before accounting, so
@@ -332,6 +432,10 @@ def estimate_cost(csr: CSRMatrix, plan: SpmvPlan, *,
         Candidate configuration to score.
     emu : EmuConfig, optional
         Machine constants; defaults to ``EmuConfig(nodelets=plan.num_shards)``.
+    col_weight : np.ndarray, optional
+        (ncols,) per-column activity in the *caller's* index order (it is
+        permuted alongside the matrix for reordered plans); weights the
+        issue/ingress terms by observed traffic.
 
     Returns
     -------
@@ -356,9 +460,14 @@ def estimate_cost(csr: CSRMatrix, plan: SpmvPlan, *,
     emu = emu or EmuConfig(nodelets=plan.num_shards)
     perm = reordering_permutation(csr, plan.reordering, seed=plan.seed,
                                   parts=plan.num_shards)
-    A = csr if plan.reordering == "none" else csr.permuted(perm, perm)
+    if plan.reordering == "none":
+        A, w = csr, col_weight
+    else:
+        A = csr.permuted(perm, perm)
+        w = None if col_weight is None else _permute_weights(
+            np.asarray(col_weight, dtype=np.float64), perm)
     part = make_partition(A, plan.num_shards, plan.distribution)
-    base = _base_metrics(A, part, plan.layout, emu)
+    base = _base_metrics(A, part, plan.layout, emu, col_weight=w)
     return _assemble_cost(base, _padding_slots(A, part, plan.kernel),
                           plan.exchange, emu)
 
@@ -389,7 +498,8 @@ def autotune(csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
              kernels: Sequence[str] = ("ell", "seg"),
              exchanges: Sequence[str] = ("halo", "allgather"),
              probe: int | None = None,
-             emu: EmuConfig | None = None) -> PlanChoice:
+             emu: EmuConfig | None = None,
+             col_weight: np.ndarray | None = None) -> PlanChoice:
     """Rank the candidate plan grid for one matrix.
 
     Scores every plan in ``layouts x distributions x reorderings x kernels
@@ -419,6 +529,13 @@ def autotune(csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
         ``benchmarks/autotune_bench.py`` checks the resulting regret.
     emu : EmuConfig, optional
         Machine constants for both the model and the probe.
+    col_weight : np.ndarray, optional
+        (ncols,) per-column activity in the caller's index order.  When
+        given, the analytic issue/ingress terms are traffic-weighted and
+        the simulator probe runs on the traffic-active submatrix
+        (:func:`_active_submatrix`) — the re-plan path of the serving
+        rebalancer (``serve/rebalance.py``).  Uniform weights reproduce
+        the unweighted ranking.
 
     Returns
     -------
@@ -441,13 +558,22 @@ def autotune(csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
     """
     emu = emu or EmuConfig(nodelets=num_shards)
     probe = DEFAULT_PROBE if probe is None else probe
+    if col_weight is not None:
+        col_weight = np.asarray(col_weight, dtype=np.float64)
 
     reordered: dict[str, CSRMatrix] = {}
+    weights: dict[str, np.ndarray | None] = {}
+    perms: dict[str, np.ndarray] = {}
     for method in reorderings:
         perm = reordering_permutation(csr, method, seed=seed,
                                       parts=num_shards)
-        reordered[method] = csr if method == "none" else \
-            csr.permuted(perm, perm)
+        perms[method] = perm
+        if method == "none":
+            reordered[method], weights[method] = csr, col_weight
+        else:
+            reordered[method] = csr.permuted(perm, perm)
+            weights[method] = None if col_weight is None else \
+                _permute_weights(col_weight, perm)
 
     bases: dict[tuple, dict] = {}
     pads: dict[tuple, float] = {}
@@ -459,7 +585,8 @@ def autotune(csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
                 pads[(method, dist, kernel)] = _padding_slots(A, part, kernel)
             for layout in layouts:
                 key = (method, layout, dist)
-                bases[key] = _base_metrics(A, part, layout, emu)
+                bases[key] = _base_metrics(A, part, layout, emu,
+                                           col_weight=weights[method])
                 for kernel in kernels:
                     for exchange in exchanges:
                         plan = SpmvPlan(layout=layout, distribution=dist,
@@ -475,6 +602,11 @@ def autotune(csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
 
     n_probed = 0
     if probe > 0:
+        # Traffic-thinned probe source, cut once in the caller's order so
+        # every probed base sees the same entry set (then permuted per
+        # reordering alongside the plan itself).
+        probe_src = csr if col_weight is None else \
+            _active_submatrix(csr, col_weight, seed=seed)
         probe_times: dict[tuple, tuple[float, float]] = {}
         for cand in candidates:
             key = (cand.plan.reordering, cand.plan.layout,
@@ -485,7 +617,13 @@ def autotune(csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
                 continue
             A = reordered[cand.plan.reordering]
             part = make_partition(A, num_shards, cand.plan.distribution)
-            res = run_spmv(A, part,
+            if probe_src is csr:
+                probe_A = A
+            else:
+                perm = perms[cand.plan.reordering]
+                probe_A = probe_src if cand.plan.reordering == "none" \
+                    else probe_src.permuted(perm, perm)
+            res = run_spmv(probe_A, part,
                            make_layout(cand.plan.layout, A.ncols, num_shards),
                            emu)
             probe_times[key] = (float(res.seconds), float(res.bandwidth_mbs))

@@ -32,6 +32,7 @@ __all__ = [
     "BcsrMatrix",
     "SegMatrix",
     "csr_from_coo",
+    "csr_matvec",
     "csr_to_dense",
     "csr_to_ell",
     "csr_to_bcsr",
@@ -213,6 +214,27 @@ def csr_to_dense(csr: CSRMatrix) -> np.ndarray:
     rows = np.repeat(np.arange(csr.nrows), csr_row_nnz(csr))
     out[rows, csr.col_index] = csr.values
     return out
+
+
+def csr_matvec(csr: CSRMatrix, x: np.ndarray) -> np.ndarray:
+    """Exact host y = A @ x straight off the CSR arrays (float64 numpy).
+
+    ``x`` is (ncols,) or (ncols, B); the result matches shape.  This never
+    densifies the matrix, so it is the validation oracle serving-scale
+    code can afford — the rebalancer checks every candidate program
+    against it before swapping it in.
+    """
+    rows = np.repeat(np.arange(csr.nrows), csr_row_nnz(csr))
+    contrib = csr.values.astype(np.float64)
+    xs = np.asarray(x, dtype=np.float64)[csr.col_index]
+    if xs.ndim == 2:
+        contrib = contrib[:, None] * xs
+        y = np.zeros((csr.nrows, xs.shape[1]), dtype=np.float64)
+    else:
+        contrib = contrib * xs
+        y = np.zeros(csr.nrows, dtype=np.float64)
+    np.add.at(y, rows, contrib)
+    return y
 
 
 def _round_up(x: int, m: int) -> int:

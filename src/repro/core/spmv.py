@@ -278,30 +278,57 @@ def local_spmv(dist: DistributedSpmv, x: np.ndarray) -> np.ndarray:
     ``dist.perm`` is applied/inverted internally.  This is the execution
     path for correctness tests and for small single-host serving
     (``serve.engine.SparseMatrixEngine``).
+
+    ``x`` may be a single (N,) vector or a multi-RHS block (N, B); the
+    result matches ((M,) or (M, B)).  The batched path broadcasts the same
+    per-shard slab products over the trailing axis with the identical
+    summation/scatter order, so column b of a batched call is *bitwise*
+    equal to the per-vector call on ``x[:, b]``.
     """
     if x.shape[0] != dist.matrix.ncols:
         raise ValueError(f"x has {x.shape[0]} elements, matrix expects "
                          f"{dist.matrix.ncols}")
+    if x.ndim == 1:
+        return _local_spmv_block(dist, x[:, None])[:, 0]
+    if x.ndim != 2:
+        raise ValueError(f"x must be (N,) or (N, B), got shape {x.shape}")
+    return _local_spmv_block(dist, x)
+
+
+def _local_spmv_block(dist: DistributedSpmv, x: np.ndarray) -> np.ndarray:
+    """(N, B) -> (M, B), batch-major internally.
+
+    The RHS block is held as (B, N) so every per-row reduction is over the
+    last *contiguous* axis regardless of B — numpy then applies the same
+    pairwise-summation tree for every batch width, which is what makes
+    column b of a block call bitwise-equal to a B=1 call on ``x[:, b]``.
+    The seg scatter-add loops per RHS for the same reason (np.add.at
+    accumulates in identical index order per column).
+    """
+    B = x.shape[1]
     xr = x if dist.perm is None else _apply_perm(x, dist.perm)
-    x_pad = np.zeros(dist.x_layout.padded_length(), dtype=np.float64)
-    x_pad[: dist.matrix.ncols] = xr
+    x_pad = np.zeros((B, dist.x_layout.padded_length()), dtype=np.float64)
+    x_pad[:, : dist.matrix.ncols] = xr.T
 
     S = dist.plan.num_shards
-    y = np.zeros(dist.matrix.nrows, dtype=np.float64)
+    y = np.zeros((B, dist.matrix.nrows), dtype=np.float64)
     for p in range(S):
         r = int(dist.rows_per_shard[p])
         o = int(dist.row_offset[p])
         if dist.plan.kernel == "seg":
             rows_pad = int(dist.rows_per_shard.max())
-            contrib = dist.seg_vals[p].astype(np.float64) * \
-                x_pad[dist.seg_cols[p]]
-            yp = np.zeros(rows_pad + 1)
-            np.add.at(yp, dist.seg_rows[p], contrib)
-            y[o:o + r] = yp[:r]
+            vals = dist.seg_vals[p].astype(np.float64)
+            contrib = vals * x_pad[:, dist.seg_cols[p]]   # (B, C, L)
+            yp = np.zeros((B, rows_pad + 1))
+            for b in range(B):
+                np.add.at(yp[b], dist.seg_rows[p], contrib[b])
+            y[:, o:o + r] = yp[:, :r]
         else:
-            slab = dist.data[p].astype(np.float64) * x_pad[dist.cols[p]]
-            y[o:o + r] = slab.sum(axis=1)[:r]
-    return y if dist.perm is None else y[dist.perm]
+            data = dist.data[p].astype(np.float64)
+            slab = data * x_pad[:, dist.cols[p]]          # (B, R, W)
+            y[:, o:o + r] = np.ascontiguousarray(slab).sum(axis=2)[:, :r]
+    yt = y.T
+    return yt if dist.perm is None else yt[dist.perm]
 
 
 def _apply_perm(v: np.ndarray, perm: np.ndarray) -> np.ndarray:

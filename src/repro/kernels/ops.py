@@ -34,7 +34,17 @@ seg_spmv_ref = jax.jit(ref.seg_spmv_ref, static_argnames=("num_rows",))
 
 
 def ell_spmv(data, cols, x, *, interpret: bool = False, **tiles):
-    """Pallas ELL SpMV (TPU); set interpret=True on CPU."""
+    """Pallas ELL SpMV (TPU); set interpret=True on CPU.
+
+    Accepts a multi-RHS block x of shape (N, B) as well as a single (N,)
+    vector; the batched case vmaps the single-vector kernel over the
+    trailing axis, so each column reproduces the per-vector result.
+    """
+    if jnp.asarray(x).ndim == 2:
+        return jax.vmap(
+            lambda xb: _ell_spmv_pallas(data, cols, xb, interpret=interpret,
+                                        **tiles),
+            in_axes=1, out_axes=1)(jnp.asarray(x))
     return _ell_spmv_pallas(data, cols, x, interpret=interpret, **tiles)
 
 
@@ -111,9 +121,13 @@ def seg_spmv(seg: "SegMatrix | tuple", x, *, num_rows: int | None = None,
             raise ValueError("num_rows is required with raw seg arrays")
     vals, cols, rows, p_chunk, p_lo, p_hi, p_row = map(jnp.asarray, arrays)
     if use_kernel:
-        psum = _seg_psum_pallas(vals, cols, x, tile_c=tile_c,
-                                interpret=interpret)
-        return _seg_fixup(psum, p_chunk, p_lo, p_hi, p_row, num_rows)
+        def one(xb):
+            psum = _seg_psum_pallas(vals, cols, xb, tile_c=tile_c,
+                                    interpret=interpret)
+            return _seg_fixup(psum, p_chunk, p_lo, p_hi, p_row, num_rows)
+        if jnp.asarray(x).ndim == 2:    # multi-RHS: vmap the kernel path
+            return jax.vmap(one, in_axes=1, out_axes=1)(jnp.asarray(x))
+        return one(x)
     return seg_spmv_ref(vals, cols, rows, x, num_rows=num_rows)
 
 

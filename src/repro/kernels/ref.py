@@ -13,8 +13,17 @@ __all__ = ["ell_spmv_ref", "bell_spmv_ref", "coo_spmv_ref", "bell_spmm_ref",
 
 
 def ell_spmv_ref(data: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
-    """y[i] = sum_w data[i, w] * x[cols[i, w]]  — padded slots hold 0."""
-    return jnp.sum(data * jnp.take(x, cols, axis=0), axis=1)
+    """y[i] = sum_w data[i, w] * x[cols[i, w]]  — padded slots hold 0.
+
+    ``x`` may be (N,) or a multi-RHS block (N, B); the result matches
+    ((M,) or (M, B)).  The batched path reuses the same gather and the
+    same axis-1 reduction, so per-column results equal the per-vector
+    ones exactly.
+    """
+    gathered = jnp.take(x, cols, axis=0)     # (M, W) or (M, W, B)
+    if x.ndim == 2:
+        return jnp.sum(data[..., None] * gathered, axis=1)
+    return jnp.sum(data * gathered, axis=1)
 
 
 def coo_spmv_ref(rows: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
@@ -30,10 +39,18 @@ def seg_spmv_ref(vals: jnp.ndarray, cols: jnp.ndarray, rows: jnp.ndarray,
 
     vals/cols/rows: (C, L) slab (padded slots: val 0 / col 0 / row 0).
     Scatter-adds every product into its destination row — the order-free
-    definition the chunked prefix-sum kernel must reproduce.
+    definition the chunked prefix-sum kernel must reproduce.  ``x`` may be
+    (N,) or a multi-RHS block (N, B); the (C, L) row ids then scatter
+    whole (B,) slices, so batched columns match per-vector runs exactly.
     """
-    contrib = vals * jnp.take(x, cols, axis=0)
-    return jnp.zeros((num_rows,), dtype=contrib.dtype).at[rows].add(contrib)
+    gathered = jnp.take(x, cols, axis=0)     # (C, L) or (C, L, B)
+    if x.ndim == 2:
+        contrib = vals[..., None] * gathered
+        out = jnp.zeros((num_rows, x.shape[1]), dtype=contrib.dtype)
+    else:
+        contrib = vals * gathered
+        out = jnp.zeros((num_rows,), dtype=contrib.dtype)
+    return out.at[rows].add(contrib)
 
 
 def seg_psum_ref(vals: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:

@@ -1,0 +1,9 @@
+"""Serving layer: the batched LM engine and the sparse-matrix serving
+engine (autotuned ingest, batched multi-RHS SpMV, feature-keyed plan cache)
+plus the online rebalancing subsystem that keeps serving plans matched to
+the live request mix (``rebalance.py``)."""
+from .engine import Engine, ServeConfig, SparseMatrixEngine
+from .rebalance import LoadMonitor, RebalanceConfig, RebalanceEvent
+
+__all__ = ["Engine", "ServeConfig", "SparseMatrixEngine", "LoadMonitor",
+           "RebalanceConfig", "RebalanceEvent"]

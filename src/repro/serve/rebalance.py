@@ -1,0 +1,356 @@
+"""Online hot-spot detection and live re-planning for the SpMV serving path.
+
+The paper's central finding is that distributing work well *once* is not
+enough on a migratory-thread machine: sparsity makes threads converge on a
+single nodelet over time, and only re-arranging the work restores balance
+(§V, Figs. 7-8).  The serving engine had exactly that blind spot — a plan
+autotuned at ingest and never revisited while request traffic shifts which
+columns are hot.  This module closes the loop:
+
+1. **Monitor** — :class:`LoadMonitor` accumulates per-column activity from
+   every served request and folds it through a precomputed column→shard
+   attribution map (:func:`~repro.core.migration.shard_load_map`), so each
+   observation window costs one matvec, not a matrix walk.
+2. **Detect** — the induced per-shard load CV is compared against an
+   absolute threshold *and* the ingest-time baseline, with hysteresis
+   (``patience`` consecutive hot windows to trip, ``cooldown`` windows of
+   grace after a swap) so a single bursty window never thrashes the plan.
+3. **Re-plan** — :func:`replan` reruns the autotuner traffic-weighted
+   (``autotune(..., col_weight=...)``) under a budget (restricted
+   reordering grid, small Emu-probe count), then uses the cheap vectorized
+   Emu engine as a *drift oracle*: both the incumbent and the candidate
+   plan are simulated on the traffic-active submatrix, and the candidate
+   must win by ``min_gain`` before it is considered.
+4. **Swap** — the candidate program is built double-buffered: in-flight
+   ``spmv`` calls keep the old :class:`~repro.core.spmv.DistributedSpmv`
+   while the new one is constructed and validated against the exact CSR
+   oracle (:func:`~repro.core.sparse_matrix.csr_matvec`) on sample
+   vectors; only then does the engine swing its reference (a single
+   attribute assignment) and re-attach the monitor.
+
+This is the serving-layer analogue of the paper's reordering win: the
+workload decides when the plan is re-derived, not the load-time snapshot.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.emu import EmuConfig, run_spmv
+from repro.core.layout import make_layout
+from repro.core.migration import shard_load_map
+from repro.core.partition import make_partition
+from repro.core.plan import PlanChoice, _active_submatrix, _permute_weights, \
+    autotune
+from repro.core.reorder import REORDERINGS, reordering_permutation
+from repro.core.sparse_matrix import CSRMatrix, csr_matvec
+from repro.core.spmv import DistributedSpmv, SpmvPlan, build_distributed, \
+    local_spmv
+
+__all__ = ["RebalanceConfig", "RebalanceEvent", "LoadMonitor", "replan",
+           "probe_plan_seconds", "weighted_shard_load"]
+
+
+def weighted_shard_load(dist: DistributedSpmv,
+                        w_caller: np.ndarray) -> np.ndarray:
+    """(P,) expected per-shard load of one request on a built program.
+
+    ``w_caller`` is per-column activity in the *caller's* index order; it
+    is permuted into the program's (possibly reordered) order and folded
+    through :func:`~repro.core.migration.shard_load_map`.  This is the
+    single definition of the load-attribution formula — the monitor's
+    cached fast path, the re-planner's post-swap CV, and the drift
+    benchmark all compute exactly this.
+    """
+    lm, base = shard_load_map(dist.matrix, dist.partition, dist.x_layout,
+                              dist.b_layout)
+    w = _permute_weights(w_caller, dist.perm) if dist.perm is not None \
+        else w_caller
+    return lm @ w + base
+
+
+@dataclasses.dataclass(frozen=True)
+class RebalanceConfig:
+    """Knobs for the monitor → detect → re-plan → swap loop.
+
+    The detector trips when the EMA-smoothed per-shard load CV exceeds
+    ``max(cv_trigger, cv_ratio * baseline_cv)`` for ``patience``
+    consecutive windows (the baseline is the same metric under uniform
+    traffic on the currently-active plan), outside the post-swap
+    ``cooldown``.  The re-plan budget is ``probe`` Emu-simulated bases
+    over the ``reorderings`` sub-grid; a candidate must beat the incumbent
+    by ``min_gain`` (relative, Emu-modeled seconds on the traffic-active
+    submatrix) and reproduce :func:`~repro.core.sparse_matrix.csr_matvec`
+    on ``validate_samples`` random vectors before it is swapped in.
+    """
+
+    window: int = 64
+    ema: float = 0.5
+    cv_trigger: float = 0.35
+    cv_ratio: float = 1.5
+    patience: int = 2
+    cooldown: int = 4
+    probe: int = 2
+    reorderings: tuple = REORDERINGS
+    min_gain: float = 0.02
+    validate_samples: int = 2
+    validate_atol: float = 1e-5   # fp32 slabs vs the float64 CSR oracle
+    seed: int = 0
+    #: Run the re-plan on a daemon worker thread instead of inline in the
+    #: request that closed the hot window.  Inline (the default) is
+    #: deterministic — the swap has happened by the time ``spmv`` returns —
+    #: but charges the full autotune + probe + build + validation to that
+    #: one request; async keeps request latency flat and swaps when the
+    #: worker finishes (requests served meanwhile use the old program).
+    async_replan: bool = False
+
+
+@dataclasses.dataclass
+class RebalanceEvent:
+    """One detector trip: what was measured, decided, and (maybe) swapped."""
+
+    request_index: int
+    window_index: int
+    old_plan: SpmvPlan
+    new_plan: SpmvPlan | None
+    load_cv_before: float
+    load_cv_after: float | None
+    probe_old_seconds: float | None
+    probe_new_seconds: float | None
+    swapped: bool
+    reason: str
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["old_plan"] = dataclasses.asdict(self.old_plan)
+        d["new_plan"] = None if self.new_plan is None else \
+            dataclasses.asdict(self.new_plan)
+        return d
+
+
+class LoadMonitor:
+    """Per-shard load watcher for one ingested matrix.
+
+    ``observe(x)`` is called on every served request with the request
+    vector/block (caller index order).  Activity is |x| accumulated per
+    column; when ``cfg.window`` requests have been seen the window closes:
+    the window's mean activity is normalized to mean 1 (so uniform dense
+    traffic reproduces the static instruction counts), EMA-folded into the
+    running estimate, and pushed through the active plan's column→shard
+    load map.  ``observe`` returns ``True`` when the hysteresis logic says
+    the engine should attempt a re-plan *now*.
+    """
+
+    def __init__(self, dist: DistributedSpmv, cfg: RebalanceConfig):
+        self.cfg = cfg
+        self._ncols = dist.matrix.ncols
+        self._act_sum = np.zeros(self._ncols, dtype=np.float64)
+        self._requests_in_window = 0
+        self._act_ema: np.ndarray | None = None
+        self._hot_streak = 0
+        self._cooldown_left = 0
+        self.requests_seen = 0
+        self.windows_closed = 0
+        self.last_cv = 0.0
+        self.trips = 0
+        self.attach(dist)
+
+    def attach(self, dist: DistributedSpmv) -> None:
+        """(Re)bind to the active program; called again after every swap.
+
+        The (load_map, base, perm) triple is swapped in as **one**
+        attribute assignment so a concurrent ``observe`` (async re-plan
+        worker swapping while request threads serve) never computes a
+        load with the new map but the old permutation.
+        """
+        lm, base = shard_load_map(dist.matrix, dist.partition, dist.x_layout,
+                                  dist.b_layout)
+        self._bound = (lm, base, dist.perm)
+        self.baseline_cv = _cv(lm @ np.ones(self._ncols) + base)
+        self.last_cv = self.baseline_cv
+        self._hot_streak = 0
+
+    # -- per-request path ---------------------------------------------------
+
+    def observe(self, x: np.ndarray) -> bool:
+        """Fold one request (or (N, B) block) in; True => attempt re-plan."""
+        a = np.abs(np.asarray(x, dtype=np.float64))
+        if a.ndim == 2:
+            self._act_sum += a.sum(axis=1)
+            self.requests_seen += a.shape[1]
+            self._requests_in_window += a.shape[1]
+        else:
+            self._act_sum += a
+            self.requests_seen += 1
+            self._requests_in_window += 1
+        if self._requests_in_window < self.cfg.window:
+            return False
+        return self._close_window()
+
+    def _close_window(self) -> bool:
+        w = self._act_sum / max(self._requests_in_window, 1)
+        mean = w.mean()
+        w = w / mean if mean > 0 else np.ones_like(w)
+        self._act_sum = np.zeros(self._ncols, dtype=np.float64)
+        self._requests_in_window = 0
+        self.windows_closed += 1
+
+        e = self.cfg.ema
+        self._act_ema = w if self._act_ema is None else \
+            e * self._act_ema + (1.0 - e) * w
+        # Detection runs on the *instantaneous* window CV — ``patience``
+        # then genuinely means "this many consecutive hot windows", and a
+        # single burst cannot bleed into the streak through the EMA.  The
+        # EMA (reported as last_cv, and handed to the re-planner) smooths
+        # the weights the new plan is derived from.
+        window_cv = _cv(self._shard_load_for(w))
+        self.last_cv = _cv(self.shard_load())
+
+        if self._cooldown_left > 0:
+            self._cooldown_left -= 1
+            self._hot_streak = 0
+            return False
+        threshold = max(self.cfg.cv_trigger,
+                        self.cfg.cv_ratio * self.baseline_cv)
+        if window_cv > threshold:
+            self._hot_streak += 1
+        else:
+            self._hot_streak = 0
+        if self._hot_streak >= self.cfg.patience:
+            self._hot_streak = 0
+            self.trips += 1
+            return True
+        return False
+
+    # -- read-side ----------------------------------------------------------
+
+    def activity(self) -> np.ndarray:
+        """Current EMA per-column activity (caller order, mean 1)."""
+        if self._act_ema is None:
+            return np.ones(self._ncols, dtype=np.float64)
+        return self._act_ema
+
+    def shard_load(self) -> np.ndarray:
+        """(P,) expected per-shard load of one request under current traffic.
+
+        The activity estimate lives in caller index order; the active
+        program may be reordered, so the weights are permuted into the
+        program's order before hitting the load map.
+        """
+        return self._shard_load_for(self.activity())
+
+    def _shard_load_for(self, w_caller: np.ndarray) -> np.ndarray:
+        # Cached-map fast path of :func:`weighted_shard_load` (one window
+        # = one matvec); the triple is read in one statement for the same
+        # atomicity reason attach() writes it in one.
+        lm, base, perm = self._bound
+        w = _permute_weights(w_caller, perm) if perm is not None else w_caller
+        return lm @ w + base
+
+    def cooldown(self) -> None:
+        """Start the post-swap (or post-rejected-replan) grace period."""
+        self._cooldown_left = self.cfg.cooldown
+        self._hot_streak = 0
+
+    def stats(self) -> dict:
+        return {"requests_seen": self.requests_seen,
+                "windows_closed": self.windows_closed,
+                "baseline_cv": round(self.baseline_cv, 6),
+                "last_cv": round(self.last_cv, 6),
+                "trips": self.trips}
+
+
+def _cv(v: np.ndarray) -> float:
+    mu = v.mean()
+    return float(v.std() / mu) if mu else 0.0
+
+
+def probe_plan_seconds(csr: CSRMatrix, plan: SpmvPlan,
+                       col_weight: np.ndarray,
+                       emu: EmuConfig | None = None) -> float:
+    """Emu-modeled seconds for one SpMV of ``plan`` under observed traffic.
+
+    The drift oracle: the matrix is reordered per the plan, restricted to
+    the traffic-active columns
+    (:func:`~repro.core.plan._active_submatrix`), and run through the
+    vectorized Emu timeline engine with the plan's partition/layout — a
+    millisecond-cheap measurement of how the *deployed* program handles
+    the traffic the monitor actually saw.
+    """
+    emu = emu or EmuConfig(nodelets=plan.num_shards)
+    # Thin once in caller order (identical entry set for every plan being
+    # compared), then permute the thinned matrix alongside the plan.
+    sub = _active_submatrix(csr, np.asarray(col_weight, np.float64))
+    perm = reordering_permutation(csr, plan.reordering, seed=plan.seed,
+                                  parts=plan.num_shards)
+    if plan.reordering == "none":
+        A, sub_r = csr, sub
+    else:
+        A = csr.permuted(perm, perm)
+        sub_r = sub.permuted(perm, perm)
+    # The partition is the deployed one: cut on the full matrix, probed on
+    # the traffic it actually serves.
+    part = make_partition(A, plan.num_shards, plan.distribution)
+    res = run_spmv(sub_r, part, make_layout(plan.layout, A.ncols,
+                                            plan.num_shards), emu)
+    return float(res.seconds)
+
+
+def replan(csr: CSRMatrix, monitor: LoadMonitor, current: PlanChoice, *,
+           num_shards: int, seed: int, cfg: RebalanceConfig,
+           request_index: int
+           ) -> tuple[DistributedSpmv | None, PlanChoice | None,
+                      RebalanceEvent]:
+    """Budgeted traffic-weighted re-plan with oracle gate + validated build.
+
+    Returns ``(new_dist, new_choice, event)``; the first two are ``None``
+    when the re-plan was rejected (plan unchanged, no modeled gain, or
+    validation failure) — the caller keeps serving the old program either
+    way, which is what makes the swap double-buffered.
+    """
+    w = monitor.activity()
+    cv_before = monitor.last_cv
+    choice = autotune(csr, num_shards=num_shards, seed=seed,
+                      probe=cfg.probe, reorderings=cfg.reorderings,
+                      col_weight=w)
+    new_plan = choice.plan
+    old_plan = current.plan
+
+    def rejected(reason: str, old_s=None, new_s=None) -> tuple:
+        return None, None, RebalanceEvent(
+            request_index=request_index, window_index=monitor.windows_closed,
+            old_plan=old_plan, new_plan=new_plan,
+            load_cv_before=cv_before, load_cv_after=None,
+            probe_old_seconds=old_s, probe_new_seconds=new_s,
+            swapped=False, reason=reason)
+
+    if new_plan == old_plan:
+        return rejected("re-plan chose the incumbent plan")
+
+    old_s = probe_plan_seconds(csr, old_plan, w)
+    new_s = probe_plan_seconds(csr, new_plan, w)
+    if new_s > (1.0 - cfg.min_gain) * old_s:
+        return rejected("drift oracle: no modeled gain over incumbent",
+                        old_s, new_s)
+
+    # Double-buffered build: the old program keeps serving until the new
+    # one exists and reproduces the exact CSR oracle.
+    dist = build_distributed(csr, new_plan)
+    rng = np.random.default_rng(cfg.seed + request_index)
+    for _ in range(cfg.validate_samples):
+        xs = rng.standard_normal(csr.ncols)
+        if not np.allclose(local_spmv(dist, xs), csr_matvec(csr, xs),
+                           atol=cfg.validate_atol, rtol=1e-5):
+            return rejected("validation failed: candidate program does not "
+                            "reproduce csr_matvec", old_s, new_s)
+
+    cv_after = _cv(weighted_shard_load(dist, w))
+    event = RebalanceEvent(
+        request_index=request_index, window_index=monitor.windows_closed,
+        old_plan=old_plan, new_plan=new_plan,
+        load_cv_before=cv_before, load_cv_after=cv_after,
+        probe_old_seconds=old_s, probe_new_seconds=new_s,
+        swapped=True, reason="swapped: modeled gain "
+        f"{(1.0 - new_s / max(old_s, 1e-30)):.1%}")
+    return dist, choice, event

@@ -1,0 +1,226 @@
+"""Online rebalancer tests: a drifting request stream trips the detector
+and swaps in a validated plan; serving stays consistent with the kernel
+oracle through the swap; a stable stream never re-plans (hysteresis).
+"""
+import numpy as np
+import pytest
+
+from repro.core.layout import make_layout
+from repro.core.migration import count_migrations, migration_arrivals, \
+    remote_access_matrix, shard_load_map
+from repro.core.partition import make_partition, partition_nonzeros
+from repro.core.sparse_matrix import csr_matvec, csr_row_nnz, csr_to_dense
+from repro.data.matrices import make_matrix
+from repro.kernels import ops as kops
+from repro.serve.engine import SparseMatrixEngine
+from repro.serve.rebalance import LoadMonitor, RebalanceConfig
+
+CFG = RebalanceConfig(window=32, patience=2, cooldown=2, probe=2)
+
+
+def _engine(A, cfg=CFG):
+    eng = SparseMatrixEngine(num_shards=4, rebalance=cfg)
+    eng.ingest("a", A)
+    return eng
+
+
+def _hot_cols(eng, name="a"):
+    """Columns (caller order) the active program placed on shard 0."""
+    d = eng._matrices[name].dist
+    order = np.arange(d.matrix.ncols) if d.perm is None else d.perm
+    return np.flatnonzero(d.x_layout.owner_of(order) == 0)
+
+
+def _request(rng, N, k, cols=None):
+    x = np.zeros(N)
+    idx = rng.integers(0, N, k) if cols is None else rng.choice(cols, size=k)
+    x[idx] = rng.standard_normal(k)
+    return x
+
+
+def _seg_oracle(A, x):
+    """Full-matrix seg_spmv_ref oracle in the caller's index order."""
+    seg = kops.seg_from_csr(A)
+    return np.asarray(kops.seg_spmv_ref(seg.vals, seg.cols, seg.rows,
+                                        np.asarray(x, np.float32),
+                                        num_rows=A.nrows))
+
+
+def test_drifting_stream_trips_and_swaps_consistently():
+    """(a) hot stream trips the detector; (b) y = A @ x stays consistent
+    with the seg_spmv_ref oracle through the swap."""
+    A = make_matrix("cop20k_A", scale=0.005)
+    N = A.ncols
+    eng = _engine(A)
+    m = eng._matrices["a"]
+    hot = _hot_cols(eng)
+    rng = np.random.default_rng(0)
+    k = max(N // 20, 8)
+
+    for _ in range(2 * CFG.window):                      # warm-up, uniform
+        eng.spmv("a", _request(rng, N, k))
+    assert not m.rebalance_log                           # no false trip
+
+    swapped_at = None
+    for i in range(10 * CFG.window):
+        x = _request(rng, N, k, cols=hot)
+        y = eng.spmv("a", x)
+        # consistency with the kernel-path oracle before/through/after swap
+        np.testing.assert_allclose(y, _seg_oracle(A, x), atol=1e-3,
+                                   rtol=1e-4)
+        np.testing.assert_allclose(y, csr_matvec(A, x), atol=1e-4,
+                                   rtol=1e-5)
+        if swapped_at is None and any(e.swapped for e in m.rebalance_log):
+            swapped_at = i
+    assert m.monitor.trips >= 1, "hot-spot stream never tripped the detector"
+    assert swapped_at is not None, "detector tripped but nothing swapped"
+    swap = next(e for e in m.rebalance_log if e.swapped)
+    # the swap was load-motivated and helped: weighted CV dropped a lot
+    assert swap.load_cv_before > 2 * swap.load_cv_after
+    # oracle gate held: the modeled seconds improved
+    assert swap.probe_new_seconds < swap.probe_old_seconds
+    # the served plan is the swapped-in one
+    assert eng.plan("a") == swap.new_plan
+    # repeated identical requests are bitwise stable on the new program
+    x = _request(rng, N, k, cols=hot)
+    assert np.array_equal(eng.spmv("a", x), eng.spmv("a", x))
+
+
+def test_stable_stream_never_replans():
+    """(c) hysteresis: a uniform stream closes many windows, zero trips."""
+    A = make_matrix("cop20k_A", scale=0.005)
+    N = A.ncols
+    eng = _engine(A)
+    m = eng._matrices["a"]
+    rng = np.random.default_rng(1)
+    k = max(N // 20, 8)
+    for _ in range(8 * CFG.window):
+        eng.spmv("a", _request(rng, N, k))
+    assert m.monitor.windows_closed >= 8
+    assert m.monitor.trips == 0
+    assert not m.rebalance_log
+    assert eng.stats()["a"]["rebalance"]["replans"] == 0
+
+
+def test_single_burst_does_not_trip():
+    """patience=2 means one hot window alone never triggers a re-plan."""
+    A = make_matrix("cop20k_A", scale=0.005)
+    N = A.ncols
+    eng = _engine(A)
+    m = eng._matrices["a"]
+    hot = _hot_cols(eng)
+    rng = np.random.default_rng(2)
+    k = max(N // 20, 8)
+    for _ in range(CFG.window):                 # exactly one hot window
+        eng.spmv("a", _request(rng, N, k, cols=hot))
+    for _ in range(4 * CFG.window):             # back to uniform
+        eng.spmv("a", _request(rng, N, k))
+    assert m.monitor.trips == 0
+    assert not m.rebalance_log
+
+
+def test_monitor_baseline_matches_static_counts():
+    """Uniform activity through the load map == count_migrations' counts."""
+    A = make_matrix("ford1", scale=0.05)
+    part = make_partition(A, 4, "nonzero")
+    xl = make_layout("block", A.ncols, 4)
+    bl = make_layout("block", A.nrows, 4)
+    lm, base = shard_load_map(A, part, xl, bl)
+    static = count_migrations(A, part, xl, bl).mem_instr_per_nodelet
+    np.testing.assert_allclose(lm @ np.ones(A.ncols) + base,
+                               static.astype(np.float64))
+
+
+def test_weighted_accounting_reduces_to_unweighted():
+    """col_weight=1 reproduces the exact integer counts."""
+    A = make_matrix("cop20k_A", scale=0.005)
+    part = make_partition(A, 4, "row")
+    xl = make_layout("block", A.ncols, 4)
+    ones = np.ones(A.ncols)
+    np.testing.assert_allclose(
+        migration_arrivals(A, part, xl, col_weight=ones),
+        migration_arrivals(A, part, xl).astype(np.float64))
+    np.testing.assert_allclose(
+        remote_access_matrix(A, part, xl, col_weight=ones),
+        remote_access_matrix(A, part, xl).astype(np.float64))
+
+
+def test_weighted_nonzero_partition_balances_weighted_work():
+    """Traffic-weighted nnz split equalizes weighted (not raw) nnz."""
+    A = make_matrix("webbase-1M", scale=0.001)
+    w_col = np.ones(A.ncols)
+    w_col[: A.ncols // 8] = 50.0            # hot leading columns
+    nnz_w = w_col[A.col_index]
+    part = partition_nonzeros(A, 4, nnz_weight=nnz_w)
+    rows = np.repeat(np.arange(A.nrows), csr_row_nnz(A))
+    per_shard = np.zeros(4)
+    np.add.at(per_shard, part.owner_of_rows(A.nrows)[rows], nnz_w)
+    cv_weighted = per_shard.std() / per_shard.mean()
+    # the unweighted split leaves the weighted work skewed
+    part0 = partition_nonzeros(A, 4)
+    per0 = np.zeros(4)
+    np.add.at(per0, part0.owner_of_rows(A.nrows)[rows], nnz_w)
+    cv_unweighted = per0.std() / per0.mean()
+    assert cv_weighted < 0.5 * cv_unweighted
+    # and it still covers every row exactly once
+    assert part.starts[0] == 0 and part.starts[-1] == A.nrows
+    assert (np.diff(part.starts) >= 0).all()
+
+
+def test_rejected_replan_keeps_serving_old_plan():
+    """min_gain=1.0 rejects every candidate; serving must not degrade."""
+    A = make_matrix("cop20k_A", scale=0.005)
+    N = A.ncols
+    cfg = RebalanceConfig(window=32, patience=2, cooldown=2, probe=2,
+                          min_gain=1.0)
+    eng = _engine(A, cfg)
+    m = eng._matrices["a"]
+    plan0 = eng.plan("a")
+    hot = _hot_cols(eng)
+    rng = np.random.default_rng(3)
+    k = max(N // 20, 8)
+    for _ in range(6 * cfg.window):
+        x = _request(rng, N, k, cols=hot)
+        np.testing.assert_allclose(eng.spmv("a", x), csr_matvec(A, x),
+                                   atol=1e-4, rtol=1e-5)
+    assert eng.plan("a") == plan0
+    assert m.rebalance_log and all(not e.swapped for e in m.rebalance_log)
+
+
+def test_async_replan_swaps_off_the_request_path():
+    """async_replan=True: the triggering request returns immediately, the
+    worker swaps in the validated plan, and serving stays correct while
+    (and after) the re-plan runs on the old program."""
+    A = make_matrix("cop20k_A", scale=0.005)
+    N = A.ncols
+    cfg = RebalanceConfig(window=32, patience=2, cooldown=2, probe=2,
+                          async_replan=True)
+    eng = _engine(A, cfg)
+    m = eng._matrices["a"]
+    hot = _hot_cols(eng)
+    rng = np.random.default_rng(4)
+    k = max(N // 20, 8)
+    for _ in range(2 * cfg.window):
+        eng.spmv("a", _request(rng, N, k))
+    for _ in range(6 * cfg.window):
+        x = _request(rng, N, k, cols=hot)
+        np.testing.assert_allclose(eng.spmv("a", x), csr_matvec(A, x),
+                                   atol=1e-4, rtol=1e-5)
+        if m.replan_thread is not None:
+            break
+    assert m.replan_thread is not None, "detector never handed off a re-plan"
+    m.replan_thread.join(timeout=120)
+    assert not m.replan_thread.is_alive()
+    assert any(e.swapped for e in m.rebalance_log)
+    x = _request(rng, N, k, cols=hot)
+    np.testing.assert_allclose(eng.spmv("a", x), csr_matvec(A, x),
+                               atol=1e-4, rtol=1e-5)
+
+
+def test_monitor_batched_requests_count_columns():
+    A = make_matrix("ford1", scale=0.05)
+    eng = _engine(A)
+    mon = eng._matrices["a"].monitor
+    X = np.random.default_rng(0).standard_normal((A.ncols, 5))
+    eng.spmv("a", X)
+    assert mon.requests_seen == 5

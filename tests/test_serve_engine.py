@@ -1,0 +1,151 @@
+"""Serving-path regression tests: Engine.generate edge semantics, the
+SparseMatrixEngine error/stats contract, batched multi-RHS SpMV exactness,
+and the feature-keyed plan cache.
+"""
+import numpy as np
+import pytest
+
+from repro.core.sparse_matrix import csr_to_dense
+from repro.core.spmv import SpmvPlan, build_distributed, local_spmv
+from repro.data.matrices import make_matrix
+from repro.serve.engine import Engine, ServeConfig, SparseMatrixEngine
+
+
+# --------------------------------------------------------------------------
+# Engine.generate edges (prefill/decode semantics)
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def lm_engine():
+    import jax
+    from repro.configs.registry import get_smoke_config
+    from repro.models import params as pp
+    cfg = get_smoke_config("qwen3_4b")
+    params = pp.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_generate_steps_zero_returns_prompts(lm_engine):
+    cfg, params = lm_engine
+    eng = Engine(cfg, params, ServeConfig(max_len=32))
+    prompts = np.array([[1, 2, 3], [4, 5, 6]], dtype=np.int32)
+    out = eng.generate(prompts, steps=0)
+    np.testing.assert_array_equal(out, prompts)
+    # and a (B, 0) prompt with steps=0 is a harmless no-op
+    empty = np.zeros((2, 0), dtype=np.int32)
+    assert eng.generate(empty, steps=0).shape == (2, 0)
+    # steps=0 never samples, so it must not demand a key either
+    sampling = Engine(cfg, params, ServeConfig(max_len=32, temperature=0.9))
+    np.testing.assert_array_equal(sampling.generate(prompts, steps=0),
+                                  prompts)
+
+
+def test_generate_empty_prefill_raises(lm_engine):
+    """S0 == 0 with steps > 0 used to crash with NameError on `logits`;
+    the chosen semantics are an explicit error telling callers to seed
+    the prompt (e.g. BOS)."""
+    cfg, params = lm_engine
+    eng = Engine(cfg, params, ServeConfig(max_len=32))
+    empty = np.zeros((2, 0), dtype=np.int32)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.generate(empty, steps=4)
+
+
+def test_generate_temperature_requires_key(lm_engine):
+    """temperature > 0 without a key used to silently decode greedily."""
+    import jax
+    cfg, params = lm_engine
+    eng = Engine(cfg, params, ServeConfig(max_len=32, temperature=0.8))
+    prompts = np.array([[1, 2]], dtype=np.int32)
+    with pytest.raises(ValueError, match="PRNG key"):
+        eng.generate(prompts, steps=2)
+    out = eng.generate(prompts, steps=2, key=jax.random.PRNGKey(0))
+    assert out.shape == (1, 4)
+
+
+def test_generate_greedy_still_works(lm_engine):
+    cfg, params = lm_engine
+    eng = Engine(cfg, params, ServeConfig(max_len=32))
+    prompts = np.array([[1, 2]], dtype=np.int32)
+    out = eng.generate(prompts, steps=3)
+    assert out.shape == (1, 5)
+    np.testing.assert_array_equal(out[:, :2], prompts)
+
+
+# --------------------------------------------------------------------------
+# SparseMatrixEngine contract
+# --------------------------------------------------------------------------
+
+def test_spmv_unknown_name_is_actionable_and_uncounted():
+    eng = SparseMatrixEngine(num_shards=4)
+    A = make_matrix("ford1", scale=0.05)
+    eng.ingest("ford", A)
+    x = np.zeros(A.ncols)
+    with pytest.raises(KeyError, match="ford"):
+        eng.spmv("typo", x)
+    # the failed call neither counted nor created anything
+    assert eng.stats()["ford"]["spmv_count"] == 0
+    assert set(eng.stats()) == {"ford"}
+    eng.spmv("ford", x)
+    assert eng.stats()["ford"]["spmv_count"] == 1
+    with pytest.raises(KeyError):
+        eng.plan("typo")
+
+
+def test_batched_spmv_bitwise_matches_per_vector():
+    """(M, B) blocks equal per-vector calls bitwise, both kernels."""
+    A = make_matrix("cop20k_A", scale=0.005)
+    rng = np.random.default_rng(0)
+    X = rng.standard_normal((A.ncols, 4))
+    for kernel in ("ell", "seg"):
+        dist = build_distributed(A, SpmvPlan(kernel=kernel, num_shards=4,
+                                             reordering="bfs"))
+        Y = local_spmv(dist, X)
+        assert Y.shape == (A.nrows, 4)
+        for b in range(X.shape[1]):
+            assert np.array_equal(Y[:, b], local_spmv(dist, X[:, b])), \
+                (kernel, b)
+        np.testing.assert_allclose(Y, csr_to_dense(A) @ X, atol=1e-6)
+    with pytest.raises(ValueError, match="elements"):
+        local_spmv(dist, X[: A.ncols // 2])
+    with pytest.raises(ValueError, match=r"\(N,\) or \(N, B\)"):
+        local_spmv(dist, X[..., None])
+
+
+def test_engine_serves_batched_requests():
+    eng = SparseMatrixEngine(num_shards=4)
+    A = make_matrix("rmat", scale=0.002)
+    eng.ingest("r", A)
+    X = np.random.default_rng(1).standard_normal((A.ncols, 3))
+    Y = eng.spmv("r", X)
+    np.testing.assert_allclose(Y, csr_to_dense(A) @ X, atol=1e-6)
+    for b in range(3):
+        assert np.array_equal(eng.spmv("r", X[:, b]), Y[:, b])
+
+
+def test_plan_cache_reuses_structural_twins():
+    eng = SparseMatrixEngine(num_shards=4)
+    c1 = eng.ingest("m1", make_matrix("rmat", scale=0.002, seed=0))
+    assert eng.plan_cache_hits == 0
+    c2 = eng.ingest("m2", make_matrix("rmat", scale=0.002, seed=7))
+    assert eng.plan_cache_hits == 1
+    assert eng.stats()["m2"]["plan_cache_hit"]
+    assert not eng.stats()["m1"]["plan_cache_hit"]
+    assert c2.plan == c1.plan
+    assert len(c2.ranking) == 1 and c2.probed == 0   # no grid re-run
+    # a different archetype misses
+    eng.ingest("banded", make_matrix("ford1", scale=0.05))
+    assert eng.plan_cache_hits == 1
+    # cached plans still serve correctly
+    A2 = make_matrix("rmat", scale=0.002, seed=7)
+    x = np.random.default_rng(2).standard_normal(A2.ncols)
+    np.testing.assert_allclose(eng.spmv("m2", x), csr_to_dense(A2) @ x,
+                               atol=1e-6)
+
+
+def test_plan_cache_can_be_disabled():
+    eng = SparseMatrixEngine(num_shards=4, plan_cache=False)
+    eng.ingest("m1", make_matrix("rmat", scale=0.002, seed=0))
+    c2 = eng.ingest("m2", make_matrix("rmat", scale=0.002, seed=7))
+    assert eng.plan_cache_hits == 0
+    assert len(c2.ranking) > 1                       # full grid ran
