@@ -19,6 +19,12 @@ Drift mode runs the serving rebalancer benchmark
 restoration + modeled throughput uplift) as a ``BENCH_emu.json`` entry:
 
     PYTHONPATH=src python -m benchmarks.perf_probe --drift
+
+Hetero mode runs the mixed-structure per-shard-program benchmark
+(``benchmarks/hetero_bench.py``) and records the per-shard-vs-best-global
+headline (model cycles + host serving wall-clock):
+
+    PYTHONPATH=src python -m benchmarks.perf_probe --hetero
 """
 from __future__ import annotations
 
@@ -150,6 +156,27 @@ def run_drift_probe(out: str | None) -> int:
     return 0 if ok else 1
 
 
+def run_hetero_probe(out: str | None) -> int:
+    """Record the hetero-bench headline numbers in ``BENCH_emu.json``.
+
+    Runs the full mixed-structure scenario (see
+    ``benchmarks/hetero_bench.py``) and appends its entry; exit status is
+    the bench's own acceptance gate (the autotuned per-shard program
+    exists, is genuinely heterogeneous, beats the best global plan on the
+    analytic model, and reproduces the exact oracle).
+    """
+    from benchmarks.hetero_bench import check, run_hetero_bench
+    entry = run_hetero_bench()
+    ok = check(entry)
+    path = append_bench_entry(entry, out)
+    print(json.dumps(entry, indent=2))
+    mt = entry["model_total_cycles"]
+    print(f"# hetero: per-shard {entry.get('shard_kernels')} vs best global "
+          f"{entry['best_global_plan']}; model speedup {mt['speedup']}x "
+          f"(bar > 1.0) -> {'PASS' if ok else 'FAIL'}; recorded in {path}")
+    return 0 if ok else 1
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("arch", nargs="?")
@@ -159,6 +186,10 @@ def main():
     ap.add_argument("--drift", action="store_true",
                     help="run the serving drift bench and record headline "
                          "numbers (benchmarks/drift_bench.py)")
+    ap.add_argument("--hetero", action="store_true",
+                    help="run the mixed-structure per-shard-program bench "
+                         "and record headline numbers "
+                         "(benchmarks/hetero_bench.py)")
     ap.add_argument("--scale", type=float, default=1.0,
                     help="fig8 matrix scale for the vectorized timing")
     ap.add_argument("--ref-scale", type=float, default=0.02,
@@ -181,6 +212,8 @@ def main():
                                args.budget_seconds, args.out))
     if args.drift:
         sys.exit(run_drift_probe(args.out))
+    if args.hetero:
+        sys.exit(run_hetero_probe(args.out))
     if args.arch is None or args.shape is None:
         ap.error("arch and shape are required unless --emu is given")
 

@@ -10,8 +10,11 @@ import traceback
 
 
 def main() -> None:
+    import json
+
     from . import (autotune_bench, fig3_layout, fig6_distribution, fig7_cv,
-                   fig8_residency, fig10_reorder, fig12_cache, kernels_bench)
+                   fig8_residency, fig10_reorder, fig12_cache, hetero_bench,
+                   kernels_bench)
     sections = [
         ("Fig.3 cyclic-vs-block", fig3_layout.run),
         # fast=True keeps the all-sections sweep snappy; run the fig6/fig8
@@ -23,6 +26,9 @@ def main() -> None:
         ("Fig.12 reorderings (cache CPU)", fig12_cache.run),
         ("kernel microbench", kernels_bench.run),
         ("Autotuner chosen-vs-best-static", autotune_bench.run),
+        ("Per-shard program vs best global (hetero)",
+         lambda: print(json.dumps(hetero_bench.run_hetero_bench(fast=True),
+                                  indent=2))),
     ]
     try:
         from . import roofline

@@ -46,18 +46,23 @@ class VectorLayout:
         return per * self.num_shards
 
     def to_sharded(self, v: np.ndarray) -> np.ndarray:
-        """Host-side reshape to (P, per_shard) in layout order (pad w/ 0)."""
+        """Host-side reshape to (P, per_shard[, B]) in layout order (pad 0).
+
+        ``v`` is (length,) or a multi-RHS block (length, B); any trailing
+        axes ride along untouched."""
         per = self.padded_length() // self.num_shards
-        buf = np.zeros(self.padded_length(), dtype=v.dtype)
+        buf = np.zeros((self.padded_length(),) + v.shape[1:], dtype=v.dtype)
         buf[: self.length] = v
         if self.kind == "block":
-            return buf.reshape(self.num_shards, per)
-        return buf.reshape(per, self.num_shards).T.copy()
+            return buf.reshape((self.num_shards, per) + v.shape[1:])
+        cyc = buf.reshape((per, self.num_shards) + v.shape[1:])
+        return np.ascontiguousarray(np.swapaxes(cyc, 0, 1))
 
     def from_sharded(self, shards: np.ndarray) -> np.ndarray:
         if self.kind == "block":
-            return shards.reshape(-1)[: self.length]
-        return shards.T.reshape(-1)[: self.length]
+            return shards.reshape((-1,) + shards.shape[2:])[: self.length]
+        cyc = np.swapaxes(shards, 0, 1)
+        return cyc.reshape((-1,) + shards.shape[2:])[: self.length]
 
 
 def block_layout(length: int, num_shards: int) -> VectorLayout:

@@ -47,6 +47,16 @@ class Partition:
     def rows_of(self, p: int) -> range:
         return range(int(self.starts[p]), int(self.starts[p + 1]))
 
+    def shard_csr(self, csr: CSRMatrix, p: int) -> CSRMatrix:
+        """Shard p's mini-CSR (relative row offsets, Fig. 2).
+
+        The single definition of "shard p's slice of A" shared by the
+        program lowering (``core/program.py``), the per-shard kernel cost
+        table and shard features (``core/plan.py``) — so every per-shard
+        consumer reads exactly the same row range.
+        """
+        return csr.row_slice(int(self.starts[p]), int(self.starts[p + 1]))
+
     def rows_per_shard(self) -> np.ndarray:
         return np.diff(self.starts)
 

@@ -43,13 +43,14 @@ from .migration import count_migrations, migration_arrivals, \
 from .partition import Partition, make_partition
 from .reorder import REORDERINGS, reordering_permutation
 from .sparse_matrix import CSRMatrix, ELL_LANE, ELL_SUBLANE, csr_from_coo, \
-    csr_row_nnz
-from .spmv import SpmvPlan
+    csr_row_nnz, hyb_cap_width
+from .spmv import PLAN_KERNELS, SpmvPlan
 from repro.kernels.ops import SEG_CHUNK
 
-__all__ = ["DEFAULT_PROBE", "MatrixFeatures", "PlanCost", "RankedPlan",
-           "PlanChoice", "extract_features", "estimate_cost", "autotune",
-           "feature_key"]
+__all__ = ["DEFAULT_PROBE", "KERNELS", "MatrixFeatures", "ShardFeatures",
+           "PlanCost", "RankedPlan", "PlanChoice", "extract_features",
+           "extract_shard_features", "estimate_cost", "autotune",
+           "feature_key", "kernel_shard_costs", "select_shard_kernels"]
 
 #: Bases the autotuner re-ranks with the Emu timeline simulator when the
 #: caller does not pass ``probe``.  Probing is on by default since the
@@ -57,14 +58,29 @@ __all__ = ["DEFAULT_PROBE", "MatrixFeatures", "PlanCost", "RankedPlan",
 #: minutes; pass ``probe=0`` for the analytic-only ranking.
 DEFAULT_PROBE = 4
 
-#: Weight of the TPU-side padding term relative to Emu issue cycles.  Small
-#: enough that Emu-visible terms dominate across (layout, distribution,
-#: reordering) bases; decisive between the ``ell``/``seg`` kernels, which
-#: the Emu terms cannot distinguish.
+#: Weight of the TPU-side kernel-execution term relative to Emu issue
+#: cycles.  Small enough that Emu-visible terms dominate across (layout,
+#: distribution, reordering) bases; decisive between the per-shard
+#: ``ell``/``seg``/``hyb`` kernels, which the Emu terms cannot distinguish.
 _W_PAD = 0.02
 #: Cycles charged per x element moved by the collective exchange (halo
 #: all-to-all vs all-gather) — again sub-dominant, decisive within a base.
 _W_COMM = 0.25
+
+#: Kernel formats a shard stage may select, in tie-break preference order
+#: — alias of the single definition in ``spmv.PLAN_KERNELS`` (also aliased
+#: as ``program.PROGRAM_KERNELS`` for the switch branch ids).
+KERNELS = PLAN_KERNELS
+#: Relative slot-cost weights behind :func:`kernel_shard_costs`.  An ELL
+#: slab cell costs 1 (one regular FMA lane-slot, padding included); a seg
+#: chunk cell costs ``_W_SEG_SCAN`` (the prefix-scan reads and writes each
+#: slot) plus ``_W_SEG_PIECE`` per piece (the serialized carry fix-up
+#: scatter-add); a HYB overflow entry costs ``_W_OVF`` (pure scatter-add,
+#: no scan).  The absolute scale cancels inside a base — only the ratios
+#: decide which format a shard gets.
+_W_SEG_SCAN = 2.0
+_W_SEG_PIECE = 16.0
+_W_OVF = 8.0
 
 
 def _round_up(x: int, m: int) -> int:
@@ -182,6 +198,63 @@ def extract_features(csr: CSRMatrix, *, num_shards: int = 8) -> MatrixFeatures:
         hot_col_share=hot, remote_frac=remote)
 
 
+@dataclasses.dataclass(frozen=True)
+class ShardFeatures:
+    """Structural features of one shard's row slice (plain scalars).
+
+    The per-shard analogue of :class:`MatrixFeatures`: what the per-shard
+    kernel selector reacts to.  A shard with low ``row_nnz_cv`` and a
+    moderate ``row_nnz_max`` keeps the regular ELL slab; a skewed shard
+    (``row_nnz_cv`` high, ``tail_share`` high) pushes toward ``seg`` or
+    ``hyb``.  Serialized with the :class:`PlanChoice` so an operator can
+    audit *why* each shard got its kernel.
+    """
+
+    shard: int
+    rows: int
+    nnz: int
+    row_nnz_mean: float
+    row_nnz_cv: float
+    row_nnz_max: float
+    tail_share: float
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def extract_shard_features(csr: CSRMatrix,
+                           part: Partition) -> tuple:
+    """Per-shard structural features for every row slice of ``part``.
+
+    Examples
+    --------
+    >>> from repro.core.partition import make_partition
+    >>> from repro.core.plan import extract_shard_features
+    >>> from repro.data.matrices import powerlaw
+    >>> A = powerlaw(512, 8000, seed=0)
+    >>> fs = extract_shard_features(A, make_partition(A, 4, "nonzero"))
+    >>> len(fs), fs[0].shard, sum(f.nnz for f in fs) == A.nnz
+    (4, 0, True)
+    """
+    per_row = csr_row_nnz(csr).astype(np.float64)
+    out = []
+    for p in range(part.num_shards):
+        r0, r1 = int(part.starts[p]), int(part.starts[p + 1])
+        rows = per_row[r0:r1]
+        nnz_p = int(csr.row_ptr[r1] - csr.row_ptr[r0])
+        mean = float(rows.mean()) if r1 > r0 else 0.0
+        cv = float(rows.std() / mean) if mean else 0.0
+        top = max(int(np.ceil((r1 - r0) * 0.01)), 1)
+        tail = float(np.sort(rows)[-top:].sum() / max(nnz_p, 1)) \
+            if r1 > r0 else 0.0
+        out.append(ShardFeatures(
+            shard=p, rows=r1 - r0, nnz=nnz_p, row_nnz_mean=mean,
+            row_nnz_cv=cv,
+            row_nnz_max=float(rows.max()) if r1 > r0 else 0.0,
+            tail_share=tail))
+    return tuple(out)
+
+
 def feature_key(features: MatrixFeatures) -> tuple:
     """Coarse structural signature for feature-keyed plan caching.
 
@@ -227,7 +300,10 @@ class PlanCost:
     ``ingress_cycles`` the migration-arrival service time at the hottest
     nodelet (the §IV-D collapse mechanism); ``migration_cycles`` the
     per-thread migration overhead; ``padding_cycles`` the (down-weighted)
-    TPU-side wasted-slot term that separates the ``ell``/``seg`` kernels;
+    TPU-side kernel-execution-slot term — :func:`kernel_shard_costs`
+    summed over shards, the term that separates the per-shard
+    ``ell``/``seg``/``hyb`` kernels (the field name predates the per-shard
+    refactor and is kept for JSON back-compatibility);
     ``comm_cycles`` the (down-weighted) collective-volume term that
     separates ``halo``/``allgather``.  ``total`` is the ranking key.
     """
@@ -266,11 +342,20 @@ class PlanChoice:
     ``ranking[0].plan`` is the chosen plan; :meth:`to_json` /
     :meth:`from_json` round-trip the whole object, so a serving layer can
     persist the decision next to the ingested matrix.
+
+    JSON written before the per-shard refactor (no ``shard_kernels`` plan
+    field, no ``shard_features`` entry) still loads: the missing fields
+    default to ``None``, which lowers as the uniform program
+    (``tests/test_plan.py`` pins a legacy fixture).
     """
 
     features: MatrixFeatures
     ranking: tuple[RankedPlan, ...]
     probed: int
+    #: Per-shard features of the winning plan's (reordered) partition —
+    #: the audit trail for its shard_kernels.  None on legacy JSON and on
+    #: externally-supplied plans.
+    shard_features: tuple | None = None
 
     @property
     def plan(self) -> SpmvPlan:
@@ -283,11 +368,16 @@ class PlanChoice:
             "features": self.features.to_dict(),
             "ranking": [r.to_dict() for r in self.ranking],
             "probed": self.probed,
+            "shard_features": None if self.shard_features is None else
+            [f.to_dict() for f in self.shard_features],
         }, indent=indent)
 
     @classmethod
     def from_json(cls, s: str) -> "PlanChoice":
-        """Inverse of :meth:`to_json` (exact dataclass equality)."""
+        """Inverse of :meth:`to_json` (exact dataclass equality).
+
+        Tolerates pre-per-shard JSON: absent ``shard_features`` /
+        ``plan.shard_kernels`` load as ``None`` (uniform program)."""
         d = json.loads(s)
         ranking = tuple(
             RankedPlan(plan=SpmvPlan(**r["plan"]),
@@ -295,8 +385,11 @@ class PlanChoice:
                        probe_seconds=r["probe_seconds"],
                        probe_mbs=r["probe_mbs"])
             for r in d["ranking"])
+        sf = d.get("shard_features")
         return cls(features=MatrixFeatures(**d["features"]),
-                   ranking=ranking, probed=int(d["probed"]))
+                   ranking=ranking, probed=int(d["probed"]),
+                   shard_features=None if sf is None else
+                   tuple(ShardFeatures(**f) for f in sf))
 
 
 # --------------------------------------------------------------------------
@@ -350,22 +443,91 @@ def _base_metrics(A: CSRMatrix, part: Partition, layout: str,
             "part": part}
 
 
-def _padding_slots(A: CSRMatrix, part: Partition, kernel: str) -> float:
-    """Wasted compute slots per shard for the padded device format."""
+def kernel_shard_costs(A: CSRMatrix, part: Partition) -> dict:
+    """Per-shard analytic execution-slot cost of every kernel format.
+
+    Returns ``{kernel: (S,) float64}``.  The model charges what each
+    format actually executes on a shard's row slice:
+
+    * ``ell``   — every padded slab cell: ``round_up(rows, 8) *
+      round_up(max_row_nnz, 128)``.  Regular stream, but a single heavy
+      row inflates every row's width.
+    * ``seg``   — ``_W_SEG_SCAN`` per chunk cell (the prefix scan touches
+      each slot twice) plus ``_W_SEG_PIECE`` per piece (the serialized
+      carry fix-up scatter).  Immune to row skew, but pays per-row
+      bookkeeping — dense regular rows are cheaper in ELL.
+    * ``hyb``   — the p95-capped slab (:func:`~repro.core.sparse_matrix.
+      hyb_cap_width`) plus ``_W_OVF`` per spilled entry.  Wins when a thin
+      tail of hub rows would otherwise blow up the ELL width.
+
+    ``select_shard_kernels`` takes the per-shard argmin of this table and
+    the plan cost model sums the selected column over shards
+    (:func:`_plan_kernel_slots`): kernel slots are *aggregate* execution
+    work — the single-host serving executor runs the stages sequentially,
+    and on the device path wasted slots are wasted FLOPs/HBM traffic
+    whichever shard issues them — so the per-shard argmin minimizes the
+    term exactly, and a heterogeneous program strictly beats every uniform
+    kernel whenever the selection is genuinely mixed.  (The parallel
+    critical-path terms — issue, ingress — remain max-aggregated; the
+    kernel term is the down-weighted tax on top.)
+    """
     S = part.num_shards
     per_row = csr_row_nnz(A)
-    worst = 0.0
+    out = {k: np.zeros(S, dtype=np.float64) for k in KERNELS}
     for p in range(S):
         r0, r1 = int(part.starts[p]), int(part.starts[p + 1])
+        rows = per_row[r0:r1]
         nnz_p = int(A.row_ptr[r1] - A.row_ptr[r0])
-        if kernel == "seg":
-            slots = _round_up(max(nnz_p, 1), SEG_CHUNK)
-        else:
-            W = _round_up(int(per_row[r0:r1].max()) if r1 > r0 else 1,
-                          ELL_LANE)
-            slots = _round_up(max(r1 - r0, 1), ELL_SUBLANE) * W
-        worst = max(worst, float(slots - nnz_p))
-    return worst
+        rows_pad = _round_up(max(r1 - r0, 1), ELL_SUBLANE)
+        W = _round_up(int(rows.max()) if r1 > r0 else 1, ELL_LANE)
+        out["ell"][p] = rows_pad * W
+        chunks = max((nnz_p + SEG_CHUNK - 1) // SEG_CHUNK, 1)
+        pieces = int((rows > 0).sum()) + chunks
+        out["seg"][p] = _W_SEG_SCAN * chunks * SEG_CHUNK + \
+            _W_SEG_PIECE * pieces
+        Wc = hyb_cap_width(rows) if r1 > r0 else ELL_LANE
+        ovf = int(np.maximum(rows - Wc, 0).sum())
+        out["hyb"][p] = rows_pad * Wc + _W_OVF * ovf
+    return out
+
+
+def select_shard_kernels(A: CSRMatrix, part: Partition,
+                         kernels: Sequence[str] = KERNELS,
+                         costs: dict | None = None) -> tuple:
+    """Per-shard argmin of :func:`kernel_shard_costs` (ties prefer the
+    earlier entry of ``kernels`` — the regular ELL stream by default).
+
+    Examples
+    --------
+    A skewed power-law matrix never keeps the uncapped ELL slab on a
+    hub-heavy shard:
+
+    >>> from repro.core.partition import make_partition
+    >>> from repro.core.plan import select_shard_kernels
+    >>> from repro.data.matrices import powerlaw
+    >>> A = powerlaw(1024, 40000, seed=0)
+    >>> sel = select_shard_kernels(A, make_partition(A, 4, "row"))
+    >>> len(sel), set(sel) <= {"ell", "seg", "hyb"}
+    (4, True)
+    """
+    costs = kernel_shard_costs(A, part) if costs is None else costs
+    kernels = tuple(kernels)
+    return tuple(
+        min(kernels, key=lambda k: (costs[k][p], kernels.index(k)))
+        for p in range(part.num_shards))
+
+
+def _plan_kernel_slots(costs: dict, plan: SpmvPlan) -> float:
+    """Total kernel slot cost of a plan over all shards (per-shard aware)."""
+    sk = plan.resolved_shard_kernels()
+    return float(sum(costs[k][p] for p, k in enumerate(sk)))
+
+
+def _majority_kernel(sel: tuple) -> str:
+    counts = {k: 0 for k in KERNELS}
+    for k in sel:
+        counts[k] += 1
+    return max(KERNELS, key=lambda k: (counts[k], -KERNELS.index(k)))
 
 
 def _permute_weights(w: np.ndarray, perm: np.ndarray | None) -> np.ndarray:
@@ -468,8 +630,8 @@ def estimate_cost(csr: CSRMatrix, plan: SpmvPlan, *,
             np.asarray(col_weight, dtype=np.float64), perm)
     part = make_partition(A, plan.num_shards, plan.distribution)
     base = _base_metrics(A, part, plan.layout, emu, col_weight=w)
-    return _assemble_cost(base, _padding_slots(A, part, plan.kernel),
-                          plan.exchange, emu)
+    slots = _plan_kernel_slots(kernel_shard_costs(A, part), plan)
+    return _assemble_cost(base, slots, plan.exchange, emu)
 
 
 def _assemble_cost(base: dict, pad_slots: float, exchange: str,
@@ -495,21 +657,31 @@ def autotune(csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
              layouts: Sequence[str] = ("block", "cyclic"),
              distributions: Sequence[str] = ("row", "nonzero"),
              reorderings: Iterable[str] = REORDERINGS,
-             kernels: Sequence[str] = ("ell", "seg"),
+             kernels: Sequence[str] = KERNELS,
              exchanges: Sequence[str] = ("halo", "allgather"),
              probe: int | None = None,
              emu: EmuConfig | None = None,
-             col_weight: np.ndarray | None = None) -> PlanChoice:
+             col_weight: np.ndarray | None = None,
+             per_shard: bool = True) -> PlanChoice:
     """Rank the candidate plan grid for one matrix.
 
     Scores every plan in ``layouts x distributions x reorderings x kernels
     x exchanges`` with :func:`estimate_cost` (reordered matrices and
-    per-base migration accounting are computed once and shared), then
-    optionally re-ranks the model's top candidates with a short empirical
-    probe: the Emu timeline simulator (:func:`~repro.core.emu.run_spmv`)
-    run on the ``probe`` best distinct (reordering, layout, distribution)
-    bases.  Probed candidates rank by measured seconds (model total as the
-    tiebreak) ahead of unprobed ones.
+    per-base migration accounting are computed once and shared).  With
+    ``per_shard`` (the default), every (reordering, distribution) base
+    additionally contributes a **heterogeneous candidate** whose kernel is
+    selected shard-by-shard (:func:`select_shard_kernels` — the per-shard
+    argmin of :func:`kernel_shard_costs`); the kernel term sums over
+    shards, so the heterogeneous candidate's kernel term is never worse
+    than any uniform kernel's on the same base, and strictly better
+    exactly on the mixed-structure matrices the global plan loses on
+    (``benchmarks/hetero_bench.py``).  The model's top candidates are then
+    optionally re-ranked with a short empirical probe: the Emu timeline
+    simulator (:func:`~repro.core.emu.run_spmv`) run on the ``probe`` best
+    distinct (reordering, layout, distribution) bases.  Probed candidates
+    rank by measured seconds (model total as the tiebreak) ahead of
+    unprobed ones; the probe cannot see kernels, so within a probed base
+    the analytic kernel term still decides.
 
     Parameters
     ----------
@@ -520,7 +692,8 @@ def autotune(csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
     seed : int, optional
         Seed threaded into the stochastic reorderings (default 0).
     layouts, distributions, reorderings, kernels, exchanges : sequence of str
-        Candidate axes; defaults are the full paper grid.
+        Candidate axes; defaults are the full paper grid (kernels now
+        include the HYB capped-ELL + overflow format).
     probe : int, optional
         Number of distinct bases to simulate; defaults to
         :data:`DEFAULT_PROBE` (0 = analytic only).  The probe runs the
@@ -536,11 +709,16 @@ def autotune(csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
         (:func:`_active_submatrix`) — the re-plan path of the serving
         rebalancer (``serve/rebalance.py``).  Uniform weights reproduce
         the unweighted ranking.
+    per_shard : bool, optional
+        Add the per-shard heterogeneous candidates (default True); pass
+        False for the pre-refactor uniform-kernel grid (what
+        ``benchmarks/hetero_bench.py`` calls the *best global* baseline).
 
     Returns
     -------
     PlanChoice
-        Features + full ranking, best candidate first.
+        Features + full ranking, best candidate first, plus the winning
+        partition's per-shard features (:class:`ShardFeatures`).
 
     Examples
     --------
@@ -553,8 +731,10 @@ def autotune(csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
     4
     >>> choice.plan.distribution      # skewed rows -> nonzero split wins
     'nonzero'
-    >>> len(choice.ranking) == 2 * 2 * 5 * 2 * 2
+    >>> len(choice.ranking) >= 2 * 2 * 5 * 3 * 2   # + per-shard candidates
     True
+    >>> len(choice.shard_features)    # winner's per-shard audit trail
+    4
     """
     emu = emu or EmuConfig(nodelets=num_shards)
     probe = DEFAULT_PROBE if probe is None else probe
@@ -576,13 +756,19 @@ def autotune(csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
                 _permute_weights(col_weight, perm)
 
     bases: dict[tuple, dict] = {}
-    pads: dict[tuple, float] = {}
+    parts: dict[tuple, Partition] = {}
     candidates: list[RankedPlan] = []
     for method, A in reordered.items():
         for dist in distributions:
             part = make_partition(A, num_shards, dist)
-            for kernel in kernels:
-                pads[(method, dist, kernel)] = _padding_slots(A, part, kernel)
+            parts[(method, dist)] = part
+            costs = kernel_shard_costs(A, part)
+            shard_sel = None
+            if per_shard and len(kernels) > 1:
+                sel = select_shard_kernels(A, part, kernels=kernels,
+                                           costs=costs)
+                if len(set(sel)) > 1:     # uniform pick == existing plan
+                    shard_sel = sel
             for layout in layouts:
                 key = (method, layout, dist)
                 bases[key] = _base_metrics(A, part, layout, emu,
@@ -594,8 +780,20 @@ def autotune(csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
                                         kernel=kernel, num_shards=num_shards,
                                         seed=seed)
                         cost = _assemble_cost(bases[key],
-                                              pads[(method, dist, kernel)],
+                                              float(costs[kernel].sum()),
                                               exchange, emu)
+                        candidates.append(RankedPlan(plan=plan, cost=cost))
+                if shard_sel is not None:
+                    slots = float(sum(costs[k][p]
+                                      for p, k in enumerate(shard_sel)))
+                    for exchange in exchanges:
+                        plan = SpmvPlan(layout=layout, distribution=dist,
+                                        reordering=method, exchange=exchange,
+                                        kernel=_majority_kernel(shard_sel),
+                                        num_shards=num_shards, seed=seed,
+                                        shard_kernels=shard_sel)
+                        cost = _assemble_cost(bases[key], slots, exchange,
+                                              emu)
                         candidates.append(RankedPlan(plan=plan, cost=cost))
 
     candidates.sort(key=lambda r: r.cost.total)
@@ -641,5 +839,10 @@ def autotune(csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
         candidates = probed
         n_probed = len(probe_times)
 
+    winner = candidates[0].plan
+    shard_features = extract_shard_features(
+        reordered[winner.reordering],
+        parts[(winner.reordering, winner.distribution)])
     return PlanChoice(features=extract_features(csr, num_shards=num_shards),
-                      ranking=tuple(candidates), probed=n_probed)
+                      ranking=tuple(candidates), probed=n_probed,
+                      shard_features=shard_features)

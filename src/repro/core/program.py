@@ -1,0 +1,675 @@
+"""The lowered SpMV program IR: per-shard heterogeneous kernels, one executor.
+
+The paper's hot-spot result (§IV-D) is fundamentally *local*: sparsity
+structure differs shard-to-shard, so one global (layout, kernel) choice
+under-serves skewed shards while over-paying on regular ones — the
+per-region strategy selection of feature-based SpMV optimization (Elafrou
+et al., 2017), resolved per-nodelet as the Emu programming studies
+recommend (Hein et al.).  This module is the single lowering path that
+makes that selectable:
+
+* :func:`lower` — ``lower(csr, plan)`` turns a host CSR matrix plus an
+  :class:`~repro.core.spmv.SpmvPlan` into an :class:`SpmvProgram`: the
+  reordered matrix, partition, vector layouts, exact traffic accounting,
+  and one :class:`ShardStage` per shard.  Each stage independently holds
+  an ``ell`` slab, a ``seg`` chunk stream, or a ``hyb`` capped-ELL + COO
+  overflow pair (``plan.shard_kernels``); the exchange prologue
+  (all-gather vs halo all-to-all) is part of the program, not of any
+  particular executor.
+* :func:`relower` — rebuilds **only** the stages whose kernel changed
+  (same base: layout/distribution/reordering/exchange), sharing every
+  other stage with the old program.  This is the per-shard
+  double-buffered swap the serving rebalancer uses for hot-shard-only
+  re-plans (``serve/rebalance.py``).
+* :func:`execute` — one entry point, three backends:
+
+  - ``"numpy"``: the exact host oracle (float64, bitwise-stable batched
+    multi-RHS) — the serving path of ``SparseMatrixEngine`` and the
+    correctness reference;
+  - ``"shard_map"``: the device executor.  One ``shard_map`` program runs
+    every shard; per-shard kernel dispatch is a ``lax.switch`` over the
+    stage's kernel id, so heterogeneous programs lower to a single SPMD
+    computation.  This collapses the old ``make_spmv_fn`` /
+    ``make_seg_spmv_fn`` / ``make_halo_spmv_fn`` triplet (kept as thin
+    deprecated shims in ``core/spmv.py``);
+  - ``"emu"``: the Emu timeline probe (:func:`probe_program`) — the
+    migratory-thread cost of the same (matrix, partition, layout) walk,
+    which is what the autotuner's simulator re-ranking runs.
+
+Every backend consumes the same :class:`SpmvProgram`, so the numpy
+oracle, the TPU program, and the Emu model cannot drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import numpy as np
+
+from .emu import EmuConfig, EmuResult, run_spmv
+from .layout import VectorLayout, make_layout
+from .migration import TrafficReport, count_migrations, remote_access_matrix
+from .partition import Partition, make_partition
+from .reorder import reordering_permutation
+from .sparse_matrix import CSRMatrix, ELL_LANE, ELL_SUBLANE, EllMatrix, \
+    SegMatrix, csr_to_ell
+from .spmv import PLAN_KERNELS, SpmvPlan
+from repro.kernels import ops as kops
+
+__all__ = ["ShardStage", "SpmvProgram", "lower", "relower", "execute",
+           "make_program_spmv_fn", "probe_program", "gather_b",
+           "PROGRAM_KERNELS"]
+
+#: Kernels a shard stage may select — alias of the single definition in
+#: ``spmv.PLAN_KERNELS`` (tie-break preference order; the ``lax.switch``
+#: branch ids in the device executor follow this order).
+PROGRAM_KERNELS = PLAN_KERNELS
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardStage:
+    """One shard's stage of a lowered program: its kernel + device payload.
+
+    ``kernel`` selects the format actually stored: ``"ell"`` (uncapped
+    padded slab) and ``"hyb"`` (p95-capped slab + COO overflow, see
+    :func:`~repro.kernels.ops.hyb_from_csr`) populate ``ell``; ``"seg"``
+    populates ``seg``.  ``rows``/``row_offset`` locate the shard's row
+    range in the program's (reordered) matrix.
+    """
+
+    shard: int
+    kernel: str                    # "ell" | "seg" | "hyb"
+    rows: int                      # true row count
+    row_offset: int                # absolute first row
+    nnz: int
+    ell: EllMatrix | None = None   # kernel in ("ell", "hyb")
+    seg: SegMatrix | None = None   # kernel == "seg"
+
+
+def _build_stage(A: CSRMatrix, part: Partition, p: int,
+                 kernel: str) -> ShardStage:
+    r0, r1 = int(part.starts[p]), int(part.starts[p + 1])
+    sub = part.shard_csr(A, p)
+    ell = seg = None
+    if kernel == "ell":
+        ell = csr_to_ell(sub)
+        if ell.overflow_vals.size:
+            raise AssertionError("uncapped ELL conversion cannot overflow")
+    elif kernel == "hyb":
+        ell = kops.hyb_from_csr(sub)
+    elif kernel == "seg":
+        seg = kops.seg_from_csr(sub)
+    else:
+        raise ValueError(f"unknown shard kernel {kernel!r}; expected one of "
+                         f"{PROGRAM_KERNELS}")
+    return ShardStage(shard=p, kernel=kernel, rows=r1 - r0, row_offset=r0,
+                      nnz=sub.nnz, ell=ell, seg=seg)
+
+
+@dataclasses.dataclass
+class SpmvProgram:
+    """A lowered, device-ready SpMV program + its traffic accounting.
+
+    This is the object every executor backend consumes (and what
+    ``build_distributed`` has always returned — ``DistributedSpmv`` is a
+    deprecated alias).  The legacy stacked-slab views (``data``/``cols``,
+    ``seg_*``) are kept as lazily-built properties for old callers; new
+    code should read ``stages``.
+    """
+
+    plan: SpmvPlan
+    matrix: CSRMatrix                 # reordered matrix (host)
+    partition: Partition
+    x_layout: VectorLayout
+    b_layout: VectorLayout
+    rows_per_shard: np.ndarray        # true row counts (S,)
+    row_offset: np.ndarray            # absolute first row per shard (S,)
+    traffic: TrafficReport
+    shard_traffic: np.ndarray         # (S, S) x-elements moved p<-q
+    stages: tuple                     # (S,) ShardStage
+    # Symmetric permutation applied by plan.reordering: perm[old] = new.
+    # None for reordering="none"; the numpy executor uses it to accept and
+    # return vectors in the caller's original index order.
+    perm: np.ndarray | None = None
+
+    def shard_kernels(self) -> tuple:
+        """The per-shard kernels this program was lowered with."""
+        return tuple(st.kernel for st in self.stages)
+
+    def x_to_device(self, x: np.ndarray) -> np.ndarray:
+        return self.x_layout.to_sharded(x)
+
+    def b_from_device(self, b_shards: np.ndarray) -> np.ndarray:
+        return self.b_layout.from_sharded(b_shards)
+
+    # -- legacy stacked-slab views (deprecated; read ``stages`` instead) ----
+
+    @property
+    def data(self) -> np.ndarray:
+        """(S, rows_pad, W) stacked *uncapped* ELL slabs (legacy view)."""
+        return self._ell_stack()[0]
+
+    @property
+    def cols(self) -> np.ndarray:
+        """(S, rows_pad, W) stacked global ELL column ids (legacy view)."""
+        return self._ell_stack()[1]
+
+    def _ell_stack(self):
+        cached = getattr(self, "_ell_stack_cache", None)
+        if cached is not None:
+            return cached
+        slabs = []
+        for st in self.stages:
+            if st.kernel == "ell":
+                slabs.append(st.ell)
+            else:
+                sub = self.matrix.row_slice(st.row_offset,
+                                            st.row_offset + st.rows)
+                slabs.append(csr_to_ell(sub))
+        rows_pad = max(s.data.shape[0] for s in slabs)
+        width = max(s.width for s in slabs)
+        S = self.plan.num_shards
+        data = np.zeros((S, rows_pad, width), dtype=np.float32)
+        cols = np.zeros((S, rows_pad, width), dtype=np.int32)
+        for p, s in enumerate(slabs):
+            r, w = s.data.shape
+            data[p, :r, :w] = s.data
+            cols[p, :r, :w] = s.cols
+        self._ell_stack_cache = (data, cols)
+        return self._ell_stack_cache
+
+    @property
+    def seg_vals(self):
+        s = self._seg_stack()
+        return None if s is None else s["seg_vals"]
+
+    @property
+    def seg_cols(self):
+        s = self._seg_stack()
+        return None if s is None else s["seg_cols"]
+
+    @property
+    def seg_rows(self):
+        s = self._seg_stack()
+        return None if s is None else s["seg_rows"]
+
+    @property
+    def seg_pieces(self):
+        s = self._seg_stack()
+        return None if s is None else s["seg_pieces"]
+
+    def _seg_stack(self):
+        """Legacy stacked seg slabs (dummy-row piece padding), uniform-seg
+        programs only — matches the pre-IR ``build_distributed`` contract."""
+        if any(st.kernel != "seg" for st in self.stages):
+            return None
+        cached = getattr(self, "_seg_stack_cache", None)
+        if cached is None:
+            cached = _stack_seg_legacy([st.seg for st in self.stages],
+                                       self.rows_per_shard)
+            self._seg_stack_cache = cached
+        return cached
+
+
+def _stack_seg_legacy(segs, rows_per_shard) -> dict:
+    """Stacked per-shard SegMatrix slabs, padded to common shapes.
+
+    Column ids stay global (the allgather path gathers the full x); row ids
+    are shard-local.  Piece padding targets the per-shard dummy row
+    (``rows_pad``) with (lo=1, hi=0) so ``psum[c, hi] - psum[c, lo-1]``
+    evaluates to an exact zero for padded entries.
+    """
+    S = len(segs)
+    C_pad = max(s.num_chunks for s in segs)
+    L = segs[0].chunk
+    P_pad = max(max(s.n_pieces for s in segs), 1)
+    rows_pad = int(np.asarray(rows_per_shard).max())
+    vals = np.zeros((S, C_pad, L), dtype=np.float32)
+    cols = np.zeros((S, C_pad, L), dtype=np.int32)
+    rows = np.zeros((S, C_pad, L), dtype=np.int32)
+    pieces = np.zeros((S, P_pad, 4), dtype=np.int32)
+    pieces[:, :, 1] = 1                       # (lo=1, hi=0) -> exact zero
+    pieces[:, :, 3] = rows_pad                # dummy row, sliced off later
+    for p, s in enumerate(segs):
+        vals[p, : s.num_chunks] = s.vals
+        cols[p, : s.num_chunks] = s.cols
+        rows[p, : s.num_chunks] = s.rows
+        n = s.n_pieces
+        pieces[p, :n, 0] = s.piece_chunk
+        pieces[p, :n, 1] = s.piece_lo
+        pieces[p, :n, 2] = s.piece_hi
+        pieces[p, :n, 3] = s.piece_row
+    return dict(seg_vals=vals, seg_cols=cols, seg_rows=rows,
+                seg_pieces=pieces)
+
+
+# --------------------------------------------------------------------------
+# lowering
+# --------------------------------------------------------------------------
+
+def lower(csr: CSRMatrix, plan: SpmvPlan) -> SpmvProgram:
+    """Lower (matrix, plan) to a per-shard-staged :class:`SpmvProgram`.
+
+    The reordering permutation, partition, vector layouts and exact
+    migration accounting are computed once here; each shard then gets the
+    stage its (per-shard) kernel calls for.  ``plan.shard_kernels=None``
+    lowers the uniform program (every stage uses ``plan.kernel``) — which
+    is also how pre-per-shard plans deserialize from legacy JSON.
+    """
+    if csr.nrows != csr.ncols:
+        raise ValueError("paper applies symmetric reorderings to square "
+                         "matrices")
+    perm = None
+    A = csr
+    if plan.reordering != "none":
+        perm = reordering_permutation(csr, plan.reordering, seed=plan.seed,
+                                      parts=plan.num_shards)
+        A = csr.permuted(perm, perm)
+    part = make_partition(A, plan.num_shards, plan.distribution)
+    x_layout = make_layout(plan.layout, A.ncols, plan.num_shards)
+    b_layout = make_layout(plan.layout, A.nrows, plan.num_shards)
+    kernels = plan.resolved_shard_kernels()
+    stages = tuple(_build_stage(A, part, p, kernels[p])
+                   for p in range(plan.num_shards))
+    return SpmvProgram(
+        plan=plan, matrix=A, partition=part, x_layout=x_layout,
+        b_layout=b_layout,
+        rows_per_shard=part.rows_per_shard().astype(np.int64),
+        row_offset=part.starts[:-1].astype(np.int64),
+        traffic=count_migrations(A, part, x_layout, b_layout),
+        shard_traffic=remote_access_matrix(A, part, x_layout),
+        stages=stages, perm=perm)
+
+
+_BASE_FIELDS = ("layout", "distribution", "reordering", "exchange",
+                "num_shards", "seed")
+
+
+def relower(program: SpmvProgram, new_plan: SpmvPlan) -> SpmvProgram:
+    """Re-lower only the stages whose kernel changed (same base).
+
+    The base (layout / distribution / reordering / exchange / shards /
+    seed) must match the incumbent plan — everything structural (matrix,
+    partition, layouts, traffic) is shared, and unchanged stages are the
+    *same objects* as the old program's.  This is what makes the serving
+    rebalancer's hot-shard-only swap cheap: only the re-kerneled shards
+    pay a slab rebuild, and the old program keeps serving until the new
+    one validates.
+    """
+    old_plan = program.plan
+    for f in _BASE_FIELDS:
+        if getattr(new_plan, f) != getattr(old_plan, f):
+            raise ValueError(
+                f"relower only changes shard kernels; base field {f!r} "
+                f"differs ({getattr(old_plan, f)!r} -> "
+                f"{getattr(new_plan, f)!r}) — use lower()")
+    old_k = old_plan.resolved_shard_kernels()
+    new_k = new_plan.resolved_shard_kernels()
+    stages = tuple(
+        program.stages[p] if new_k[p] == old_k[p]
+        else _build_stage(program.matrix, program.partition, p, new_k[p])
+        for p in range(new_plan.num_shards))
+    return dataclasses.replace(program, plan=new_plan, stages=stages)
+
+
+# --------------------------------------------------------------------------
+# numpy executor (exact host oracle; the serving path)
+# --------------------------------------------------------------------------
+
+def _apply_perm(v: np.ndarray, perm: np.ndarray) -> np.ndarray:
+    """v in old order -> v in new order (perm[old] = new)."""
+    out = np.empty_like(v)
+    out[perm] = v
+    return out
+
+
+def _execute_numpy(program: SpmvProgram, x: np.ndarray) -> np.ndarray:
+    """y = A @ x on one host, caller index order, float64.
+
+    ``x`` may be a single (N,) vector or a multi-RHS block (N, B); the
+    result matches ((M,) or (M, B)).  The block is held batch-major so
+    every per-row reduction runs over the last *contiguous* axis
+    regardless of B — numpy then applies the same pairwise-summation tree
+    for every batch width, and the scatter formats (seg rows, hyb
+    overflow) loop per RHS so ``np.add.at`` accumulates in identical
+    index order per column.  Column b of a batched call is therefore
+    *bitwise* equal to the per-vector call on ``x[:, b]``.
+    """
+    if x.shape[0] != program.matrix.ncols:
+        raise ValueError(f"x has {x.shape[0]} elements, matrix expects "
+                         f"{program.matrix.ncols}")
+    if x.ndim == 1:
+        return _execute_numpy_block(program, x[:, None])[:, 0]
+    if x.ndim != 2:
+        raise ValueError(f"x must be (N,) or (N, B), got shape {x.shape}")
+    return _execute_numpy_block(program, x)
+
+
+def _execute_numpy_block(program: SpmvProgram, x: np.ndarray) -> np.ndarray:
+    B = x.shape[1]
+    xr = x if program.perm is None else _apply_perm(x, program.perm)
+    x_pad = np.zeros((B, program.x_layout.padded_length()), dtype=np.float64)
+    x_pad[:, : program.matrix.ncols] = xr.T
+
+    y = np.zeros((B, program.matrix.nrows), dtype=np.float64)
+    for st in program.stages:
+        if st.rows == 0:
+            continue
+        o, r = st.row_offset, st.rows
+        if st.kernel == "seg":
+            seg = st.seg
+            contrib = seg.vals.astype(np.float64) * x_pad[:, seg.cols]
+            yp = np.zeros((B, r))
+            for b in range(B):            # padded slots: row 0, val 0
+                np.add.at(yp[b], seg.rows, contrib[b])
+            y[:, o:o + r] = yp
+        else:                             # "ell" / "hyb"
+            e = st.ell
+            slab = e.data.astype(np.float64) * x_pad[:, e.cols]
+            y[:, o:o + r] = np.ascontiguousarray(slab).sum(axis=2)[:, :r]
+            if e.overflow_vals.size:      # hyb COO tail
+                ovals = e.overflow_vals.astype(np.float64)
+                for b in range(B):
+                    np.add.at(y[b], o + e.overflow_rows,
+                              ovals * x_pad[b, e.overflow_cols])
+    yt = y.T
+    return yt if program.perm is None else yt[program.perm]
+
+
+# --------------------------------------------------------------------------
+# device executor: one shard_map for every program (the old three-way
+# make_spmv_fn / make_seg_spmv_fn / make_halo_spmv_fn collapse to this)
+# --------------------------------------------------------------------------
+
+def _halo_tables(program: SpmvProgram):
+    """Structure-level halo exchange tables (format-independent).
+
+    Shard q sends to shard p exactly the x entries p's stored non-zeros
+    read from q (zero-valued stored entries excluded — they contribute
+    nothing, so they must not widen the halo).  Returns
+    ``(send_idx, pos_map, H)``: ``send_idx[q, p]`` are sender-local
+    indices (padded to H) and ``pos_map[p, g]`` the augmented-buffer
+    position of global id g on reader p (the buffer is
+    ``[x_local ++ recv]``, ``per + q * H + slot``).
+    """
+    A, part, lay = program.matrix, program.partition, program.x_layout
+    S = part.num_shards
+    per = lay.padded_length() // S
+    rows_of_nnz = np.repeat(np.arange(A.nrows), np.diff(A.row_ptr))
+    home = part.owner_of_rows(A.nrows)[rows_of_nnz]
+    owners = lay.owner_of(A.col_index)
+    rem = (A.values != 0) & (owners != home)
+    needed = [[np.zeros(0, np.int64)] * S for _ in range(S)]
+    if rem.any():
+        key = home[rem].astype(np.int64) * A.ncols + \
+            A.col_index[rem].astype(np.int64)
+        uniq = np.unique(key)             # sorted: per reader, by global id
+        up, ucol = uniq // A.ncols, uniq % A.ncols
+        uq = lay.owner_of(ucol)
+        for p in range(S):
+            for q in range(S):
+                needed[p][q] = ucol[(up == p) & (uq == q)]
+    H = max(max((ids.size for row in needed for ids in row), default=1), 1)
+    send_idx = np.zeros((S, S, H), dtype=np.int32)
+    pos_map = np.zeros((S, A.ncols), dtype=np.int32)
+    for p in range(S):
+        for q in range(S):
+            ids = needed[p][q]
+            if ids.size:
+                send_idx[q, p, : ids.size] = lay.local_index(ids)
+                pos_map[p, ids] = per + q * H + np.arange(ids.size)
+    return send_idx, pos_map, H
+
+
+def _remap_cols(cols: np.ndarray, vals: np.ndarray, lay: VectorLayout,
+                p: int, pos_map_p: np.ndarray) -> np.ndarray:
+    """Global col ids -> positions in shard p's [x_local ++ recv] buffer.
+
+    Zero-valued slots (padding, stored explicit zeros) keep position 0:
+    x_local[0] times value 0 contributes nothing either way."""
+    own = lay.owner_of(cols)
+    out = np.where(own == p, lay.local_index(cols), 0).astype(np.int32)
+    m = (own != p) & (vals != 0)
+    if m.any():
+        out[m] = pos_map_p[cols[m]]
+    return out
+
+
+def _device_operands(program: SpmvProgram) -> dict:
+    """Stack every stage into the common-shape operand set of the one
+    shard_map program (cached on the program).
+
+    All three format payloads exist for every shard (zeros where unused)
+    so the per-shard ``lax.switch`` can trace each branch with uniform
+    shapes; ``kid`` selects the live one.  With ``exchange="halo"`` every
+    column-id operand is pre-remapped into the augmented
+    ``[x_local ++ recv]`` buffer.
+    """
+    cached = getattr(program, "_device_ops_cache", None)
+    if cached is not None:
+        return cached
+    S = program.plan.num_shards
+    stages = program.stages
+    halo = program.plan.exchange == "halo"
+    lay = program.x_layout
+
+    if halo:
+        send_idx, pos_map, H = _halo_tables(program)
+    else:
+        send_idx = np.zeros((S, 1, 1), dtype=np.int32)
+        pos_map, H = None, 0
+
+    def remap(cols, vals, p):
+        if not halo:
+            return cols.astype(np.int32)
+        return _remap_cols(cols, vals, lay, p, pos_map[p])
+
+    R = int(max(_round_up(max(st.rows, 1), ELL_SUBLANE) for st in stages))
+    ells = [st.ell for st in stages if st.ell is not None]
+    W = max((e.width for e in ells), default=ELL_LANE)
+    O = max((e.overflow_vals.size for e in ells), default=0)
+    O = max(O, 1)
+    segs = [st.seg for st in stages if st.seg is not None]
+    L = segs[0].chunk if segs else kops.SEG_CHUNK
+    if segs and any(s.chunk != L for s in segs):
+        raise AssertionError("seg stages must share one chunk size")
+    C = max((s.num_chunks for s in segs), default=ELL_SUBLANE)
+    Pp = max((s.n_pieces for s in segs), default=0)
+    Pp = max(Pp, 1)
+
+    kid = np.zeros(S, dtype=np.int32)
+    ell_data = np.zeros((S, R, W), dtype=np.float32)
+    ell_cols = np.zeros((S, R, W), dtype=np.int32)
+    ovf_rows = np.zeros((S, O), dtype=np.int32)
+    ovf_cols = np.zeros((S, O), dtype=np.int32)
+    ovf_vals = np.zeros((S, O), dtype=np.float32)
+    seg_vals = np.zeros((S, C, L), dtype=np.float32)
+    seg_cols = np.zeros((S, C, L), dtype=np.int32)
+    seg_rows = np.zeros((S, C, L), dtype=np.int32)
+    seg_pieces = np.zeros((S, Pp, 4), dtype=np.int32)
+    seg_pieces[:, :, 1] = 1               # (lo=1, hi=0, row=0) -> exact zero
+
+    for p, st in enumerate(stages):
+        kid[p] = PROGRAM_KERNELS.index(st.kernel)
+        if st.ell is not None:
+            e = st.ell
+            r, w = e.data.shape
+            ell_data[p, :r, :w] = e.data
+            ell_cols[p, :r, :w] = remap(e.cols, e.data, p)
+            n = e.overflow_vals.size
+            if n:
+                ovf_rows[p, :n] = e.overflow_rows
+                ovf_cols[p, :n] = remap(e.overflow_cols, e.overflow_vals, p)
+                ovf_vals[p, :n] = e.overflow_vals
+        if st.seg is not None:
+            s = st.seg
+            seg_vals[p, : s.num_chunks] = s.vals
+            seg_cols[p, : s.num_chunks] = remap(s.cols, s.vals, p)
+            seg_rows[p, : s.num_chunks] = s.rows
+            n = s.n_pieces
+            seg_pieces[p, :n, 0] = s.piece_chunk
+            seg_pieces[p, :n, 1] = s.piece_lo
+            seg_pieces[p, :n, 2] = s.piece_hi
+            seg_pieces[p, :n, 3] = s.piece_row
+    cached = dict(kid=kid, ell_data=ell_data, ell_cols=ell_cols,
+                  ovf_rows=ovf_rows, ovf_cols=ovf_cols, ovf_vals=ovf_vals,
+                  seg_vals=seg_vals, seg_cols=seg_cols, seg_rows=seg_rows,
+                  seg_pieces=seg_pieces, send_idx=send_idx, R=R, halo_H=H)
+    program._device_ops_cache = cached
+    return cached
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+_OPERAND_KEYS = ("kid", "ell_data", "ell_cols", "ovf_rows", "ovf_cols",
+                 "ovf_vals", "seg_vals", "seg_cols", "seg_rows",
+                 "seg_pieces", "send_idx")
+
+
+def make_program_spmv_fn(program: SpmvProgram, mesh, axis: str = "model", *,
+                         use_kernel: bool = False, interpret: bool = True):
+    """THE device executor: one shard_map function for any lowered program.
+
+    Returns ``f(x_shards) -> y_shards`` with ``x_shards`` of shape
+    (S, per_shard) or batched (S, per_shard, B) in layout order, and
+    ``y_shards`` of shape (S, rows_pad[, B]) (slice each shard to its true
+    ``rows_per_shard``, or use :func:`gather_b`).  The exchange prologue
+    follows ``plan.exchange`` (all-gather of x vs halo all-to-all of
+    exactly the needed entries), and each shard dispatches to its stage's
+    kernel (``ell`` / ``seg`` / ``hyb``) through a ``lax.switch`` — one
+    SPMD program, heterogeneous per-shard execution.
+
+    ``use_kernel=True`` runs the Pallas kernels (``interpret=True`` on
+    CPU); the default runs the pure-jnp oracles, same as the old
+    ``make_*_spmv_fn`` triplet this function replaces.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from .spmv import _shard_map_norep
+
+    ops = _device_operands(program)
+    R = ops["R"]
+    halo = program.plan.exchange == "halo"
+    kind = program.x_layout.kind
+    if use_kernel:
+        ell_op = partial(kops.ell_spmv, interpret=interpret,
+                         tile_m=ELL_SUBLANE, tile_w=ELL_LANE)
+    else:
+        ell_op = kops.ell_spmv_ref
+
+    def _to_global(x_all):
+        """(S, per[, B]) gathered shards -> global (padded) order."""
+        if kind == "block":
+            return x_all.reshape((-1,) + x_all.shape[2:])
+        return jnp.swapaxes(x_all, 0, 1).reshape((-1,) + x_all.shape[2:])
+
+    def shard_fn(kid, ed, ec, orow, ocol, oval, sv, sc, sr, sp, send_idx,
+                 x_shard):
+        x_local = x_shard[0]                               # (per[, B])
+        if halo:
+            to_send = jnp.take(x_local, send_idx[0], axis=0)   # (S, H[, B])
+            recv = jax.lax.all_to_all(to_send, axis, split_axis=0,
+                                      concat_axis=0, tiled=True)
+            xg = jnp.concatenate(
+                [x_local, recv.reshape((-1,) + recv.shape[2:])], axis=0)
+        else:
+            x_all = jax.lax.all_gather(x_local, axis)      # (S, per[, B])
+            xg = _to_global(x_all)
+
+        def ell_branch(_):
+            return ell_op(ed[0], ec[0], xg)
+
+        def seg_branch(_):
+            pc = sp[0]
+            return kops.seg_spmv(
+                (sv[0], sc[0], sr[0], pc[:, 0], pc[:, 1], pc[:, 2],
+                 pc[:, 3]), xg, num_rows=R,
+                use_kernel=use_kernel, interpret=interpret)
+
+        def hyb_branch(_):
+            y = ell_op(ed[0], ec[0], xg)
+            xs = jnp.take(xg, ocol[0], axis=0)             # (O[, B])
+            v = oval[0][:, None] if xs.ndim == 2 else oval[0]
+            return y.at[orow[0]].add(v * xs)
+
+        y = jax.lax.switch(kid[0], (ell_branch, seg_branch, hyb_branch),
+                           None)
+        return y[None]
+
+    n_ops = len(_OPERAND_KEYS)
+    fn = _shard_map_norep(
+        shard_fn, mesh=mesh,
+        in_specs=(P(axis),) * (n_ops + 1),
+        out_specs=P(axis))
+    jfn = jax.jit(fn)
+    operands = tuple(jnp.asarray(ops[k]) for k in _OPERAND_KEYS)
+
+    def run(x_shards):
+        return jfn(*operands, jnp.asarray(x_shards))
+
+    run.rows_out = R
+    return run
+
+
+def gather_b(program: SpmvProgram, y_shards) -> np.ndarray:
+    """(S, rows_pad[, B]) device output -> global b in the caller's order."""
+    y = np.asarray(y_shards)
+    out = np.zeros((program.matrix.nrows,) + y.shape[2:], dtype=y.dtype)
+    for p, st in enumerate(program.stages):
+        out[st.row_offset: st.row_offset + st.rows] = y[p, : st.rows]
+    return out if program.perm is None else out[program.perm]
+
+
+# --------------------------------------------------------------------------
+# Emu probe backend + the one executor entry point
+# --------------------------------------------------------------------------
+
+def probe_program(program: SpmvProgram, *, emu: EmuConfig | None = None,
+                  engine: str = "vectorized") -> EmuResult:
+    """Run the Emu timeline simulator on the program's (matrix, partition,
+    layout) walk — the migratory-thread cost of the same plan the other
+    backends execute.  This is the probe the autotuner's re-ranking and
+    the rebalancer's drift oracle consume."""
+    emu = emu or EmuConfig(nodelets=program.plan.num_shards)
+    return run_spmv(program.matrix, program.partition, program.x_layout,
+                    emu, engine=engine)
+
+
+def execute(program: SpmvProgram, x: np.ndarray | None = None, *,
+            backend: str = "numpy", mesh=None, axis: str = "model",
+            use_kernel: bool = False, interpret: bool = True,
+            emu: EmuConfig | None = None, engine: str = "vectorized"):
+    """Execute a lowered program — the single entry point for every backend.
+
+    * ``backend="numpy"``: exact float64 host oracle; returns y in the
+      caller's index order ((M,) or (M, B) for batched x).
+    * ``backend="shard_map"``: the device executor (requires ``mesh`` with
+      ``plan.num_shards`` devices along ``axis``); builds the one-shot
+      :func:`make_program_spmv_fn`, runs it, and assembles the caller-order
+      result — use ``make_program_spmv_fn`` directly for a reusable
+      compiled function.
+    * ``backend="emu"``: ignores ``x`` and returns the
+      :class:`~repro.core.emu.EmuResult` timeline probe.
+    """
+    if backend == "emu":
+        return probe_program(program, emu=emu, engine=engine)
+    if x is None:
+        raise ValueError(f"backend {backend!r} needs an input vector x")
+    if backend == "numpy":
+        return _execute_numpy(program, x)
+    if backend == "shard_map":
+        if mesh is None:
+            raise ValueError("backend='shard_map' needs a mesh with "
+                             "plan.num_shards devices")
+        fn = make_program_spmv_fn(program, mesh, axis=axis,
+                                  use_kernel=use_kernel, interpret=interpret)
+        xs = program.x_to_device(np.asarray(x, dtype=np.float32))
+        with mesh:
+            y = fn(xs)
+        return gather_b(program, y)
+    raise ValueError(f"unknown executor backend {backend!r}; expected "
+                     f"'numpy', 'shard_map', or 'emu'")

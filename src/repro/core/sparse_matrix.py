@@ -37,6 +37,7 @@ __all__ = [
     "csr_to_ell",
     "csr_to_bcsr",
     "csr_row_nnz",
+    "hyb_cap_width",
 ]
 
 #: TPU tiling of the padded ELL slab: width is rounded to a multiple of
@@ -272,6 +273,26 @@ def csr_to_ell(csr: CSRMatrix, lane: int = ELL_LANE, sublane: int = ELL_SUBLANE,
     return EllMatrix(shape=csr.shape, data=data, cols=cols,
                      overflow_rows=orows, overflow_cols=ocols,
                      overflow_vals=ovals, nnz=csr.nnz)
+
+
+def hyb_cap_width(row_nnz: np.ndarray, lane: int = ELL_LANE) -> int:
+    """Lane-aligned ELL width cap for the HYB format of one (sub)matrix.
+
+    The cap is the 95th percentile of row lengths rounded up to a ``lane``
+    multiple, so only the heaviest ~5% of rows spill into the COO overflow
+    tail.  This is the *single* definition of the HYB split point — the
+    plan cost model (``core/plan.py``) and the program lowering
+    (``core/program.py``) both call it, so the analytic overflow
+    accounting always matches the slabs actually built.  On a matrix whose
+    p95 row rounds up to the natural max width, HYB degenerates to plain
+    ELL (empty overflow), which is why the kernel selector prefers ``ell``
+    on ties.
+    """
+    row_nnz = np.asarray(row_nnz)
+    if row_nnz.size == 0:
+        return lane
+    p95 = float(np.percentile(row_nnz, 95))
+    return _round_up(max(int(np.ceil(p95)), 1), lane)
 
 
 def csr_to_bcsr(csr: CSRMatrix, block_shape: Tuple[int, int] = (128, 128)) -> BcsrMatrix:

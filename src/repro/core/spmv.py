@@ -1,9 +1,19 @@
-"""Distributed SpMV: the paper's optimization axes as a TPU `shard_map`.
+"""Distributed SpMV: the paper's optimization axes as one plan object.
 
-``SpmvPlan`` is the first-class configuration object: layout x distribution
-x reordering, exactly the paper's study grid.  ``build_distributed`` turns a
-host CSR matrix into per-device ELL slabs (each device holds the mini-CSR ->
-mini-ELL of its rows, Fig. 2) plus the collective program that exchanges x:
+``SpmvPlan`` is the first-class configuration: layout x distribution x
+reordering x exchange x kernel — exactly the paper's study grid, plus the
+per-shard ``shard_kernels`` axis (each shard independently ``ell`` /
+``seg`` / ``hyb``) that the per-region selection literature argues for.
+
+Since the SpmvProgram refactor the *lowering and execution* live in
+:mod:`repro.core.program`: ``lower(csr, plan)`` produces the per-shard
+staged program and ``execute`` / ``make_program_spmv_fn`` are the single
+executor entry points (numpy oracle, one shard_map device program, Emu
+probe).  This module keeps the plan itself, the halo-exchange accounting
+(:func:`build_halo`), and thin **deprecated shims** for the pre-IR API:
+``build_distributed``, ``local_spmv``, ``make_spmv_fn``,
+``make_seg_spmv_fn``, ``make_halo_spmv_fn`` — all of which now delegate to
+the one program executor.
 
 * ``allgather``  — every device gathers the full x then gathers locally;
                    the Hein et al. baseline the paper contrasts against
@@ -11,20 +21,15 @@ mini-ELL of its rows, Fig. 2) plus the collective program that exchanges x:
 * ``halo``       — each device fetches only the x shards it actually reads
                    (block layout + reordered matrices make this cheap); the
                    faithful analogue of migratory access.
-
-The migration analogue for the roofline: cross-shard x elements actually
-moved.  ``plan_traffic`` reports them without compiling anything.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Literal
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 try:                                   # jax >= 0.5 exports it at top level
     from jax import shard_map as _shard_map
@@ -40,16 +45,19 @@ def _shard_map_norep(fn, **kw):
     except TypeError:
         return _shard_map(fn, check_vma=False, **kw)
 
-from .layout import VectorLayout, make_layout
-from .migration import TrafficReport, count_migrations, remote_access_matrix
-from .partition import Partition, make_partition
-from .reorder import reordering_permutation
-from .sparse_matrix import CSRMatrix, ELL_LANE, ELL_SUBLANE, csr_to_ell
-from repro.kernels import ops as kops
+from .sparse_matrix import CSRMatrix
 
 __all__ = ["SpmvPlan", "DistributedSpmv", "build_distributed",
            "make_spmv_fn", "make_seg_spmv_fn", "build_halo",
            "make_halo_spmv_fn", "local_spmv"]
+
+#: Kernel spellings a plan accepts (per-shard or uniform), in tie-break
+#: preference order (the regular ELL stream wins ties against formats that
+#: pay scan/scatter overheads).  The SINGLE definition: ``plan.KERNELS``
+#: (selector/majority order) and ``program.PROGRAM_KERNELS`` (the
+#: ``lax.switch`` branch ids) are aliases of this tuple, so the three
+#: layers cannot drift.
+PLAN_KERNELS = ("ell", "seg", "hyb")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,18 +68,61 @@ class SpmvPlan:
     ``"nonzero"``): device row-ranges are chosen by cumulative-nnz split
     instead of equal rows, so a power-law matrix cannot converge all the
     work on one device the way it converges threads on one nodelet in the
-    paper's §IV-D.  ``kernel="seg"`` additionally builds per-shard
-    nonzero-balanced segmented slabs (kernels/spmv_seg.py) whose *grid* is
-    load-balance-aware too, instead of the row-tiled ELL slabs.
+    paper's §IV-D.  ``kernel`` picks the per-shard device format:
+    ``"ell"`` (row-tiled padded slabs), ``"seg"`` (nonzero-balanced
+    segmented chunks whose *grid* is load-balance-aware too), or ``"hyb"``
+    (p95-capped ELL + COO overflow tail for skew-tolerant padding).
+
+    ``shard_kernels`` (optional) overrides the kernel **per shard** — one
+    entry per shard, each in ``("ell", "seg", "hyb")`` — producing the
+    heterogeneous programs the per-shard autotuner emits for
+    mixed-structure matrices.  ``None`` (the default, and what legacy
+    JSON without the field deserializes to) means the uniform program:
+    every shard uses ``kernel``.  Plans remain frozen, hashable and
+    JSON-round-trippable either way.
     """
 
     layout: Literal["block", "cyclic"] = "block"
     distribution: Literal["row", "nonzero", "nnz"] = "nonzero"
     reordering: Literal["none", "random", "bfs", "metis", "degree"] = "none"
     exchange: Literal["allgather", "halo"] = "halo"
-    kernel: Literal["ell", "seg"] = "ell"
+    kernel: Literal["ell", "seg", "hyb"] = "ell"
     num_shards: int = 8
     seed: int = 0
+    shard_kernels: tuple | None = None
+
+    def __post_init__(self):
+        if self.shard_kernels is not None:
+            sk = tuple(self.shard_kernels)   # JSON lists -> hashable tuple
+            bad = [k for k in sk if k not in PLAN_KERNELS]
+            if bad:
+                raise ValueError(f"unknown shard kernel(s) {bad!r}; expected "
+                                 f"entries from {PLAN_KERNELS}")
+            object.__setattr__(self, "shard_kernels", sk)
+
+    def resolved_shard_kernels(self) -> tuple:
+        """The per-shard kernel tuple this plan lowers to (length S)."""
+        if self.shard_kernels is None:
+            return (self.kernel,) * self.num_shards
+        if len(self.shard_kernels) != self.num_shards:
+            raise ValueError(
+                f"shard_kernels has {len(self.shard_kernels)} entries but "
+                f"num_shards={self.num_shards}")
+        return self.shard_kernels
+
+    def retarget(self, num_shards: int) -> "SpmvPlan":
+        """Re-target to a different shard count.
+
+        Per-shard kernel tuples are only meaningful for the shard count
+        they were tuned on, so a mismatched ``shard_kernels`` is dropped
+        (the plan falls back to its uniform ``kernel``) instead of
+        producing an unlowerable plan.
+        """
+        sk = self.shard_kernels
+        if sk is not None and len(sk) != num_shards:
+            sk = None
+        return dataclasses.replace(self, num_shards=num_shards,
+                                   shard_kernels=sk)
 
     @classmethod
     def auto(cls, csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
@@ -79,9 +130,10 @@ class SpmvPlan:
         """Pick a plan for ``csr`` with the cost-model autotuner.
 
         Thin wrapper over :func:`repro.core.plan.autotune` (which see for
-        the candidate grid and the ``probe`` refinement — simulator
-        re-ranking of the top ``plan.DEFAULT_PROBE`` bases unless
-        overridden); returns only the winning plan.  Use ``autotune`` directly when the full ranking or
+        the candidate grid — including per-shard kernel selection — and
+        the ``probe`` refinement: simulator re-ranking of the top
+        ``plan.DEFAULT_PROBE`` bases unless overridden); returns only the
+        winning plan.  Use ``autotune`` directly when the full ranking or
         the JSON-serializable :class:`~repro.core.plan.PlanChoice` is
         needed (the serving engine persists it per ingested matrix).
         """
@@ -90,245 +142,73 @@ class SpmvPlan:
                         **grid).plan
 
 
-@dataclasses.dataclass
-class DistributedSpmv:
-    """Device-ready distributed SpMV program + its traffic accounting."""
-
-    plan: SpmvPlan
-    matrix: CSRMatrix                 # reordered matrix (host)
-    partition: Partition
-    x_layout: VectorLayout
-    b_layout: VectorLayout
-    # Stacked per-shard ELL slabs, padded to common shape: (S, rows_pad, W)
-    data: np.ndarray
-    cols: np.ndarray                  # local x index if owner==self else remote
-    rows_per_shard: np.ndarray        # true row counts (S,)
-    row_offset: np.ndarray            # absolute first row per shard (S,)
-    traffic: TrafficReport
-    shard_traffic: np.ndarray         # (S, S) x-elements moved p<-q
-    # Stacked per-shard segmented slabs (plan.kernel == "seg" only):
-    # vals/cols/rows (S, C_pad, L), pieces (S, P_pad, 4) int32 columns
-    # [chunk, lo, hi, local_row]; padded pieces target the dummy row and
-    # encode (lo=1, hi=0) so their prefix difference is exactly zero.
-    seg_vals: np.ndarray | None = None
-    seg_cols: np.ndarray | None = None
-    seg_rows: np.ndarray | None = None
-    seg_pieces: np.ndarray | None = None
-    # Symmetric permutation applied by plan.reordering: perm[old] = new.
-    # None for reordering="none"; local_spmv uses it to accept/return
-    # vectors in the caller's original index order.
-    perm: np.ndarray | None = None
-
-    def x_to_device(self, x: np.ndarray) -> np.ndarray:
-        return self.x_layout.to_sharded(x)
-
-    def b_from_device(self, b_shards: np.ndarray) -> np.ndarray:
-        return self.b_layout.from_sharded(b_shards)
+def build_distributed(csr: CSRMatrix, plan: SpmvPlan):
+    """Deprecated alias of :func:`repro.core.program.lower`."""
+    from .program import lower
+    return lower(csr, plan)
 
 
-def build_distributed(csr: CSRMatrix, plan: SpmvPlan) -> DistributedSpmv:
-    if csr.nrows != csr.ncols:
-        raise ValueError("paper applies symmetric reorderings to square matrices")
-    perm = None
-    A = csr
-    if plan.reordering != "none":
-        perm = reordering_permutation(csr, plan.reordering, seed=plan.seed,
-                                      parts=plan.num_shards)
-        A = csr.permuted(perm, perm)
-    part = make_partition(A, plan.num_shards, plan.distribution)
-    x_layout = make_layout(plan.layout, A.ncols, plan.num_shards)
-    b_layout = make_layout(plan.layout, A.nrows, plan.num_shards)
-    traffic = count_migrations(A, part, x_layout, b_layout)
-    shard_traffic = remote_access_matrix(A, part, x_layout)
+def local_spmv(dist, x: np.ndarray) -> np.ndarray:
+    """Single-host execution of a lowered program: y = A @ x, caller order.
 
-    S = plan.num_shards
-    slabs = [csr_to_ell(A.row_slice(int(part.starts[p]), int(part.starts[p + 1])),
-                        lane=ELL_LANE, sublane=ELL_SUBLANE) for p in range(S)]
-    rows_pad = max(s.data.shape[0] for s in slabs)
-    width = max(s.width for s in slabs)
-    data = np.zeros((S, rows_pad, width), dtype=np.float32)
-    cols = np.zeros((S, rows_pad, width), dtype=np.int32)
-    for p, s in enumerate(slabs):
-        r, w = s.data.shape
-        data[p, :r, :w] = s.data
-        cols[p, :r, :w] = s.cols
-        if s.overflow_vals.size:
-            raise AssertionError("uncapped ELL conversion cannot overflow")
-    seg_arrays = _build_seg_slabs(A, part) if plan.kernel == "seg" else {}
-    return DistributedSpmv(
-        plan=plan, matrix=A, partition=part, x_layout=x_layout,
-        b_layout=b_layout, data=data, cols=cols,
-        rows_per_shard=part.rows_per_shard().astype(np.int64),
-        row_offset=part.starts[:-1].astype(np.int64),
-        traffic=traffic, shard_traffic=shard_traffic, perm=perm,
-        **seg_arrays)
-
-
-def _build_seg_slabs(A: CSRMatrix, part: Partition) -> dict:
-    """Stacked per-shard SegMatrix slabs, padded to common shapes.
-
-    Column ids stay global (the allgather path gathers the full x); row ids
-    are shard-local.  Piece padding targets the per-shard dummy row
-    (``rows_pad``) with (lo=1, hi=0) so ``psum[c, hi] - psum[c, lo-1]``
-    evaluates to an exact zero for padded entries.
+    Deprecated alias of ``program.execute(dist, x, backend="numpy")`` —
+    the exact float64 oracle every serving request runs through
+    (``serve.engine.SparseMatrixEngine``).  ``x`` may be a single (N,)
+    vector or a multi-RHS block (N, B); column b of a batched call is
+    *bitwise* equal to the per-vector call on ``x[:, b]``.
     """
-    S = part.num_shards
-    segs = [kops.seg_from_csr(A.row_slice(int(part.starts[p]),
-                                          int(part.starts[p + 1])))
-            for p in range(S)]
-    C_pad = max(s.num_chunks for s in segs)
-    L = segs[0].chunk
-    P_pad = max(max(s.n_pieces for s in segs), 1)
-    rows_pad = int(part.rows_per_shard().max())
-    vals = np.zeros((S, C_pad, L), dtype=np.float32)
-    cols = np.zeros((S, C_pad, L), dtype=np.int32)
-    rows = np.zeros((S, C_pad, L), dtype=np.int32)
-    pieces = np.zeros((S, P_pad, 4), dtype=np.int32)
-    pieces[:, :, 1] = 1                       # (lo=1, hi=0) -> exact zero
-    pieces[:, :, 3] = rows_pad                # dummy row, sliced off later
-    for p, s in enumerate(segs):
-        vals[p, : s.num_chunks] = s.vals
-        cols[p, : s.num_chunks] = s.cols
-        rows[p, : s.num_chunks] = s.rows
-        n = s.n_pieces
-        pieces[p, :n, 0] = s.piece_chunk
-        pieces[p, :n, 1] = s.piece_lo
-        pieces[p, :n, 2] = s.piece_hi
-        pieces[p, :n, 3] = s.piece_row
-    return dict(seg_vals=vals, seg_cols=cols, seg_rows=rows,
-                seg_pieces=pieces)
+    from .program import execute
+    return execute(dist, x, backend="numpy")
 
 
-def _gathered_x_to_global(x_all: jnp.ndarray, kind: str) -> jnp.ndarray:
-    """(S, per_shard) all-gathered shards -> global index order (padded)."""
-    if kind == "block":
-        return x_all.reshape(-1)
-    return x_all.T.reshape(-1)              # cyclic: idx = i*S + p
-
-
-def make_spmv_fn(dist: DistributedSpmv, mesh: Mesh, axis: str = "model",
+def make_spmv_fn(dist, mesh: Mesh, axis: str = "model",
                  *, use_kernel: bool = False, interpret: bool = True):
-    """Return a jit-able f(data, cols, x_shards) -> b (global, on host layout).
+    """Deprecated shim over :func:`repro.core.program.make_program_spmv_fn`.
 
-    x_shards: (S, per_shard) in layout order.  Exchange strategy per plan:
-    ``allgather`` gathers x across the axis, then every device gathers its
-    ELL operands from the replicated vector.
+    Returns the old ``f(data, cols, x_shards) -> b_shards`` signature; the
+    slab arguments are accepted for compatibility but the program's own
+    lowered operands (identical content) are what execute.  Matching the
+    historical factory, the exchange is always all-gather — a halo plan is
+    re-bound (stages shared) first; use
+    :func:`~repro.core.program.make_program_spmv_fn` for plan-driven
+    exchange selection.
     """
-    x_layout = dist.x_layout
-    per_shard = x_layout.padded_length() // x_layout.num_shards
-    kind = x_layout.kind
-    spmv_local = partial(kops.ell_spmv, interpret=interpret) if use_kernel \
-        else kops.ell_spmv_ref
+    from .program import make_program_spmv_fn
+    prog = dist
+    if prog.plan.exchange != "allgather":
+        prog = lower_with_exchange(
+            prog, dataclasses.replace(prog.plan, exchange="allgather"))
+    inner = make_program_spmv_fn(prog, mesh, axis=axis,
+                                 use_kernel=use_kernel, interpret=interpret)
 
-    def local_x_to_global(x_all: jnp.ndarray) -> jnp.ndarray:
-        return _gathered_x_to_global(x_all, kind)
-
-    def shard_fn(data, cols, x_shard):
-        # data/cols: (1, rows_pad, W); x_shard: (1, per_shard)
-        x_all = jax.lax.all_gather(x_shard[0], axis)       # (S, per_shard)
-        x_global = local_x_to_global(x_all)
-        y = spmv_local(data[0], cols[0], x_global)
-        return y[None]
-
-    fn = _shard_map_norep(
-        shard_fn, mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis)),
-        out_specs=P(axis))
-    return jax.jit(fn)
+    @jax.jit
+    def fn(data, cols, x_shards):
+        del data, cols                      # the program carries its slabs
+        return inner(x_shards)
+    return fn
 
 
-def make_seg_spmv_fn(dist: DistributedSpmv, mesh: Mesh, axis: str = "model",
+def make_seg_spmv_fn(dist, mesh: Mesh, axis: str = "model",
                      *, use_kernel: bool = False, interpret: bool = True):
-    """Segmented-kernel analogue of :func:`make_spmv_fn`.
-
-    f(seg_vals, seg_cols, seg_rows, seg_pieces, x_shards) -> (S, rows_pad)
-    shards.  Requires ``plan.kernel == "seg"`` so the slabs exist.  Both
-    the device *row ranges* (distribution="nnz") and the local kernel grid
-    (equal-nnz chunks) are load-balanced — the full nonzero-split story.
-    """
-    if dist.seg_vals is None:
+    """Deprecated shim over :func:`repro.core.program.make_program_spmv_fn`
+    for uniform-seg programs (old ``f(vals, cols, rows, pieces, x_shards)``
+    signature)."""
+    if any(st.kernel != "seg" for st in dist.stages):
         raise ValueError("build_distributed was not run with plan.kernel='seg'")
-    kind = dist.x_layout.kind
+    from .program import make_program_spmv_fn
+    prog = dist
+    if prog.plan.exchange != "allgather":   # historical factory: all-gather
+        prog = lower_with_exchange(
+            prog, dataclasses.replace(prog.plan, exchange="allgather"))
+    inner = make_program_spmv_fn(prog, mesh, axis=axis,
+                                 use_kernel=use_kernel, interpret=interpret)
     rows_pad = int(dist.rows_per_shard.max())
 
-    def shard_fn(vals, cols, rows, pieces, x_shard):
-        x_all = jax.lax.all_gather(x_shard[0], axis)       # (S, per_shard)
-        x_global = _gathered_x_to_global(x_all, kind)
-        pc = pieces[0]
-        y = kops.seg_spmv(
-            (vals[0], cols[0], rows[0], pc[:, 0], pc[:, 1], pc[:, 2],
-             pc[:, 3]),
-            x_global, num_rows=rows_pad + 1,               # +1: dummy row
-            use_kernel=use_kernel, interpret=interpret)
-        return y[None, :rows_pad]
-
-    fn = _shard_map_norep(
-        shard_fn, mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis)),
-        out_specs=P(axis))
-    return jax.jit(fn)
-
-
-def local_spmv(dist: DistributedSpmv, x: np.ndarray) -> np.ndarray:
-    """Single-host execution of a built plan: y = A @ x, original order.
-
-    Runs the same per-shard slabs the device path consumes, but with plain
-    numpy on one host — no mesh, no jit.  ``x`` and the returned ``y`` are
-    in the *caller's* index order; the reordering permutation recorded in
-    ``dist.perm`` is applied/inverted internally.  This is the execution
-    path for correctness tests and for small single-host serving
-    (``serve.engine.SparseMatrixEngine``).
-
-    ``x`` may be a single (N,) vector or a multi-RHS block (N, B); the
-    result matches ((M,) or (M, B)).  The batched path broadcasts the same
-    per-shard slab products over the trailing axis with the identical
-    summation/scatter order, so column b of a batched call is *bitwise*
-    equal to the per-vector call on ``x[:, b]``.
-    """
-    if x.shape[0] != dist.matrix.ncols:
-        raise ValueError(f"x has {x.shape[0]} elements, matrix expects "
-                         f"{dist.matrix.ncols}")
-    if x.ndim == 1:
-        return _local_spmv_block(dist, x[:, None])[:, 0]
-    if x.ndim != 2:
-        raise ValueError(f"x must be (N,) or (N, B), got shape {x.shape}")
-    return _local_spmv_block(dist, x)
-
-
-def _local_spmv_block(dist: DistributedSpmv, x: np.ndarray) -> np.ndarray:
-    """(N, B) -> (M, B), batch-major internally.
-
-    The RHS block is held as (B, N) so every per-row reduction is over the
-    last *contiguous* axis regardless of B — numpy then applies the same
-    pairwise-summation tree for every batch width, which is what makes
-    column b of a block call bitwise-equal to a B=1 call on ``x[:, b]``.
-    The seg scatter-add loops per RHS for the same reason (np.add.at
-    accumulates in identical index order per column).
-    """
-    B = x.shape[1]
-    xr = x if dist.perm is None else _apply_perm(x, dist.perm)
-    x_pad = np.zeros((B, dist.x_layout.padded_length()), dtype=np.float64)
-    x_pad[:, : dist.matrix.ncols] = xr.T
-
-    S = dist.plan.num_shards
-    y = np.zeros((B, dist.matrix.nrows), dtype=np.float64)
-    for p in range(S):
-        r = int(dist.rows_per_shard[p])
-        o = int(dist.row_offset[p])
-        if dist.plan.kernel == "seg":
-            rows_pad = int(dist.rows_per_shard.max())
-            vals = dist.seg_vals[p].astype(np.float64)
-            contrib = vals * x_pad[:, dist.seg_cols[p]]   # (B, C, L)
-            yp = np.zeros((B, rows_pad + 1))
-            for b in range(B):
-                np.add.at(yp[b], dist.seg_rows[p], contrib[b])
-            y[:, o:o + r] = yp[:, :r]
-        else:
-            data = dist.data[p].astype(np.float64)
-            slab = data * x_pad[:, dist.cols[p]]          # (B, R, W)
-            y[:, o:o + r] = np.ascontiguousarray(slab).sum(axis=2)[:, :r]
-    yt = y.T
-    return yt if dist.perm is None else yt[dist.perm]
+    @jax.jit
+    def fn(vals, cols, rows, pieces, x_shards):
+        del vals, cols, rows, pieces
+        return inner(x_shards)[:, :rows_pad]
+    return fn
 
 
 def _apply_perm(v: np.ndarray, perm: np.ndarray) -> np.ndarray:
@@ -339,13 +219,16 @@ def _apply_perm(v: np.ndarray, perm: np.ndarray) -> np.ndarray:
 
 
 # --------------------------------------------------------------------------
-# halo exchange — the migratory-access analogue (beyond the all-gather
-# baseline, which is the Hein et al. x-replication the paper contrasts)
+# halo exchange accounting — the migratory-access analogue (beyond the
+# all-gather baseline, which is the Hein et al. x-replication the paper
+# contrasts).  The executor's halo prologue lives in core/program.py; this
+# host-side builder remains the ICI-bytes accounting surface
+# (benchmarks/spmv_exchange.py) and the legacy shim's operand source.
 # --------------------------------------------------------------------------
 
 @dataclasses.dataclass
 class HaloProgram:
-    """Host-precomputed halo exchange for one DistributedSpmv.
+    """Host-precomputed halo exchange for one lowered program.
 
     Shard q sends to shard p exactly the x entries p's rows read from q
     (``send_idx[q, p]``, padded to the max halo H).  On device one
@@ -359,7 +242,7 @@ class HaloProgram:
     comm_elems_per_shard: int  # S * H (vs padded_length for all-gather)
 
 
-def build_halo(dist: DistributedSpmv) -> HaloProgram:
+def build_halo(dist) -> HaloProgram:
     S = dist.plan.num_shards
     lay = dist.x_layout
     per = lay.padded_length() // S
@@ -406,29 +289,45 @@ def build_halo(dist: DistributedSpmv) -> HaloProgram:
                        comm_elems_per_shard=S * H)
 
 
-def make_halo_spmv_fn(dist: DistributedSpmv, halo: HaloProgram, mesh: Mesh,
+def make_halo_spmv_fn(dist, halo: HaloProgram, mesh: Mesh,
                       axis: str = "model", *, use_kernel: bool = False,
                       interpret: bool = True):
-    """f(data, cols_remap, send_idx, x_shards) -> b shards.
+    """Deprecated shim over :func:`repro.core.program.make_program_spmv_fn`
+    (old ``f(data, cols_remap, send_idx, x_shards)`` signature).
 
     Collective volume: S*H elements/shard (halo) vs padded_length
     (all-gather) — the ratio is exactly the paper's block-layout locality
-    win, measured in ICI bytes.
+    win, measured in ICI bytes.  The executed program uses the plan's own
+    halo prologue; a non-halo plan is re-lowered with ``exchange="halo"``
+    first so the shim keeps its historical meaning.
     """
-    spmv_local = partial(kops.ell_spmv, interpret=interpret) if use_kernel \
-        else kops.ell_spmv_ref
+    from .program import make_program_spmv_fn
+    prog = dist
+    if prog.plan.exchange != "halo":
+        # Historical behaviour: this factory always produced the halo
+        # program for the plan's base, whatever plan.exchange said.
+        prog = lower_with_exchange(
+            prog, dataclasses.replace(prog.plan, exchange="halo"))
+    inner = make_program_spmv_fn(prog, mesh, axis=axis,
+                                 use_kernel=use_kernel, interpret=interpret)
 
-    def shard_fn(data, cols, send_idx, x_shard):
-        x_local = x_shard[0]                               # (per,)
-        to_send = jnp.take(x_local, send_idx[0], axis=0)   # (S, H)
-        recv = jax.lax.all_to_all(to_send, axis, split_axis=0,
-                                  concat_axis=0, tiled=True)  # (S, H)
-        x_aug = jnp.concatenate([x_local, recv.reshape(-1)])
-        y = spmv_local(data[0], cols[0], x_aug)
-        return y[None]
+    @jax.jit
+    def fn(data, cols_remap, send_idx, x_shards):
+        del data, cols_remap, send_idx
+        return inner(x_shards)
+    return fn
 
-    fn = _shard_map_norep(
-        shard_fn, mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P(axis)),
-        out_specs=P(axis))
-    return jax.jit(fn)
+
+def lower_with_exchange(program, new_plan: SpmvPlan):
+    """Clone a program under a different exchange (same base otherwise).
+
+    The exchange only changes the executor's prologue, not the stages, so
+    every stage/accounting object is shared with the source program."""
+    return dataclasses.replace(program, plan=new_plan)
+
+
+def __getattr__(name):
+    if name == "DistributedSpmv":       # deprecated alias of the program IR
+        from .program import SpmvProgram
+        return SpmvProgram
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -26,7 +26,7 @@ import numpy as np
 from repro.core.sparse_matrix import CSRMatrix, csr_from_coo
 
 __all__ = ["PAPER_SUITE", "make_matrix", "banded", "arrow_fem", "powerlaw",
-           "rmat", "dense_blocks"]
+           "rmat", "dense_blocks", "mixed_structure"]
 
 
 def _finish(rows, cols, vals, M, symmetric: bool) -> CSRMatrix:
@@ -152,6 +152,54 @@ def dense_blocks(M: int, nnz: int, *, nblocks: int = 24, seed: int = 0) -> CSRMa
     cols = np.concatenate([c, np.arange(M)])
     vals = np.concatenate([vals, np.ones(M)])
     return _finish(rows, cols, vals, M, symmetric=True)
+
+
+def _to_coo(csr: CSRMatrix):
+    rows = np.repeat(np.arange(csr.nrows), np.diff(csr.row_ptr))
+    return rows, csr.col_index.astype(np.int64), csr.values
+
+
+def mixed_structure(M: int, nnz: int, *, band_frac: float = 0.2,
+                    band_nnz_frac: float = 0.8, couple_frac: float = 0.005,
+                    zipf_a: float = 2.2, seed: int = 0) -> CSRMatrix:
+    """Mixed-structure matrix: dense-banded block ⊕ short-row sparse block.
+
+    Rows [0, band_frac*M) form a *dense* FEM-style band (uniform,
+    ~lane-width rows — the regular structure a padded ELL slab executes
+    with almost no waste); rows [band_frac*M, M) form a scattered sparse
+    block with zipf-skewed **row lengths** (webbase-like short rows, mean
+    a few nnz) but *uniform column targets* — the structure where the
+    nonzero-balanced segmented format wins and the 128-lane ELL/HYB slab
+    floor loses, without introducing the hot *columns* that would make a
+    global reordering the dominant fix.  A light random coupling
+    (``couple_frac`` of nnz) keeps the matrix connected.  Under a
+    contiguous row partition the two regimes land on *different shards*,
+    which is exactly the case where one global kernel choice provably
+    loses to per-shard selection (``benchmarks/hetero_bench.py``).
+    """
+    rng = np.random.default_rng(seed)
+    hb = min(max(int(M * band_frac), 8), M - 8)
+    n_band = int(nnz * band_nnz_frac)
+    n_sp = max(nnz - n_band, 8)
+    # Dense band: bandwidth sized so each row carries ~n_band/hb entries.
+    bw = max(n_band // (2 * hb), 4)
+    B1 = banded(hb, n_band, bw, seed=seed, scatter_frac=0.03)
+    r1, c1, v1 = _to_coo(B1)
+    # Sparse block: zipf row lengths (skewed), uniform scattered columns.
+    m_sp = M - hb
+    counts = np.minimum(rng.zipf(zipf_a, m_sp), m_sp)
+    counts = np.maximum((counts * (n_sp / max(counts.sum(), 1))), 1.0)
+    counts = counts.astype(np.int64)
+    r2 = hb + np.repeat(np.arange(m_sp), counts)
+    c2 = hb + rng.integers(0, m_sp, r2.shape[0])
+    v2 = rng.standard_normal(r2.shape[0])
+    n_cp = int(nnz * couple_frac)
+    rows = np.concatenate([r1, r2, rng.integers(0, M, n_cp),
+                           np.arange(M)])
+    cols = np.concatenate([c1, c2, rng.integers(0, M, n_cp),
+                           np.arange(M)])
+    vals = np.concatenate([v1, v2, rng.standard_normal(n_cp), np.ones(M)])
+    return csr_from_coo(rows, cols, vals, (M, M))
 
 
 # name -> (M, nnz, builder)

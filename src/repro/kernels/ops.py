@@ -17,11 +17,11 @@ from .spmv_ell import ell_spmv as _ell_spmv_pallas
 from .spmv_bell import bell_spmv as _bell_spmv_pallas, bell_spmm as _bell_spmm_pallas
 from .spmv_seg import seg_psum as _seg_psum_pallas
 from repro.core.partition import nnz_chunk_starts
-from repro.core.sparse_matrix import SegMatrix
+from repro.core.sparse_matrix import EllMatrix, SegMatrix, hyb_cap_width
 
-__all__ = ["SEG_CHUNK", "ell_spmv_ref", "ell_spmv", "hyb_spmv", "bell_spmv",
-           "bell_spmm", "bell_from_bcsr", "seg_spmv", "seg_spmv_ref",
-           "seg_from_csr"]
+__all__ = ["SEG_CHUNK", "ell_spmv_ref", "ell_spmv", "hyb_spmv", "hyb_from_csr",
+           "bell_spmv", "bell_spmm", "bell_from_bcsr", "seg_spmv",
+           "seg_spmv_ref", "seg_from_csr"]
 
 #: Default elements per segmented chunk (lane-aligned).  Single source of
 #: truth shared with the plan cost model's padding arithmetic.
@@ -50,12 +50,36 @@ def ell_spmv(data, cols, x, *, interpret: bool = False, **tiles):
 
 @functools.partial(jax.jit, static_argnames=("num_rows",))
 def _overflow_add(y, rows, cols, vals, x, num_rows: int):
-    return y.at[rows].add(vals * jnp.take(x, cols, axis=0))
+    xs = jnp.take(x, cols, axis=0)           # (O,) or (O, B)
+    if xs.ndim == 2:
+        vals = vals[:, None]
+    return y.at[rows].add(vals * xs)
+
+
+def hyb_from_csr(csr, *, lane: int | None = None,
+                 sublane: int | None = None) -> EllMatrix:
+    """Convert host CSRMatrix -> HYB (capped ELL + COO overflow tail).
+
+    The ELL width is capped at :func:`~repro.core.sparse_matrix.hyb_cap_width`
+    (lane-aligned p95 of row lengths), so skewed rows spill into the COO
+    overflow arrays instead of inflating every row's padded width —
+    the format :func:`hyb_spmv` executes.
+    """
+    from repro.core.sparse_matrix import ELL_LANE, ELL_SUBLANE, csr_row_nnz, \
+        csr_to_ell
+    lane = ELL_LANE if lane is None else lane
+    sublane = ELL_SUBLANE if sublane is None else sublane
+    cap = hyb_cap_width(csr_row_nnz(csr), lane=lane)
+    return csr_to_ell(csr, lane=lane, sublane=sublane, max_width=cap)
 
 
 def hyb_spmv(ell_data, ell_cols, ovf_rows, ovf_cols, ovf_vals, x,
              *, use_kernel: bool = False, interpret: bool = False):
-    """HYB = padded-ELL kernel + COO overflow scatter-add tail."""
+    """HYB = padded-ELL kernel + COO overflow scatter-add tail.
+
+    Accepts a single (N,) vector or a multi-RHS block (N, B), matching the
+    other kernel wrappers; the overflow scatter broadcasts over the
+    trailing batch axis."""
     if use_kernel:
         y = ell_spmv(ell_data, ell_cols, x, interpret=interpret)
     else:

@@ -138,7 +138,9 @@ class SparseMatrixEngine:
             if self._plan_cache is not None:
                 self._plan_cache[cache_key] = choice.plan
         else:
-            plan = dataclasses.replace(plan, num_shards=self.num_shards)
+            # retarget (not replace): a per-shard kernel tuple tuned for a
+            # different shard count is dropped rather than kept unlowerable.
+            plan = plan.retarget(self.num_shards)
             choice = PlanChoice(
                 features=features,
                 ranking=(RankedPlan(plan=plan,
@@ -208,7 +210,7 @@ class SparseMatrixEngine:
         new_dist, new_choice, event = replan(
             m.csr, m.monitor, m.choice, num_shards=self.num_shards,
             seed=self.seed, cfg=self.rebalance_cfg,
-            request_index=m.spmv_count)
+            request_index=m.spmv_count, program=m.dist)
         m.rebalance_log.append(event)
         if new_dist is not None:
             m.dist = new_dist          # the double-buffer swing
@@ -233,6 +235,7 @@ class SparseMatrixEngine:
         out = {}
         for n, m in self._matrices.items():
             s = {"plan": dataclasses.asdict(m.choice.plan),
+                 "shard_kernels": list(m.dist.shard_kernels()),
                  "nnz": m.dist.matrix.nnz,
                  "migrations": m.dist.traffic.migrations,
                  "hotspot_share": m.dist.traffic.hotspot_share,

@@ -15,14 +15,28 @@ columns are hot.  This module closes the loop:
    absolute threshold *and* the ingest-time baseline, with hysteresis
    (``patience`` consecutive hot windows to trip, ``cooldown`` windows of
    grace after a swap) so a single bursty window never thrashes the plan.
-3. **Re-plan** — :func:`replan` reruns the autotuner traffic-weighted
-   (``autotune(..., col_weight=...)``) under a budget (restricted
-   reordering grid, small Emu-probe count), then uses the cheap vectorized
-   Emu engine as a *drift oracle*: both the incumbent and the candidate
-   plan are simulated on the traffic-active submatrix, and the candidate
-   must win by ``min_gain`` before it is considered.
+3. **Re-plan** — two tiers, cheapest first:
+
+   * **Partial (hot shards only).** Since the per-shard program refactor
+     the plan carries a kernel per shard, so the first response to a trip
+     is local: re-derive the hot shards' kernels on the
+     traffic-thinned structure (:func:`~repro.core.plan._active_submatrix`
+     + :func:`~repro.core.plan.kernel_shard_costs` against the *deployed*
+     partition), gate on the load-weighted kernel-slot cost improving by
+     ``min_gain``, and rebuild **only the changed stages**
+     (:func:`~repro.core.program.relower` shares every other stage with
+     the incumbent program).  No grid, no probes, no full rebuild.
+   * **Full.** When no hot-shard kernel change pays, :func:`replan`
+     reruns the autotuner traffic-weighted (``autotune(...,
+     col_weight=...)``) under a budget (restricted reordering grid, small
+     Emu-probe count), then uses the cheap vectorized Emu engine as a
+     *drift oracle*: both the incumbent and the candidate plan are
+     simulated on the traffic-active submatrix, and the candidate must
+     win by ``min_gain`` before it is considered.  If the winning base
+     matches the incumbent's, the build still goes through ``relower``
+     (per-shard double-buffered swap).
 4. **Swap** — the candidate program is built double-buffered: in-flight
-   ``spmv`` calls keep the old :class:`~repro.core.spmv.DistributedSpmv`
+   ``spmv`` calls keep the old :class:`~repro.core.program.SpmvProgram`
    while the new one is constructed and validated against the exact CSR
    oracle (:func:`~repro.core.sparse_matrix.csr_matvec`) on sample
    vectors; only then does the engine swing its reference (a single
@@ -41,18 +55,19 @@ from repro.core.emu import EmuConfig, run_spmv
 from repro.core.layout import make_layout
 from repro.core.migration import shard_load_map
 from repro.core.partition import make_partition
-from repro.core.plan import PlanChoice, _active_submatrix, _permute_weights, \
-    autotune
+from repro.core.plan import KERNELS, PlanChoice, RankedPlan, \
+    _active_submatrix, _permute_weights, autotune, estimate_cost, \
+    kernel_shard_costs
+from repro.core.program import SpmvProgram, lower, relower
 from repro.core.reorder import REORDERINGS, reordering_permutation
 from repro.core.sparse_matrix import CSRMatrix, csr_matvec
-from repro.core.spmv import DistributedSpmv, SpmvPlan, build_distributed, \
-    local_spmv
+from repro.core.spmv import SpmvPlan, local_spmv
 
 __all__ = ["RebalanceConfig", "RebalanceEvent", "LoadMonitor", "replan",
-           "probe_plan_seconds", "weighted_shard_load"]
+           "hot_shards", "probe_plan_seconds", "weighted_shard_load"]
 
 
-def weighted_shard_load(dist: DistributedSpmv,
+def weighted_shard_load(dist: SpmvProgram,
                         w_caller: np.ndarray) -> np.ndarray:
     """(P,) expected per-shard load of one request on a built program.
 
@@ -97,6 +112,15 @@ class RebalanceConfig:
     validate_samples: int = 2
     validate_atol: float = 1e-5   # fp32 slabs vs the float64 CSR oracle
     seed: int = 0
+    #: A shard is *hot* when its traffic-weighted load exceeds
+    #: ``hot_factor`` x the mean — the set the partial re-plan is allowed
+    #: to re-kernel.
+    hot_factor: float = 1.25
+    #: Try the hot-shard-only kernel re-selection before the full
+    #: traffic-weighted autotune (no grid, no probes, only the changed
+    #: stages rebuilt).  Disable to force every trip through the full
+    #: re-plan.
+    partial_first: bool = True
     #: Run the re-plan on a daemon worker thread instead of inline in the
     #: request that closed the hot window.  Inline (the default) is
     #: deterministic — the swap has happened by the time ``spmv`` returns —
@@ -108,7 +132,12 @@ class RebalanceConfig:
 
 @dataclasses.dataclass
 class RebalanceEvent:
-    """One detector trip: what was measured, decided, and (maybe) swapped."""
+    """One detector trip: what was measured, decided, and (maybe) swapped.
+
+    ``mode`` records which re-plan tier produced the decision:
+    ``"partial"`` (hot-shard kernel re-selection, only ``swapped_shards``
+    stages rebuilt) or ``"full"`` (budgeted traffic-weighted autotune).
+    """
 
     request_index: int
     window_index: int
@@ -120,6 +149,8 @@ class RebalanceEvent:
     probe_new_seconds: float | None
     swapped: bool
     reason: str
+    mode: str = "full"
+    swapped_shards: tuple = ()
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -142,7 +173,7 @@ class LoadMonitor:
     the engine should attempt a re-plan *now*.
     """
 
-    def __init__(self, dist: DistributedSpmv, cfg: RebalanceConfig):
+    def __init__(self, dist: SpmvProgram, cfg: RebalanceConfig):
         self.cfg = cfg
         self._ncols = dist.matrix.ncols
         self._act_sum = np.zeros(self._ncols, dtype=np.float64)
@@ -156,7 +187,7 @@ class LoadMonitor:
         self.trips = 0
         self.attach(dist)
 
-    def attach(self, dist: DistributedSpmv) -> None:
+    def attach(self, dist: SpmvProgram) -> None:
         """(Re)bind to the active program; called again after every swap.
 
         The (load_map, base, perm) triple is swapped in as **one**
@@ -297,12 +328,109 @@ def probe_plan_seconds(csr: CSRMatrix, plan: SpmvPlan,
     return float(res.seconds)
 
 
+def hot_shards(load: np.ndarray, factor: float) -> np.ndarray:
+    """Shards whose load exceeds ``factor`` x the mean (the partial
+    re-plan's working set)."""
+    mu = load.mean()
+    if mu <= 0:
+        return np.zeros(0, dtype=np.int64)
+    return np.flatnonzero(load > factor * mu)
+
+
+def _validated(dist: SpmvProgram, csr: CSRMatrix, cfg: RebalanceConfig,
+               request_index: int) -> bool:
+    """Candidate program reproduces the exact CSR oracle on sample vectors."""
+    rng = np.random.default_rng(cfg.seed + request_index)
+    for _ in range(cfg.validate_samples):
+        xs = rng.standard_normal(csr.ncols)
+        if not np.allclose(local_spmv(dist, xs), csr_matvec(csr, xs),
+                           atol=cfg.validate_atol, rtol=1e-5):
+            return False
+    return True
+
+
+def _try_partial_replan(csr: CSRMatrix, monitor: LoadMonitor,
+                        current: PlanChoice, program: SpmvProgram,
+                        w: np.ndarray, cfg: RebalanceConfig,
+                        request_index: int):
+    """Hot-shard-only kernel re-selection; None when it does not apply.
+
+    The hot shards' kernels are re-derived from the *traffic-thinned*
+    structure (:func:`~repro.core.plan._active_submatrix` permuted into
+    the deployed program's order) against the **deployed** partition — the
+    format each hot shard would want for the entries the request stream
+    actually touches.  The gate is the load-weighted kernel-slot cost
+    (sum over shards of ``load_p * cost[kernel_p][p]``) improving by
+    ``cfg.min_gain``; the Emu drift oracle cannot see kernels, so the
+    analytic table is the authoritative metric here.  Only the changed
+    stages are rebuilt (:func:`~repro.core.program.relower`) and the
+    candidate must still reproduce ``csr_matvec`` before the swap.
+    """
+    old_plan = current.plan
+    if old_plan.num_shards != program.plan.num_shards:
+        return None
+    load = monitor.shard_load()
+    hot = hot_shards(load, cfg.hot_factor)
+    if hot.size == 0 or hot.size >= load.size:
+        return None
+    sub = _active_submatrix(csr, w, seed=cfg.seed)
+    if sub is csr:
+        return None                       # uniform traffic: nothing local
+    sub_r = sub if program.perm is None else \
+        sub.permuted(program.perm, program.perm)
+    costs = kernel_shard_costs(sub_r, program.partition)
+    old_k = old_plan.resolved_shard_kernels()
+    new_k = list(old_k)
+    for p in hot:
+        new_k[p] = min(KERNELS, key=lambda k: (costs[k][p],
+                                               KERNELS.index(k)))
+    if tuple(new_k) == tuple(old_k):
+        return None
+    old_c = float(sum(load[p] * costs[k][p] for p, k in enumerate(old_k)))
+    new_c = float(sum(load[p] * costs[k][p] for p, k in enumerate(new_k)))
+    if not new_c < (1.0 - cfg.min_gain) * max(old_c, 1e-30):
+        return None
+    new_plan = dataclasses.replace(old_plan, shard_kernels=tuple(new_k))
+
+    dist = relower(program, new_plan)
+    if not _validated(dist, csr, cfg, request_index):
+        return None                       # fall through to the full tier
+    changed = tuple(int(p) for p in range(len(old_k))
+                    if new_k[p] != old_k[p])
+    choice = PlanChoice(
+        features=current.features,
+        ranking=(RankedPlan(plan=new_plan,
+                            cost=estimate_cost(csr, new_plan)),),
+        probed=0, shard_features=current.shard_features)
+    event = RebalanceEvent(
+        request_index=request_index, window_index=monitor.windows_closed,
+        old_plan=old_plan, new_plan=new_plan,
+        load_cv_before=monitor.last_cv,
+        load_cv_after=_cv(weighted_shard_load(dist, w)),
+        probe_old_seconds=None, probe_new_seconds=None,
+        swapped=True, mode="partial", swapped_shards=changed,
+        reason=f"partial: re-lowered hot shard(s) {list(changed)} "
+        f"({'/'.join(old_k[p] for p in changed)} -> "
+        f"{'/'.join(new_k[p] for p in changed)}), weighted kernel cost "
+        f"{(1.0 - new_c / max(old_c, 1e-30)):.1%} down")
+    return dist, choice, event
+
+
 def replan(csr: CSRMatrix, monitor: LoadMonitor, current: PlanChoice, *,
            num_shards: int, seed: int, cfg: RebalanceConfig,
-           request_index: int
-           ) -> tuple[DistributedSpmv | None, PlanChoice | None,
+           request_index: int, program: SpmvProgram | None = None
+           ) -> tuple[SpmvProgram | None, PlanChoice | None,
                       RebalanceEvent]:
     """Budgeted traffic-weighted re-plan with oracle gate + validated build.
+
+    Two tiers.  With ``cfg.partial_first`` and the deployed ``program``
+    supplied, the hot-shard-only kernel re-selection
+    (:func:`_try_partial_replan`) runs first — when it pays, only the hot
+    shards' stages are rebuilt and swapped.  Otherwise the full budgeted
+    autotune runs (traffic-weighted grid + Emu drift oracle); when its
+    winner shares the incumbent's base the build still goes through
+    :func:`~repro.core.program.relower`, so even full re-plans reuse every
+    unchanged stage.
 
     Returns ``(new_dist, new_choice, event)``; the first two are ``None``
     when the re-plan was rejected (plan unchanged, no modeled gain, or
@@ -311,6 +439,13 @@ def replan(csr: CSRMatrix, monitor: LoadMonitor, current: PlanChoice, *,
     """
     w = monitor.activity()
     cv_before = monitor.last_cv
+
+    if cfg.partial_first and program is not None:
+        partial = _try_partial_replan(csr, monitor, current, program, w,
+                                      cfg, request_index)
+        if partial is not None:
+            return partial
+
     choice = autotune(csr, num_shards=num_shards, seed=seed,
                       probe=cfg.probe, reorderings=cfg.reorderings,
                       col_weight=w)
@@ -330,27 +465,45 @@ def replan(csr: CSRMatrix, monitor: LoadMonitor, current: PlanChoice, *,
 
     old_s = probe_plan_seconds(csr, old_plan, w)
     new_s = probe_plan_seconds(csr, new_plan, w)
-    if new_s > (1.0 - cfg.min_gain) * old_s:
+    same_base = all(getattr(new_plan, f) == getattr(old_plan, f)
+                    for f in ("layout", "distribution", "reordering",
+                              "exchange", "num_shards", "seed"))
+    if same_base:
+        # The Emu oracle only separates bases; a same-base candidate
+        # (kernel-only change) is gated by the traffic-weighted analytic
+        # model instead.
+        old_t = estimate_cost(csr, old_plan, col_weight=w).total
+        new_t = estimate_cost(csr, new_plan, col_weight=w).total
+        if new_t > (1.0 - cfg.min_gain) * old_t:
+            return rejected("analytic model: no modeled gain over incumbent "
+                            "(same base)", old_s, new_s)
+    elif new_s > (1.0 - cfg.min_gain) * old_s:
         return rejected("drift oracle: no modeled gain over incumbent",
                         old_s, new_s)
 
     # Double-buffered build: the old program keeps serving until the new
-    # one exists and reproduces the exact CSR oracle.
-    dist = build_distributed(csr, new_plan)
-    rng = np.random.default_rng(cfg.seed + request_index)
-    for _ in range(cfg.validate_samples):
-        xs = rng.standard_normal(csr.ncols)
-        if not np.allclose(local_spmv(dist, xs), csr_matvec(csr, xs),
-                           atol=cfg.validate_atol, rtol=1e-5):
-            return rejected("validation failed: candidate program does not "
-                            "reproduce csr_matvec", old_s, new_s)
+    # one exists and reproduces the exact CSR oracle.  Same-base winners
+    # re-lower only the stages whose kernel changed.
+    if same_base and program is not None:
+        dist = relower(program, new_plan)
+    else:
+        dist = lower(csr, new_plan)
+    if not _validated(dist, csr, cfg, request_index):
+        return rejected("validation failed: candidate program does not "
+                        "reproduce csr_matvec", old_s, new_s)
 
+    old_k = old_plan.resolved_shard_kernels()
+    new_k = new_plan.resolved_shard_kernels()
+    changed = tuple(int(p) for p in range(num_shards)
+                    if p >= len(old_k) or new_k[p] != old_k[p]) \
+        if same_base else tuple(range(num_shards))
     cv_after = _cv(weighted_shard_load(dist, w))
     event = RebalanceEvent(
         request_index=request_index, window_index=monitor.windows_closed,
         old_plan=old_plan, new_plan=new_plan,
         load_cv_before=cv_before, load_cv_after=cv_after,
         probe_old_seconds=old_s, probe_new_seconds=new_s,
-        swapped=True, reason="swapped: modeled gain "
+        swapped=True, mode="full", swapped_shards=changed,
+        reason="swapped: modeled gain "
         f"{(1.0 - new_s / max(old_s, 1e-30)):.1%}")
     return dist, choice, event

@@ -90,8 +90,106 @@ def test_ranking_sorted_and_full_grid():
     choice = autotune(A, num_shards=4, probe=0)
     totals = [r.cost.total for r in choice.ranking]
     assert totals == sorted(totals)
-    assert len(choice.ranking) == 2 * 2 * len(REORDERINGS) * 2 * 2
+    # uniform grid (kernels now include hyb) + optional per-shard
+    # heterogeneous candidates (one per base x exchange, only when the
+    # per-shard selection is genuinely mixed)
+    uniform = [r for r in choice.ranking if r.plan.shard_kernels is None]
+    hetero = [r for r in choice.ranking if r.plan.shard_kernels is not None]
+    assert len(uniform) == 2 * 2 * len(REORDERINGS) * 3 * 2
+    for r in hetero:
+        assert len(set(r.plan.shard_kernels)) > 1
+        assert len(r.plan.shard_kernels) == 4
     assert choice.probed == 0
+    # disabling per_shard reproduces the pre-refactor uniform-only grid
+    uni_only = autotune(A, num_shards=4, probe=0, per_shard=False)
+    assert all(r.plan.shard_kernels is None for r in uni_only.ranking)
+
+
+def test_per_shard_candidate_never_loses_to_uniform_on_same_base():
+    """Within one base, the heterogeneous candidate's kernel-slot term is
+    the per-shard argmin — its total can never exceed the best uniform
+    kernel's on that base (max over shards of min <= min over kernels of
+    max)."""
+    from repro.data.matrices import mixed_structure
+    A = mixed_structure(1024, 120_000, seed=0)
+    choice = autotune(A, num_shards=4, probe=0)
+    hetero = [r for r in choice.ranking if r.plan.shard_kernels is not None]
+    assert hetero, "mixed-structure matrix produced no per-shard candidate"
+    for h in hetero:
+        base = (h.plan.reordering, h.plan.layout, h.plan.distribution,
+                h.plan.exchange)
+        uni = [r for r in choice.ranking
+               if r.plan.shard_kernels is None and
+               (r.plan.reordering, r.plan.layout, r.plan.distribution,
+                r.plan.exchange) == base]
+        assert h.cost.total <= min(u.cost.total for u in uni) + 1e-9
+
+
+def test_shard_kernel_selection_reads_structure():
+    """Dense-regular rows keep the ELL slab; short/skewed rows move off it."""
+    from repro.core.partition import make_partition
+    from repro.core.plan import kernel_shard_costs, select_shard_kernels
+    from repro.data.matrices import mixed_structure
+    A = mixed_structure(1024, 33 * 1024, seed=0)
+    # the nonzero split puts the dense band on the leading shards and the
+    # short-row sparse block on the trailing ones
+    part = make_partition(A, 4, "nonzero")
+    sel = select_shard_kernels(A, part)
+    assert len(set(sel)) > 1, sel
+    # band shards: regular lane-width rows -> ell; the short-row sparse
+    # shards never keep the 128-lane slab floor
+    assert sel[0] == "ell" and sel[1] == "ell", sel
+    assert sel[3] == "seg", sel
+    costs = kernel_shard_costs(A, part)
+    assert set(costs) == {"ell", "seg", "hyb"}
+    for v in costs.values():
+        assert v.shape == (4,) and (v > 0).all()
+
+
+LEGACY_CHOICE_JSON = """
+{"features": {"nrows": 64, "ncols": 64, "nnz": 128, "density": 0.03125,
+  "row_nnz_mean": 2.0, "row_nnz_cv": 0.5, "row_nnz_max": 4.0,
+  "tail_share": 0.03, "bandwidth_mean": 0.1, "bandwidth_p95": 0.3,
+  "hot_col_share": 0.25, "remote_frac": 0.5},
+ "ranking": [{"plan": {"layout": "block", "distribution": "nonzero",
+   "reordering": "none", "exchange": "halo", "kernel": "seg",
+   "num_shards": 4, "seed": 0},
+   "cost": {"issue_cycles": 1.0, "ingress_cycles": 2.0,
+   "migration_cycles": 3.0, "padding_cycles": 4.0, "comm_cycles": 5.0,
+   "total": 15.0}, "probe_seconds": null, "probe_mbs": null}],
+ "probed": 0}
+"""
+
+
+def test_legacy_plan_choice_json_loads_as_uniform_program():
+    """Pre-per-shard JSON (no shard_kernels, no shard_features) must keep
+    loading — and lower as the uniform program it always meant."""
+    from repro.core.program import lower
+    choice = PlanChoice.from_json(LEGACY_CHOICE_JSON)
+    assert choice.plan.shard_kernels is None
+    assert choice.shard_features is None
+    assert choice.plan.resolved_shard_kernels() == ("seg",) * 4
+    # it lowers and serves as the uniform-seg program
+    A = make_matrix("ford1", scale=0.05)
+    prog = lower(A, choice.plan)
+    assert prog.shard_kernels() == ("seg",) * 4
+    x = np.random.default_rng(0).standard_normal(A.ncols)
+    np.testing.assert_allclose(local_spmv(prog, x), csr_to_dense(A) @ x,
+                               atol=1e-6)
+    # and the new-style JSON of the same choice still round-trips
+    assert PlanChoice.from_json(choice.to_json()) == choice
+
+
+def test_plan_retarget_drops_mismatched_shard_kernels():
+    p = SpmvPlan(num_shards=4, shard_kernels=("ell", "seg", "hyb", "seg"))
+    assert p.retarget(4).shard_kernels == ("ell", "seg", "hyb", "seg")
+    assert p.retarget(8).shard_kernels is None
+    assert p.retarget(8).num_shards == 8
+    with pytest.raises(ValueError, match="num_shards"):
+        SpmvPlan(num_shards=8,
+                 shard_kernels=("ell", "seg")).resolved_shard_kernels()
+    with pytest.raises(ValueError, match="shard kernel"):
+        SpmvPlan(shard_kernels=("ell", "bogus"))
 
 
 @pytest.mark.parametrize("name", list(SUITE))

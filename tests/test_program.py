@@ -1,0 +1,196 @@
+"""SpmvProgram IR tests: lowering, per-shard stages, and executor
+equivalence — the numpy oracle, the one shard_map device program (jnp
+oracle *and* Pallas-interpret kernels), and the Emu probe all consume the
+same lowered program.  The multi-device backend runs in a subprocess so
+the fake devices never leak into this session.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.program import execute, lower, probe_program, relower
+from repro.core.sparse_matrix import csr_matvec
+from repro.core.spmv import SpmvPlan
+from repro.data.matrices import make_matrix, mixed_structure, powerlaw
+
+KERNEL_CONFIGS = [
+    ("ell", None),
+    ("seg", None),
+    ("hyb", None),
+    ("seg", ("ell", "seg", "hyb", "seg")),      # heterogeneous program
+]
+
+
+@pytest.mark.parametrize("layout", ["block", "cyclic"])
+@pytest.mark.parametrize("distribution", ["row", "nonzero"])
+@pytest.mark.parametrize("kernel,shard_kernels", KERNEL_CONFIGS)
+def test_numpy_backend_matches_oracle_on_grid(layout, distribution, kernel,
+                                              shard_kernels):
+    A = make_matrix("cop20k_A", scale=0.003)
+    plan = SpmvPlan(layout=layout, distribution=distribution, kernel=kernel,
+                    shard_kernels=shard_kernels, num_shards=4)
+    prog = lower(A, plan)
+    assert prog.shard_kernels() == plan.resolved_shard_kernels()
+    x = np.random.default_rng(0).standard_normal(A.ncols)
+    np.testing.assert_allclose(execute(prog, x), csr_matvec(A, x),
+                               atol=1e-5, rtol=1e-6)
+
+
+def test_numpy_backend_batched_bitwise_per_column():
+    A = make_matrix("cop20k_A", scale=0.003)
+    X = np.random.default_rng(1).standard_normal((A.ncols, 4))
+    for kernel, sk in KERNEL_CONFIGS:
+        prog = lower(A, SpmvPlan(kernel=kernel, shard_kernels=sk,
+                                 num_shards=4, reordering="bfs"))
+        Y = execute(prog, X)
+        assert Y.shape == (A.nrows, 4)
+        for b in range(4):
+            assert np.array_equal(Y[:, b], execute(prog, X[:, b])), \
+                (kernel, sk, b)
+        np.testing.assert_allclose(Y, csr_matvec(A, X), atol=1e-5,
+                                   rtol=1e-6)
+
+
+def test_hyb_stage_really_overflows_and_matches():
+    """The capped slab must actually spill on a skewed matrix (otherwise
+    HYB degenerates to ELL and the test proves nothing)."""
+    A = powerlaw(1024, 40_000, seed=2)
+    prog = lower(A, SpmvPlan(kernel="hyb", distribution="row", num_shards=4))
+    ovf = sum(st.ell.overflow_vals.size for st in prog.stages)
+    assert ovf > 0
+    x = np.random.default_rng(3).standard_normal(A.ncols)
+    np.testing.assert_allclose(execute(prog, x), csr_matvec(A, x),
+                               atol=1e-4, rtol=1e-5)
+
+
+def test_relower_shares_unchanged_stages():
+    A = mixed_structure(1024, 120_000, seed=0)
+    p1 = SpmvPlan(num_shards=4, shard_kernels=("ell", "seg", "hyb", "seg"))
+    prog = lower(A, p1)
+    p2 = SpmvPlan(num_shards=4, shard_kernels=("ell", "ell", "hyb", "seg"))
+    prog2 = relower(prog, p2)
+    assert prog2.stages[0] is prog.stages[0]
+    assert prog2.stages[2] is prog.stages[2]
+    assert prog2.stages[3] is prog.stages[3]
+    assert prog2.stages[1] is not prog.stages[1]
+    assert prog2.stages[1].kernel == "ell"
+    x = np.random.default_rng(4).standard_normal(A.ncols)
+    np.testing.assert_allclose(execute(prog2, x), csr_matvec(A, x),
+                               atol=1e-5, rtol=1e-6)
+    # structural objects are shared, not copied
+    assert prog2.matrix is prog.matrix and prog2.partition is prog.partition
+    with pytest.raises(ValueError, match="base field"):
+        relower(prog, SpmvPlan(num_shards=4, layout="cyclic",
+                               shard_kernels=("ell", "ell", "hyb", "seg")))
+
+
+def test_emu_backend_is_deterministic_and_plan_driven():
+    A = make_matrix("cop20k_A", scale=0.003)
+    prog = lower(A, SpmvPlan(num_shards=4, kernel="seg"))
+    r1 = execute(prog, backend="emu")
+    r2 = probe_program(prog)
+    assert r1.ticks == r2.ticks and r1.migrations == r2.migrations
+    # a worse layout really probes slower (cyclic on the banded-ish matrix)
+    slow = lower(A, SpmvPlan(num_shards=4, layout="cyclic", kernel="seg"))
+    assert probe_program(slow).seconds != r1.seconds
+
+
+def test_execute_rejects_unknown_backend_and_missing_x():
+    A = make_matrix("ford1", scale=0.05)
+    prog = lower(A, SpmvPlan(num_shards=4))
+    with pytest.raises(ValueError, match="backend"):
+        execute(prog, np.zeros(A.ncols), backend="tpu")
+    with pytest.raises(ValueError, match="needs an input"):
+        execute(prog, backend="numpy")
+    with pytest.raises(ValueError, match="mesh"):
+        execute(prog, np.zeros(A.ncols), backend="shard_map")
+
+
+def test_legacy_stacked_views_still_available():
+    """Old callers (build_halo, spmv_exchange) read stacked .data/.cols —
+    they must exist for any program, and seg_* for uniform-seg ones."""
+    A = make_matrix("ford1", scale=0.05)
+    het = lower(A, SpmvPlan(num_shards=4,
+                            shard_kernels=("ell", "seg", "hyb", "seg")))
+    assert het.data.shape[0] == 4 and het.cols.shape == het.data.shape
+    assert het.seg_vals is None                 # not a uniform-seg program
+    seg = lower(A, SpmvPlan(num_shards=4, kernel="seg"))
+    assert seg.seg_vals is not None and seg.seg_pieces.shape[-1] == 4
+    from repro.core.spmv import DistributedSpmv, build_halo
+    assert isinstance(het, DistributedSpmv)     # deprecated alias
+    h = build_halo(het)
+    assert h.halo >= 1 and h.send_idx.shape[:2] == (4, 4)
+
+
+_SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import json
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core.program import execute, lower, make_program_spmv_fn, \\
+        gather_b
+    from repro.core.sparse_matrix import csr_matvec
+    from repro.core.spmv import SpmvPlan
+    from repro.data.matrices import make_matrix
+    from repro.launch.mesh import auto_axis_types
+
+    mesh = jax.make_mesh((4,), ("model",), **auto_axis_types(1))
+    A = make_matrix("cop20k_A", scale=0.003)
+    x = np.random.default_rng(1).standard_normal(A.ncols).astype(np.float32)
+    X = np.random.default_rng(2).standard_normal((A.ncols, 3)) \\
+        .astype(np.float32)
+    ref = csr_matvec(A, x)
+    out = {}
+    # executor equivalence: numpy oracle vs shard_map (jnp oracle) vs
+    # shard_map (Pallas interpret), on a cross-section of the
+    # exchange x layout x distribution x per-shard-kernel grid (the full
+    # grid is pinned in-process against the numpy backend; the device
+    # backend compiles, so it samples every axis value instead)
+    bases = (("allgather", "block", "row"),
+             ("allgather", "cyclic", "nonzero"),
+             ("halo", "block", "nonzero"),
+             ("halo", "cyclic", "row"))
+    for exch, layout, dist_s in bases:
+        for sk in (None, ("ell", "seg", "hyb", "seg")):
+            plan = SpmvPlan(layout=layout, distribution=dist_s,
+                            exchange=exch, kernel="seg",
+                            shard_kernels=sk, num_shards=4)
+            prog = lower(A, plan)
+            y_np = execute(prog, x)
+            y_sm = execute(prog, x, backend="shard_map", mesh=mesh)
+            key = f"{exch}/{layout}/{dist_s}/{'het' if sk else 'seg'}"
+            out[key] = bool(
+                np.allclose(y_np, ref, atol=1e-3) and
+                np.allclose(y_sm, ref, atol=1e-3) and
+                np.allclose(y_sm, y_np, atol=1e-3))
+    # Pallas-interpret kernels through the same executor
+    plan = SpmvPlan(exchange="halo", num_shards=4,
+                    shard_kernels=("ell", "seg", "hyb", "seg"))
+    prog = lower(A, plan)
+    y_pal = execute(prog, x, backend="shard_map", mesh=mesh,
+                    use_kernel=True, interpret=True)
+    out["pallas"] = bool(np.allclose(y_pal, ref, atol=1e-3))
+    # batched (N, B) through the device path
+    Y = execute(prog, X, backend="shard_map", mesh=mesh)
+    out["batched"] = bool(np.allclose(Y, csr_matvec(A, X), atol=1e-3))
+    # reusable compiled fn + shard-form output
+    fn = make_program_spmv_fn(prog, mesh)
+    with mesh:
+        ys = fn(jnp.asarray(prog.x_to_device(x)))
+    out["fn_form"] = bool(np.allclose(gather_b(prog, ys), ref, atol=1e-3))
+    print(json.dumps(out))
+""")
+
+
+@pytest.mark.slow
+def test_executor_equivalence_4dev_subprocess():
+    r = subprocess.run([sys.executable, "-c", _SUBPROC], capture_output=True,
+                       text=True, timeout=600,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert r.returncode == 0, r.stderr[-2000:]
+    res = json.loads(r.stdout.strip().splitlines()[-1])
+    assert all(res.values()), res

@@ -217,6 +217,77 @@ def test_async_replan_swaps_off_the_request_path():
                                atol=1e-4, rtol=1e-5)
 
 
+def test_partial_replan_swaps_only_hot_shards():
+    """A shard-0-concentrated workload re-kernels *only* the hot shard:
+    the partial tier relowers that stage, shares every other stage object
+    with the incumbent program, and the result still matches the oracle."""
+    from repro.core.plan import PlanChoice, RankedPlan, estimate_cost, \
+        extract_features
+    from repro.core.program import execute, lower
+    from repro.core.spmv import SpmvPlan
+    from repro.data.matrices import mixed_structure
+    from repro.serve.rebalance import hot_shards, replan
+
+    A = mixed_structure(1024, 33 * 1024, seed=0)
+    plan = SpmvPlan(layout="block", distribution="row", reordering="none",
+                    exchange="halo", kernel="seg", num_shards=4)
+    prog = lower(A, plan)
+    cfg = RebalanceConfig(window=16, probe=0)
+    mon = LoadMonitor(prog, cfg)
+    w = np.ones(A.ncols)
+    w[:256] = 50.0                      # traffic on shard 0's x columns
+    mon._act_ema = w / w.mean()
+    assert list(hot_shards(mon.shard_load(), cfg.hot_factor)) == [0]
+
+    choice = PlanChoice(
+        features=extract_features(A, num_shards=4),
+        ranking=(RankedPlan(plan=plan, cost=estimate_cost(A, plan)),),
+        probed=0)
+    dist, new_choice, ev = replan(A, mon, choice, num_shards=4, seed=0,
+                                  cfg=cfg, request_index=0, program=prog)
+    assert ev.swapped and ev.mode == "partial"
+    assert ev.swapped_shards == (0,)
+    assert dist.shard_kernels()[0] != "seg"       # hot shard re-kerneled
+    assert dist.shard_kernels()[1:] == ("seg",) * 3
+    # per-shard double-buffered swap: untouched stages are shared objects
+    assert all(dist.stages[p] is prog.stages[p] for p in (1, 2, 3))
+    assert dist.stages[0] is not prog.stages[0]
+    assert new_choice.plan == dist.plan
+    x = np.random.default_rng(0).standard_normal(A.ncols)
+    np.testing.assert_allclose(execute(dist, x), csr_matvec(A, x),
+                               atol=1e-5, rtol=1e-6)
+    # no partial tier when disabled: same trip goes the full route
+    cfg_full = RebalanceConfig(window=16, probe=0, partial_first=False)
+    _, _, ev_full = replan(A, mon, choice, num_shards=4, seed=0,
+                           cfg=cfg_full, request_index=0, program=prog)
+    assert ev_full.mode == "full"
+
+
+def test_partial_replan_needs_skewed_traffic():
+    """Uniform traffic never takes the partial tier (nothing local to
+    re-derive) — the full tier answers the trip instead."""
+    from repro.core.plan import PlanChoice, RankedPlan, estimate_cost, \
+        extract_features
+    from repro.core.program import lower
+    from repro.core.spmv import SpmvPlan
+    from repro.serve.rebalance import replan
+
+    A = make_matrix("cop20k_A", scale=0.005)
+    plan = SpmvPlan(layout="block", distribution="row", reordering="none",
+                    exchange="halo", kernel="ell", num_shards=4)
+    prog = lower(A, plan)
+    cfg = RebalanceConfig(window=16, probe=2)
+    mon = LoadMonitor(prog, cfg)
+    mon._act_ema = np.ones(A.ncols)
+    choice = PlanChoice(
+        features=extract_features(A, num_shards=4),
+        ranking=(RankedPlan(plan=plan, cost=estimate_cost(A, plan)),),
+        probed=0)
+    _, _, ev = replan(A, mon, choice, num_shards=4, seed=0, cfg=cfg,
+                      request_index=0, program=prog)
+    assert ev.mode == "full"
+
+
 def test_monitor_batched_requests_count_columns():
     A = make_matrix("ford1", scale=0.05)
     eng = _engine(A)
