@@ -64,9 +64,16 @@ BENCH_PATH = os.path.normpath(
 def append_bench_entry(entry: dict, path: str | None = None) -> str:
     """Append one entry to the ``BENCH_emu.json`` trajectory (atomic write).
 
-    Corrupt/truncated files are treated as empty rather than fatal, so a
-    crashed previous run never blocks recording new numbers.
+    Corrupt/truncated *existing* files are treated as empty rather than
+    fatal, so a crashed previous run never blocks recording new numbers.
+    Recording nothing is fatal, though: an empty ``entry`` raises, and the
+    rewritten file is re-read to prove the append actually landed — a
+    bench run that "succeeds" while recording zero entries is a silent
+    data loss this helper refuses to allow.
     """
+    if not entry:
+        raise ValueError("refusing to record an empty bench entry — the "
+                         "bench produced no headline numbers")
     path = path or BENCH_PATH
     doc = {"entries": []}
     if os.path.exists(path):
@@ -78,12 +85,19 @@ def append_bench_entry(entry: dict, path: str | None = None) -> str:
                 doc = loaded
         except (OSError, ValueError):
             pass                 # corrupt/truncated file: start fresh
+    n_before = len(doc["entries"])
     doc["entries"].append(entry)
     tmp = f"{path}.tmp{os.getpid()}"
     with open(tmp, "w") as f:
         json.dump(doc, f, indent=2)
         f.write("\n")
     os.replace(tmp, path)
+    with open(path) as f:
+        written = json.load(f)
+    if len(written.get("entries", [])) != n_before + 1:
+        raise RuntimeError(f"bench entry did not land in {path}: "
+                           f"{n_before} entries before, "
+                           f"{len(written.get('entries', []))} after")
     return path
 
 

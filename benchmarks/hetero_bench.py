@@ -1,23 +1,33 @@
-"""Mixed-structure benchmark: per-shard heterogeneous program vs best
-global plan.
+"""Heterogeneous-program benchmarks: per-shard kernel selection vs the
+best uniform/non-split alternative, on two workloads.
 
-The matrix is ``data.matrices.mixed_structure`` — a dense FEM-style band
-(regular ~lane-width rows, ELL-friendly) glued to a short-row scattered
-sparse block with zipf row lengths (webbase-like, where the 128-lane
-ELL/HYB slab floor wastes >90% of its slots and the nonzero-balanced
-segmented format wins) — so under a contiguous row partition the two
-regimes land on *different shards*.  One global (kernel) choice must
-either pay the lane floor on the sparse shards (ell/hyb) or pay
-scan/scatter overhead on the regular band (seg); the per-shard autotuner
-pays ``sum_p min_k`` instead of ``min_k sum_p``.
+``--workload mixed`` (default): ``data.matrices.mixed_structure`` — a
+dense FEM-style band (regular ~lane-width rows, ELL-friendly) glued to a
+short-row scattered sparse block with zipf row lengths (webbase-like,
+where the 128-lane ELL/HYB slab floor wastes >90% of its slots and the
+nonzero-balanced segmented format wins) — so under a contiguous row
+partition the two regimes land on *different shards*.  One global
+(kernel) choice must either pay the lane floor on the sparse shards
+(ell/hyb) or pay scan/scatter overhead on the regular band (seg); the
+per-shard autotuner pays ``sum_p min_k`` instead of ``min_k sum_p``.
 
-Reported (and recorded in ``BENCH_emu.json`` via ``perf_probe --hetero``):
+``--workload powerlaw_tail``: ``data.matrices.powerlaw_tail`` — a
+handful of fully-dense *monster rows* over a uniform short-row
+background (the paper's §IV-D hot-spot distilled).  A nonzero-balanced
+partition hands a shard a couple of monster rows; the seg carry chain
+then serializes one carry per chunk of the longest row, and the
+split-nnz two-stage ``split`` family is the cure.  The headline is the
+kernel-slot term of the best split-using program vs the best *non-split*
+program (autotuned over the same grid minus ``split``) — the acceptance
+gate is >= 1.1x on the full run.
 
-* modeled total cycles of the best **global** (uniform-kernel) candidate
-  vs the best **per-shard** candidate — the acceptance gate is the
-  per-shard program strictly beating the best global plan;
+Reported (and recorded in ``BENCH_emu.json`` via ``perf_probe --hetero``
+/ ``perf_probe --split``):
+
+* modeled total cycles of the best baseline candidate vs the best
+  per-shard (mixed) / split-using (powerlaw_tail) candidate;
 * the kernel-execution-slot term alone (the axis the per-shard choice
-  actually moves), worst shard;
+  actually moves);
 * host wall-clock per served SpMV for both lowered programs through the
   numpy executor backend, for reference;
 * an oracle check: both programs reproduce ``csr_matvec``.
@@ -27,7 +37,10 @@ Usage::
     PYTHONPATH=src python -m benchmarks.hetero_bench              # full
     PYTHONPATH=src python -m benchmarks.hetero_bench --fast \\
         --budget-seconds 120                                      # CI smoke
+    PYTHONPATH=src python -m benchmarks.hetero_bench \\
+        --workload powerlaw_tail --fast --budget-seconds 120      # CI split
     PYTHONPATH=src python -m benchmarks.perf_probe --hetero       # + record
+    PYTHONPATH=src python -m benchmarks.perf_probe --split        # + record
 """
 from __future__ import annotations
 
@@ -37,10 +50,10 @@ import time
 
 import numpy as np
 
-from repro.core.plan import autotune
+from repro.core.plan import DEFAULT_PROBE, autotune
 from repro.core.program import execute, lower
 from repro.core.sparse_matrix import csr_matvec
-from repro.data.matrices import mixed_structure
+from repro.data.matrices import mixed_structure, powerlaw_tail
 
 
 def _plan_str(p) -> str:
@@ -62,15 +75,18 @@ def _host_us_per_spmv(prog, x, repeats: int = 10) -> float:
 
 
 def run_hetero_bench(*, M: int = 4096, nnz_per_row: int = 33,
-                     shards: int = 8, probe: int = 20, seed: int = 0,
-                     fast: bool = False) -> dict:
-    """Run the scenario; returns the headline dict (printed by main).
+                     shards: int = 8, probe: int | None = None,
+                     seed: int = 0, fast: bool = False) -> dict:
+    """Run the mixed-structure scenario; returns the headline dict.
 
-    ``probe=20`` probes *every* (reordering, layout, distribution) base —
+    ``probe=None`` defaults to :data:`repro.core.plan.DEFAULT_PROBE`.
+    The recorded full run (``perf_probe --hetero``) passes ``probe=20``
+    explicitly to probe *every* (reordering, layout, distribution) base —
     the structure-preserving bases this matrix rewards rank poorly on the
     analytic issue term (the dense band is locality-rich but
     load-imbalanced), so a small probe budget would never measure them.
     """
+    probe = DEFAULT_PROBE if probe is None else probe
     if fast:
         M, shards = 1024, 4
     A = mixed_structure(M, M * nnz_per_row, seed=seed)
@@ -137,12 +153,114 @@ def check(entry: dict) -> bool:
             entry["oracle_ok"])
 
 
+def _plan_kernels(plan, shards: int) -> tuple:
+    return plan.shard_kernels if plan.shard_kernels is not None \
+        else (plan.kernel,) * shards
+
+
+def run_split_bench(*, M: int = 8192, shards: int = 8, n_monster: int = 8,
+                    probe: int | None = None, seed: int = 0,
+                    fast: bool = False) -> dict:
+    """Run the power-law-tail (monster-row) scenario.
+
+    Autotunes the full kernel grid and, on the *same* ranking, compares
+    the best split-using candidate against the best candidate whose
+    kernels avoid ``split`` entirely, on the kernel-slot term (the axis
+    the split family moves; the shared Emu-visible terms cancel).  Full
+    scale puts a 16-chunk carry chain on each monster row (M=8192 dense
+    rows over 512-element chunks); ``fast`` shrinks to a 4-chunk span —
+    still split-selectable, smaller margin.
+    """
+    probe = DEFAULT_PROBE if probe is None else probe
+    if fast:
+        M, shards, n_monster = 2048, 4, 4
+    A = powerlaw_tail(M, 2 * n_monster * M, n_monster=n_monster, seed=seed)
+    choice = autotune(A, num_shards=shards, seed=seed, probe=probe)
+
+    with_split = [r for r in choice.ranking
+                  if "split" in _plan_kernels(r.plan, shards)]
+    no_split = [r for r in choice.ranking
+                if "split" not in _plan_kernels(r.plan, shards)]
+    best_split = min(with_split, key=lambda r: r.cost.padding_cycles) \
+        if with_split else None
+    best_ns = min(no_split, key=lambda r: r.cost.padding_cycles)
+
+    entry = {
+        "workload": "split/powerlaw_tail", "M": A.nrows, "nnz": A.nnz,
+        "shards": shards, "probe": probe, "n_monster": n_monster,
+        "chosen_plan": _plan_str(choice.plan),
+        "split_in_winner":
+            "split" in _plan_kernels(choice.plan, shards),
+        "best_nonsplit_plan": _plan_str(best_ns.plan),
+        "split_plan": None if best_split is None else
+        _plan_str(best_split.plan),
+        "split_kernels": None if best_split is None else
+        list(_plan_kernels(best_split.plan, shards)),
+    }
+    if best_split is None:
+        entry["model_kernel_cycles"] = {
+            "best_nonsplit": round(best_ns.cost.padding_cycles, 1),
+            "split": None, "speedup": 0.0}
+        entry["oracle_ok"] = False
+        return entry
+
+    entry["model_kernel_cycles"] = {
+        "best_nonsplit": round(best_ns.cost.padding_cycles, 1),
+        "split": round(best_split.cost.padding_cycles, 1),
+        "speedup": round(best_ns.cost.padding_cycles /
+                         max(best_split.cost.padding_cycles, 1e-12), 3)}
+    entry["model_total_cycles"] = {
+        "best_nonsplit": round(best_ns.cost.total, 1),
+        "split": round(best_split.cost.total, 1),
+        "speedup": round(best_ns.cost.total /
+                         max(best_split.cost.total, 1e-12), 3)}
+
+    prog_ns = lower(A, best_ns.plan)
+    prog_spl = lower(A, best_split.plan)
+    entry["split_counts"] = [
+        st.split.num_splits if st.split is not None else 1
+        for st in prog_spl.stages]
+    x = np.random.default_rng(seed).standard_normal(A.ncols)
+    ref = csr_matvec(A, x)
+    entry["oracle_ok"] = bool(
+        np.allclose(execute(prog_ns, x), ref, atol=1e-4, rtol=1e-5) and
+        np.allclose(execute(prog_spl, x), ref, atol=1e-4, rtol=1e-5))
+    entry["host_us_per_spmv"] = {
+        "best_nonsplit": round(_host_us_per_spmv(prog_ns, x), 1),
+        "split": round(_host_us_per_spmv(prog_spl, x), 1)}
+    return entry
+
+
+def check_split(entry: dict, *, fast: bool = False) -> bool:
+    """Acceptance gates for the powerlaw_tail workload: the autotuner
+    reaches ``split`` on its own, the best split-using program beats the
+    best non-split one on the kernel-slot term (>= 1.1x on the recorded
+    full run; a strict win suffices at CI-smoke scale, where the carry
+    chain is only 4 chunks), and both programs reproduce the oracle."""
+    bar = 1.0 if fast else 1.1
+    mk = entry.get("model_kernel_cycles", {})
+    return (entry.get("split_in_winner", False) and
+            mk.get("split") is not None and
+            (mk["speedup"] > bar if fast else mk["speedup"] >= bar) and
+            entry.get("oracle_ok", False))
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--m", type=int, default=4096, help="matrix dimension")
-    ap.add_argument("--nnz-per-row", type=int, default=33)
+    ap.add_argument("--workload", choices=("mixed", "powerlaw_tail"),
+                    default="mixed",
+                    help="mixed: per-shard vs best-global on "
+                         "mixed_structure; powerlaw_tail: split vs best "
+                         "non-split on monster rows")
+    ap.add_argument("--m", type=int, default=None, help="matrix dimension "
+                    "(default: per-workload)")
+    ap.add_argument("--nnz-per-row", type=int, default=33,
+                    help="mixed workload only")
     ap.add_argument("--shards", type=int, default=8)
-    ap.add_argument("--probe", type=int, default=20)
+    ap.add_argument("--probe", type=int, default=None,
+                    help="autotune probe budget (default: "
+                         "repro.core.plan.DEFAULT_PROBE; the recorded "
+                         "perf_probe runs pass a larger budget explicitly)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--fast", action="store_true",
                     help="CI smoke: smaller matrix, analytic-only ranking, "
@@ -155,18 +273,51 @@ def main() -> int:
     args = ap.parse_args()
 
     t0 = time.perf_counter()
-    entry = run_hetero_bench(M=args.m, nnz_per_row=args.nnz_per_row,
-                             shards=args.shards, probe=args.probe,
-                             seed=args.seed, fast=args.fast)
+    if args.workload == "powerlaw_tail":
+        kwargs = {} if args.m is None else {"M": args.m}
+        entry = run_split_bench(shards=args.shards, probe=args.probe,
+                                seed=args.seed, fast=args.fast, **kwargs)
+        ok = check_split(entry, fast=args.fast)
+    else:
+        entry = run_hetero_bench(M=args.m if args.m is not None else 4096,
+                                 nnz_per_row=args.nnz_per_row,
+                                 shards=args.shards, probe=args.probe,
+                                 seed=args.seed, fast=args.fast)
+        ok = check(entry)
     wall = time.perf_counter() - t0
     entry["wall_seconds"] = round(wall, 2)
-    ok = check(entry)
     if args.budget_seconds is not None and wall > args.budget_seconds:
         ok = False
         entry["budget_exceeded"] = True
 
     if args.json:
         print(json.dumps(entry, indent=2))
+    elif args.workload == "powerlaw_tail":
+        print(f"hetero bench: {entry['workload']} M={entry['M']} "
+              f"nnz={entry['nnz']} shards={entry['shards']}")
+        print(f"  chosen      : {entry['chosen_plan']} "
+              f"(split_in_winner={entry['split_in_winner']})")
+        print(f"  non-split   : {entry['best_nonsplit_plan']}")
+        print(f"  split       : {entry['split_plan']}")
+        mk = entry["model_kernel_cycles"]
+        bar = "> 1.0 (fast)" if args.fast else ">= 1.1"
+        print(f"  kernel term : {mk['best_nonsplit']} -> {mk['split']} "
+              f"cycles ({mk['speedup']}x, bar {bar})")
+        if "model_total_cycles" in entry:
+            mt = entry["model_total_cycles"]
+            print(f"  model total : {mt['best_nonsplit']} -> {mt['split']} "
+                  f"cycles ({mt['speedup']}x)")
+        if "split_counts" in entry:
+            print(f"  split counts: {entry['split_counts']} "
+                  f"(kernels {entry['split_kernels']})")
+        if "host_us_per_spmv" in entry:
+            h = entry["host_us_per_spmv"]
+            print(f"  host        : {h['best_nonsplit']} -> {h['split']} "
+                  f"us/SpMV (numpy executor; reference only)")
+        budget = f", wall {wall:.1f}s <= {args.budget_seconds:.0f}s" \
+            if args.budget_seconds is not None else f", wall {wall:.1f}s"
+        print(f"  -> {'PASS' if ok else 'FAIL'} "
+              f"(oracle_ok={entry['oracle_ok']}{budget})")
     else:
         print(f"hetero bench: {entry['workload']} M={entry['M']} "
               f"nnz={entry['nnz']} shards={entry['shards']}")

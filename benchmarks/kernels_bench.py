@@ -4,7 +4,7 @@ Reports us/call of the jnp oracle paths that the models actually execute."""
 import jax.numpy as jnp
 import numpy as np
 from repro.core.sparse_matrix import csr_from_coo, csr_to_bcsr, csr_to_ell
-from repro.data.matrices import powerlaw
+from repro.data.matrices import powerlaw, powerlaw_tail
 from repro.kernels import ops
 from .common import emit, us
 
@@ -47,6 +47,28 @@ def run():
     rows.append((f"seg_ref/powerlaw2048/nnz{P.nnz}", round(t, 1),
                  f"chunks={seg.num_chunks};pieces={seg.n_pieces};"
                  f"pad={seg.padding_ratio:.2f}"))
+    # Split-nnz (two-stage) family: the seg slab with each row's carry
+    # chain cut across num_splits partial accumulators.  Timed on the
+    # same power-law matrix and on a monster-row matrix (a handful of
+    # fully dense rows — the §IV-D hot spot the family exists for),
+    # oracle path and Pallas-interpret kernel path.
+    for name, Q in (("powerlaw2048", P),
+                    ("monster2048", powerlaw_tail(2048, 2 * 4 * 2048,
+                                                  n_monster=4, seed=0))):
+        xq = jnp.asarray(rng.standard_normal(Q.ncols), jnp.float32)
+        for ns in (2, 8):
+            spl = ops.split_from_csr(Q, ns)
+            t = us(lambda: ops.split_spmv(spl, xq).block_until_ready())
+            rows.append((f"split_ref/{name}/nnz{Q.nnz}/ns{spl.num_splits}",
+                         round(t, 1),
+                         f"chunks={spl.chunks_per_split};"
+                         f"pieces={spl.n_pieces};"
+                         f"pad={spl.padding_ratio:.2f}"))
+        spl = ops.split_from_csr(Q, 8)
+        t = us(lambda: ops.split_spmv(spl, xq, use_kernel=True,
+                                      interpret=True).block_until_ready())
+        rows.append((f"split_pallas/{name}/nnz{Q.nnz}/ns{spl.num_splits}",
+                     round(t, 1), "interpret=True"))
     emit(rows, ("name", "us_per_call", "derived"))
 
 

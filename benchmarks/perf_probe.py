@@ -25,6 +25,12 @@ Hetero mode runs the mixed-structure per-shard-program benchmark
 headline (model cycles + host serving wall-clock):
 
     PYTHONPATH=src python -m benchmarks.perf_probe --hetero
+
+Split mode runs the power-law-tail (monster-row) scenario of the same
+bench and records the split-vs-best-non-split kernel-slot headline
+(acceptance bar: >= 1.1x):
+
+    PYTHONPATH=src python -m benchmarks.perf_probe --split
 """
 from __future__ import annotations
 
@@ -166,7 +172,9 @@ def run_hetero_probe(out: str | None) -> int:
     analytic model, and reproduces the exact oracle).
     """
     from benchmarks.hetero_bench import check, run_hetero_bench
-    entry = run_hetero_bench()
+    # probe=20 measures every (reordering, layout, distribution) base; the
+    # recorded full run must not depend on the small default probe budget.
+    entry = run_hetero_bench(probe=20)
     ok = check(entry)
     path = append_bench_entry(entry, out)
     print(json.dumps(entry, indent=2))
@@ -174,6 +182,30 @@ def run_hetero_probe(out: str | None) -> int:
     print(f"# hetero: per-shard {entry.get('shard_kernels')} vs best global "
           f"{entry['best_global_plan']}; model speedup {mt['speedup']}x "
           f"(bar > 1.0) -> {'PASS' if ok else 'FAIL'}; recorded in {path}")
+    return 0 if ok else 1
+
+
+def run_split_probe(out: str | None) -> int:
+    """Record the split-SpMV (powerlaw_tail) headline in ``BENCH_emu.json``.
+
+    Runs the full monster-row scenario (see ``benchmarks/hetero_bench.py
+    --workload powerlaw_tail``) and appends its entry; exit status is the
+    bench's acceptance gate (the autotuner reaches ``split`` on its own,
+    the best split-using program beats the best non-split program by
+    >= 1.1x on the kernel-slot term, and both reproduce the oracle).
+    ``append_bench_entry`` verifies the entry actually landed on disk.
+    """
+    from benchmarks.hetero_bench import check_split, run_split_bench
+    entry = run_split_bench(probe=20)
+    ok = check_split(entry)
+    path = append_bench_entry(entry, out)
+    print(json.dumps(entry, indent=2))
+    mk = entry["model_kernel_cycles"]
+    print(f"# split: {entry.get('split_kernels')} "
+          f"(counts {entry.get('split_counts')}) vs best non-split "
+          f"{entry['best_nonsplit_plan']}; kernel-term speedup "
+          f"{mk['speedup']}x (bar >= 1.1) -> {'PASS' if ok else 'FAIL'}; "
+          f"recorded in {path}")
     return 0 if ok else 1
 
 
@@ -190,6 +222,10 @@ def main():
                     help="run the mixed-structure per-shard-program bench "
                          "and record headline numbers "
                          "(benchmarks/hetero_bench.py)")
+    ap.add_argument("--split", action="store_true",
+                    help="run the power-law-tail split-SpMV bench and "
+                         "record headline numbers (benchmarks/hetero_bench"
+                         ".py --workload powerlaw_tail)")
     ap.add_argument("--scale", type=float, default=1.0,
                     help="fig8 matrix scale for the vectorized timing")
     ap.add_argument("--ref-scale", type=float, default=0.02,
@@ -214,6 +250,8 @@ def main():
         sys.exit(run_drift_probe(args.out))
     if args.hetero:
         sys.exit(run_hetero_probe(args.out))
+    if args.split:
+        sys.exit(run_split_probe(args.out))
     if args.arch is None or args.shape is None:
         ap.error("arch and shape are required unless --emu is given")
 

@@ -31,6 +31,7 @@ ingested matrix at load time.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 from typing import Iterable, Sequence
 
@@ -47,10 +48,12 @@ from .sparse_matrix import CSRMatrix, ELL_LANE, ELL_SUBLANE, csr_from_coo, \
 from .spmv import PLAN_KERNELS, SpmvPlan
 from repro.kernels.ops import SEG_CHUNK
 
-__all__ = ["DEFAULT_PROBE", "KERNELS", "MatrixFeatures", "ShardFeatures",
+__all__ = ["DEFAULT_PROBE", "KERNELS", "SPLIT_CORES", "SPLIT_MIN_SPAN",
+           "MatrixFeatures", "ShardFeatures",
            "PlanCost", "RankedPlan", "PlanChoice", "extract_features",
            "extract_shard_features", "estimate_cost", "autotune",
-           "feature_key", "kernel_shard_costs", "select_shard_kernels"]
+           "feature_key", "kernel_shard_costs", "select_shard_kernels",
+           "split_meta"]
 
 #: Bases the autotuner re-ranks with the Emu timeline simulator when the
 #: caller does not pass ``probe``.  Probing is on by default since the
@@ -81,10 +84,62 @@ KERNELS = PLAN_KERNELS
 _W_SEG_SCAN = 2.0
 _W_SEG_PIECE = 16.0
 _W_OVF = 8.0
+#: Per-slot cost of the serialized cross-chunk carry chain: a row spanning
+#: ``span`` chunks accumulates ``span`` piece carries into one output row
+#: sequentially, so the seg fix-up's critical path grows with the longest
+#: row — the §IV-D monster-row hot-spot surviving inside the seg format.
+_W_SEG_CARRY = 4.0
+#: Per-partial-slot cost of the split stage-2 combine ((NS, R) reads).
+_W_SPLIT_COMBINE = 1.0
+
+#: Core count the split policy tries to keep busy — one Emu nodelet's
+#: hardware thread contexts (the ``get_cu_num`` analogue in aiter's
+#: ``get_meta_param``).
+SPLIT_CORES = EmuConfig().threads_per_nodelet
+#: Minimum longest-row chunk span before splitting pays: below this the
+#: carry chain is already short and stage 2 is pure overhead.
+SPLIT_MIN_SPAN = 4
 
 
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
+
+
+@functools.lru_cache(maxsize=4096)
+def split_meta(nnz: int, max_row_nnz: int, num_cores: int = SPLIT_CORES,
+               chunk: int = SEG_CHUNK) -> int:
+    """Split count NS for one shard (the ``get_meta_param`` analogue).
+
+    Driven by the shard's nnz stream and its longest row, exactly like
+    aiter's occupancy heuristic is driven by batch/head geometry and the
+    CU count: ``span = ceil(max_row_nnz / chunk)`` is the length of the
+    serialized carry chain the seg fix-up would pay.  Shards whose rows
+    all fit a few chunks (``span < SPLIT_MIN_SPAN``) keep NS=1 — stage 2
+    would be pure overhead.  Otherwise NS is chosen so that (a) every
+    core sees work even when the shard is one monster row (``NS >=
+    span``), (b) a shard holding *several* monster rows still cuts each
+    chain (``NS >= 2 * chunks / span`` keeps chunks-per-split at or
+    under span/2), capped by the chunk count and the core budget, and
+    floored to a power of two for even stage-2 tree reduction.  Cached:
+    the planner calls this per shard per candidate base.
+
+    >>> split_meta(100, 10)                    # short rows: no split
+    1
+    >>> split_meta(8192, 8192)                 # one monster row
+    16
+    >>> split_meta(3 * 8192, 8192) >= 16       # three monster rows
+    True
+    """
+    chunks = max((nnz + chunk - 1) // chunk, 1)
+    span = max((max_row_nnz + chunk - 1) // chunk, 1)
+    if span < SPLIT_MIN_SPAN or chunks < 2:
+        return 1
+    want = max(span, -(-2 * chunks // span))
+    ns = max(min(chunks, max(num_cores, 1), want), 1)
+    p = 1
+    while p * 2 <= ns:
+        p *= 2
+    return p
 
 
 @dataclasses.dataclass(frozen=True)
@@ -454,11 +509,24 @@ def kernel_shard_costs(A: CSRMatrix, part: Partition) -> dict:
       row inflates every row's width.
     * ``seg``   — ``_W_SEG_SCAN`` per chunk cell (the prefix scan touches
       each slot twice) plus ``_W_SEG_PIECE`` per piece (the serialized
-      carry fix-up scatter).  Immune to row skew, but pays per-row
-      bookkeeping — dense regular rows are cheaper in ELL.
+      carry fix-up scatter) plus ``_W_SEG_CARRY`` per slot of every
+      row-spanning carry: a row covering ``span_r`` chunks serializes
+      ``span_r - 1`` carries into one output row, and the charges *sum
+      over rows* — a shard holding eight monster rows pays eight chains,
+      not the single longest one (charging only ``max_r span_r`` was the
+      monster-row under-count this model used to make).  Immune to
+      row-width padding, but pays per-row bookkeeping — dense regular
+      rows are cheaper in ELL.
     * ``hyb``   — the p95-capped slab (:func:`~repro.core.sparse_matrix.
       hyb_cap_width`) plus ``_W_OVF`` per spilled entry.  Wins when a thin
       tail of hub rows would otherwise blow up the ELL width.
+    * ``split`` — the seg scan/piece terms with every carry chain cut by
+      the policy split count NS (:func:`split_meta`): each row's chain
+      shrinks to ``ceil(span_r / NS)`` because each split scatters into
+      its own partial accumulator, at the price of ``_W_SPLIT_COMBINE``
+      per stage-2 partial slot (NS x padded rows).  Strictly worse than seg
+      on short-row shards (NS=1 still pays the combine), strictly better
+      once one row spans many chunks — exactly the §IV-D trade.
 
     ``select_shard_kernels`` takes the per-shard argmin of this table and
     the plan cost model sums the selected column over shards
@@ -479,15 +547,23 @@ def kernel_shard_costs(A: CSRMatrix, part: Partition) -> dict:
         rows = per_row[r0:r1]
         nnz_p = int(A.row_ptr[r1] - A.row_ptr[r0])
         rows_pad = _round_up(max(r1 - r0, 1), ELL_SUBLANE)
-        W = _round_up(int(rows.max()) if r1 > r0 else 1, ELL_LANE)
+        max_row = int(rows.max()) if r1 > r0 else 0
+        W = _round_up(max(max_row, 1), ELL_LANE)
         out["ell"][p] = rows_pad * W
         chunks = max((nnz_p + SEG_CHUNK - 1) // SEG_CHUNK, 1)
         pieces = int((rows > 0).sum()) + chunks
-        out["seg"][p] = _W_SEG_SCAN * chunks * SEG_CHUNK + \
-            _W_SEG_PIECE * pieces
+        spans = -(-rows // SEG_CHUNK)          # chunks each row spans
+        carries = int(np.maximum(spans - 1, 0).sum())
+        scan = _W_SEG_SCAN * chunks * SEG_CHUNK + _W_SEG_PIECE * pieces
+        out["seg"][p] = scan + _W_SEG_CARRY * carries * SEG_CHUNK
         Wc = hyb_cap_width(rows) if r1 > r0 else ELL_LANE
         ovf = int(np.maximum(rows - Wc, 0).sum())
         out["hyb"][p] = rows_pad * Wc + _W_OVF * ovf
+        ns = split_meta(nnz_p, max_row)
+        carries_s = int(np.maximum(-(-spans // ns) - 1, 0).sum())
+        out["split"][p] = scan + \
+            _W_SEG_CARRY * carries_s * SEG_CHUNK + \
+            _W_SPLIT_COMBINE * ns * rows_pad
     return out
 
 
@@ -507,7 +583,8 @@ def select_shard_kernels(A: CSRMatrix, part: Partition,
     >>> from repro.data.matrices import powerlaw
     >>> A = powerlaw(1024, 40000, seed=0)
     >>> sel = select_shard_kernels(A, make_partition(A, 4, "row"))
-    >>> len(sel), set(sel) <= {"ell", "seg", "hyb"}
+    >>> from repro.core.plan import KERNELS
+    >>> len(sel), set(sel) <= set(KERNELS)
     (4, True)
     """
     costs = kernel_shard_costs(A, part) if costs is None else costs
@@ -693,7 +770,8 @@ def autotune(csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
         Seed threaded into the stochastic reorderings (default 0).
     layouts, distributions, reorderings, kernels, exchanges : sequence of str
         Candidate axes; defaults are the full paper grid (kernels now
-        include the HYB capped-ELL + overflow format).
+        include the HYB capped-ELL + overflow format and the split-nnz
+        two-stage ``split`` family).
     probe : int, optional
         Number of distinct bases to simulate; defaults to
         :data:`DEFAULT_PROBE` (0 = analytic only).  The probe runs the
@@ -731,7 +809,7 @@ def autotune(csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
     4
     >>> choice.plan.distribution      # skewed rows -> nonzero split wins
     'nonzero'
-    >>> len(choice.ranking) >= 2 * 2 * 5 * 3 * 2   # + per-shard candidates
+    >>> len(choice.ranking) >= 2 * 2 * 5 * 4 * 2   # + per-shard candidates
     True
     >>> len(choice.shard_features)    # winner's per-shard audit trail
     4

@@ -12,8 +12,9 @@ makes that selectable:
   :class:`~repro.core.spmv.SpmvPlan` into an :class:`SpmvProgram`: the
   reordered matrix, partition, vector layouts, exact traffic accounting,
   and one :class:`ShardStage` per shard.  Each stage independently holds
-  an ``ell`` slab, a ``seg`` chunk stream, or a ``hyb`` capped-ELL + COO
-  overflow pair (``plan.shard_kernels``); the exchange prologue
+  an ``ell`` slab, a ``seg`` chunk stream, a ``hyb`` capped-ELL + COO
+  overflow pair, or a ``split`` two-stage split-nnz slab
+  (``plan.shard_kernels``); the exchange prologue
   (all-gather vs halo all-to-all) is part of the program, not of any
   particular executor.
 * :func:`relower` — rebuilds **only** the stages whose kernel changed
@@ -51,8 +52,9 @@ from .layout import VectorLayout, make_layout
 from .migration import TrafficReport, count_migrations, remote_access_matrix
 from .partition import Partition, make_partition
 from .reorder import reordering_permutation
+from .plan import split_meta
 from .sparse_matrix import CSRMatrix, ELL_LANE, ELL_SUBLANE, EllMatrix, \
-    SegMatrix, csr_to_ell
+    SegMatrix, SplitMatrix, csr_to_ell
 from .spmv import PLAN_KERNELS, SpmvPlan
 from repro.kernels import ops as kops
 
@@ -73,24 +75,50 @@ class ShardStage:
     ``kernel`` selects the format actually stored: ``"ell"`` (uncapped
     padded slab) and ``"hyb"`` (p95-capped slab + COO overflow, see
     :func:`~repro.kernels.ops.hyb_from_csr`) populate ``ell``; ``"seg"``
-    populates ``seg``.  ``rows``/``row_offset`` locate the shard's row
-    range in the program's (reordered) matrix.
+    populates ``seg``; ``"split"`` populates ``split`` (the split-nnz
+    two-stage slab, NS partial accumulators + combine).
+    ``rows``/``row_offset`` locate the shard's row range in the
+    program's (reordered) matrix.
     """
 
     shard: int
-    kernel: str                    # "ell" | "seg" | "hyb"
+    kernel: str                    # "ell" | "seg" | "hyb" | "split"
     rows: int                      # true row count
     row_offset: int                # absolute first row
     nnz: int
     ell: EllMatrix | None = None   # kernel in ("ell", "hyb")
     seg: SegMatrix | None = None   # kernel == "seg"
+    split: SplitMatrix | None = None   # kernel == "split"
+
+
+def _shard_max_row_nnz(A: CSRMatrix, part: Partition, p: int) -> int:
+    r0, r1 = int(part.starts[p]), int(part.starts[p + 1])
+    if r1 <= r0:
+        return 0
+    return int((A.row_ptr[r0 + 1: r1 + 1] - A.row_ptr[r0: r1]).max())
+
+
+def _resolved_split_count(A: CSRMatrix, part: Partition, p: int,
+                          requested: int) -> int:
+    """The split count shard p actually lowers with: the plan's request
+    (or the :func:`~repro.core.plan.split_meta` policy when the request
+    is 0/absent), clamped to the shard's chunk count exactly as
+    :func:`~repro.kernels.ops.split_from_csr` clamps it — so
+    :func:`relower` can compare effective counts, not raw requests."""
+    r0, r1 = int(part.starts[p]), int(part.starts[p + 1])
+    nnz_p = int(A.row_ptr[r1] - A.row_ptr[r0])
+    L = ((kops.SEG_CHUNK + ELL_LANE - 1) // ELL_LANE) * ELL_LANE
+    C = max(-(-nnz_p // L), 1)
+    ns = requested if requested > 0 else \
+        split_meta(nnz_p, _shard_max_row_nnz(A, part, p))
+    return max(1, min(int(ns), C))
 
 
 def _build_stage(A: CSRMatrix, part: Partition, p: int,
-                 kernel: str) -> ShardStage:
+                 kernel: str, split_count: int = 0) -> ShardStage:
     r0, r1 = int(part.starts[p]), int(part.starts[p + 1])
     sub = part.shard_csr(A, p)
-    ell = seg = None
+    ell = seg = split = None
     if kernel == "ell":
         ell = csr_to_ell(sub)
         if ell.overflow_vals.size:
@@ -99,11 +127,14 @@ def _build_stage(A: CSRMatrix, part: Partition, p: int,
         ell = kops.hyb_from_csr(sub)
     elif kernel == "seg":
         seg = kops.seg_from_csr(sub)
+    elif kernel == "split":
+        ns = _resolved_split_count(A, part, p, split_count)
+        split = kops.split_from_csr(sub, ns)
     else:
         raise ValueError(f"unknown shard kernel {kernel!r}; expected one of "
                          f"{PROGRAM_KERNELS}")
     return ShardStage(shard=p, kernel=kernel, rows=r1 - r0, row_offset=r0,
-                      nnz=sub.nnz, ell=ell, seg=seg)
+                      nnz=sub.nnz, ell=ell, seg=seg, split=split)
 
 
 @dataclasses.dataclass
@@ -254,7 +285,10 @@ def lower(csr: CSRMatrix, plan: SpmvPlan) -> SpmvProgram:
     migration accounting are computed once here; each shard then gets the
     stage its (per-shard) kernel calls for.  ``plan.shard_kernels=None``
     lowers the uniform program (every stage uses ``plan.kernel``) — which
-    is also how pre-per-shard plans deserialize from legacy JSON.
+    is also how pre-per-shard plans deserialize from legacy JSON.  For
+    ``split`` stages the split count comes from ``plan.split_counts`` (0
+    or ``None`` = ask :func:`~repro.core.plan.split_meta`), clamped to
+    the shard's chunk count.
     """
     if csr.nrows != csr.ncols:
         raise ValueError("paper applies symmetric reorderings to square "
@@ -269,7 +303,8 @@ def lower(csr: CSRMatrix, plan: SpmvPlan) -> SpmvProgram:
     x_layout = make_layout(plan.layout, A.ncols, plan.num_shards)
     b_layout = make_layout(plan.layout, A.nrows, plan.num_shards)
     kernels = plan.resolved_shard_kernels()
-    stages = tuple(_build_stage(A, part, p, kernels[p])
+    split_counts = plan.resolved_split_counts()
+    stages = tuple(_build_stage(A, part, p, kernels[p], split_counts[p])
                    for p in range(plan.num_shards))
     return SpmvProgram(
         plan=plan, matrix=A, partition=part, x_layout=x_layout,
@@ -286,7 +321,8 @@ _BASE_FIELDS = ("layout", "distribution", "reordering", "exchange",
 
 
 def relower(program: SpmvProgram, new_plan: SpmvPlan) -> SpmvProgram:
-    """Re-lower only the stages whose kernel changed (same base).
+    """Re-lower only the stages whose kernel (or effective split count)
+    changed, keeping the same base.
 
     The base (layout / distribution / reordering / exchange / shards /
     seed) must match the incumbent plan — everything structural (matrix,
@@ -305,9 +341,24 @@ def relower(program: SpmvProgram, new_plan: SpmvPlan) -> SpmvProgram:
                 f"{getattr(new_plan, f)!r}) — use lower()")
     old_k = old_plan.resolved_shard_kernels()
     new_k = new_plan.resolved_shard_kernels()
+    new_sc = new_plan.resolved_split_counts()
+
+    def unchanged(p: int) -> bool:
+        if new_k[p] != old_k[p]:
+            return False
+        if new_k[p] != "split":
+            return True
+        # split stages also share when the *effective* (clamped/policy)
+        # split count is unchanged — a different request that clamps to
+        # the same NS must not trigger a rebuild.
+        want = _resolved_split_count(program.matrix, program.partition, p,
+                                     new_sc[p])
+        return program.stages[p].split.num_splits == want
+
     stages = tuple(
-        program.stages[p] if new_k[p] == old_k[p]
-        else _build_stage(program.matrix, program.partition, p, new_k[p])
+        program.stages[p] if unchanged(p)
+        else _build_stage(program.matrix, program.partition, p, new_k[p],
+                          new_sc[p])
         for p in range(new_plan.num_shards))
     return dataclasses.replace(program, plan=new_plan, stages=stages)
 
@@ -363,6 +414,15 @@ def _execute_numpy_block(program: SpmvProgram, x: np.ndarray) -> np.ndarray:
             for b in range(B):            # padded slots: row 0, val 0
                 np.add.at(yp[b], seg.rows, contrib[b])
             y[:, o:o + r] = yp
+        elif st.kernel == "split":
+            spl = st.split                # two-stage: partials, then combine
+            contrib = spl.vals.astype(np.float64) * x_pad[:, spl.cols]
+            s_ix = np.broadcast_to(
+                np.arange(spl.num_splits)[:, None, None], spl.rows.shape)
+            partial = np.zeros((B, spl.num_splits, r))
+            for b in range(B):            # padded slots: row 0, val 0
+                np.add.at(partial[b], (s_ix, spl.rows), contrib[b])
+            y[:, o:o + r] = partial.sum(axis=1)
         else:                             # "ell" / "hyb"
             e = st.ell
             slab = e.data.astype(np.float64) * x_pad[:, e.cols]
@@ -439,11 +499,14 @@ def _device_operands(program: SpmvProgram) -> dict:
     """Stack every stage into the common-shape operand set of the one
     shard_map program (cached on the program).
 
-    All three format payloads exist for every shard (zeros where unused)
+    Every format payload exists for every shard (zeros where unused)
     so the per-shard ``lax.switch`` can trace each branch with uniform
-    shapes; ``kid`` selects the live one.  With ``exchange="halo"`` every
-    column-id operand is pre-remapped into the augmented
-    ``[x_local ++ recv]`` buffer.
+    shapes; ``kid`` selects the live one.  Split stages flatten their
+    (NS, Cs, L) slab into the shared seg (C, L) operand — the split
+    structure travels in the piece table, widened to 5 columns
+    [flat_chunk, lo, hi, row, split] (padded rows [0, 1, 0, 0, 0] are an
+    exact zero).  With ``exchange="halo"`` every column-id operand is
+    pre-remapped into the augmented ``[x_local ++ recv]`` buffer.
     """
     cached = getattr(program, "_device_ops_cache", None)
     if cached is not None:
@@ -470,11 +533,20 @@ def _device_operands(program: SpmvProgram) -> dict:
     O = max((e.overflow_vals.size for e in ells), default=0)
     O = max(O, 1)
     segs = [st.seg for st in stages if st.seg is not None]
-    L = segs[0].chunk if segs else kops.SEG_CHUNK
-    if segs and any(s.chunk != L for s in segs):
-        raise AssertionError("seg stages must share one chunk size")
-    C = max((s.num_chunks for s in segs), default=ELL_SUBLANE)
-    Pp = max((s.n_pieces for s in segs), default=0)
+    spls = [st.split for st in stages if st.split is not None]
+    slabs = segs + spls
+    L = slabs[0].chunk if slabs else kops.SEG_CHUNK
+    if slabs and any(s.chunk != L for s in slabs):
+        raise AssertionError("seg/split stages must share one chunk size")
+    # split slabs flatten to ns * Cs chunks; round the shared chunk count
+    # up to the sublane so the Pallas scan's tiling always divides it.
+    C = max(max((s.num_chunks for s in segs), default=ELL_SUBLANE),
+            max((s.num_splits * s.chunks_per_split for s in spls),
+                default=ELL_SUBLANE))
+    C = _round_up(C, ELL_SUBLANE)
+    NS = max((s.num_splits for s in spls), default=1)
+    Pp = max(max((s.n_pieces for s in segs), default=0),
+             max((s.n_pieces for s in spls), default=0))
     Pp = max(Pp, 1)
 
     kid = np.zeros(S, dtype=np.int32)
@@ -486,8 +558,8 @@ def _device_operands(program: SpmvProgram) -> dict:
     seg_vals = np.zeros((S, C, L), dtype=np.float32)
     seg_cols = np.zeros((S, C, L), dtype=np.int32)
     seg_rows = np.zeros((S, C, L), dtype=np.int32)
-    seg_pieces = np.zeros((S, Pp, 4), dtype=np.int32)
-    seg_pieces[:, :, 1] = 1               # (lo=1, hi=0, row=0) -> exact zero
+    seg_pieces = np.zeros((S, Pp, 5), dtype=np.int32)
+    seg_pieces[:, :, 1] = 1           # (lo=1, hi=0, row=0, split=0) -> zero
 
     for p, st in enumerate(stages):
         kid[p] = PROGRAM_KERNELS.index(st.kernel)
@@ -511,10 +583,24 @@ def _device_operands(program: SpmvProgram) -> dict:
             seg_pieces[p, :n, 1] = s.piece_lo
             seg_pieces[p, :n, 2] = s.piece_hi
             seg_pieces[p, :n, 3] = s.piece_row
+        if st.split is not None:
+            s = st.split
+            ns, Cs = s.num_splits, s.chunks_per_split
+            fv = s.vals.reshape(ns * Cs, L)
+            seg_vals[p, : ns * Cs] = fv
+            seg_cols[p, : ns * Cs] = remap(s.cols.reshape(ns * Cs, L), fv, p)
+            seg_rows[p, : ns * Cs] = s.rows.reshape(ns * Cs, L)
+            n = s.n_pieces
+            seg_pieces[p, :n, 0] = s.piece_split * Cs + s.piece_chunk
+            seg_pieces[p, :n, 1] = s.piece_lo
+            seg_pieces[p, :n, 2] = s.piece_hi
+            seg_pieces[p, :n, 3] = s.piece_row
+            seg_pieces[p, :n, 4] = s.piece_split
     cached = dict(kid=kid, ell_data=ell_data, ell_cols=ell_cols,
                   ovf_rows=ovf_rows, ovf_cols=ovf_cols, ovf_vals=ovf_vals,
                   seg_vals=seg_vals, seg_cols=seg_cols, seg_rows=seg_rows,
-                  seg_pieces=seg_pieces, send_idx=send_idx, R=R, halo_H=H)
+                  seg_pieces=seg_pieces, send_idx=send_idx, R=R, halo_H=H,
+                  NS=NS)
     program._device_ops_cache = cached
     return cached
 
@@ -538,8 +624,8 @@ def make_program_spmv_fn(program: SpmvProgram, mesh, axis: str = "model", *,
     ``rows_per_shard``, or use :func:`gather_b`).  The exchange prologue
     follows ``plan.exchange`` (all-gather of x vs halo all-to-all of
     exactly the needed entries), and each shard dispatches to its stage's
-    kernel (``ell`` / ``seg`` / ``hyb``) through a ``lax.switch`` — one
-    SPMD program, heterogeneous per-shard execution.
+    kernel (``ell`` / ``seg`` / ``hyb`` / ``split``) through a
+    ``lax.switch`` — one SPMD program, heterogeneous per-shard execution.
 
     ``use_kernel=True`` runs the Pallas kernels (``interpret=True`` on
     CPU); the default runs the pure-jnp oracles, same as the old
@@ -553,6 +639,7 @@ def make_program_spmv_fn(program: SpmvProgram, mesh, axis: str = "model", *,
 
     ops = _device_operands(program)
     R = ops["R"]
+    NS = ops["NS"]
     halo = program.plan.exchange == "halo"
     kind = program.x_layout.kind
     if use_kernel:
@@ -596,8 +683,13 @@ def make_program_spmv_fn(program: SpmvProgram, mesh, axis: str = "model", *,
             v = oval[0][:, None] if xs.ndim == 2 else oval[0]
             return y.at[orow[0]].add(v * xs)
 
-        y = jax.lax.switch(kid[0], (ell_branch, seg_branch, hyb_branch),
-                           None)
+        def split_branch(_):
+            return kops.split_flat_spmv(
+                sv[0], sc[0], sr[0], sp[0], xg, num_rows=R, num_splits=NS,
+                use_kernel=use_kernel, interpret=interpret)
+
+        y = jax.lax.switch(kid[0], (ell_branch, seg_branch, hyb_branch,
+                                    split_branch), None)
         return y[None]
 
     n_ops = len(_OPERAND_KEYS)

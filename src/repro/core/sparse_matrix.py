@@ -31,6 +31,7 @@ __all__ = [
     "EllMatrix",
     "BcsrMatrix",
     "SegMatrix",
+    "SplitMatrix",
     "csr_from_coo",
     "csr_matvec",
     "csr_to_dense",
@@ -180,6 +181,48 @@ class SegMatrix:
     @property
     def padding_ratio(self) -> float:
         slots = self.vals.shape[0] * self.vals.shape[1]
+        return 1.0 - self.nnz / max(slots, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitMatrix:
+    """Split-nnz two-stage segmented format (split-K SpMV).
+
+    A SegMatrix slab whose chunk axis is further cut into ``num_splits``
+    equal groups: vals/cols/rows are (NS, Cs, L) so stage 1 can fill a
+    (NS, Cs) grid even when the shard is a single monster row.  Stage 1
+    scatters each split's piece contributions into a *partial* row-sum
+    buffer (NS, rows); stage 2 is a tiny combine reducing over the split
+    axis — the aiter split-K decode shape (partial accumulators per
+    split + cheap second stage).  Pieces never cross a split boundary:
+    they are the SegMatrix pieces with the owning chunk re-indexed as
+    (piece_split, piece_chunk-within-split).
+    """
+
+    shape: Tuple[int, int]
+    chunk: int                 # L, elements per chunk (multiple of ``lane``)
+    num_splits: int            # NS
+    vals: np.ndarray           # (NS, Cs, L) float32
+    cols: np.ndarray           # (NS, Cs, L) int32
+    rows: np.ndarray           # (NS, Cs, L) int32 row id per slot (0 on pad)
+    piece_split: np.ndarray    # (n_pieces,) int32 owning split
+    piece_chunk: np.ndarray    # (n_pieces,) int32 chunk *within* its split
+    piece_lo: np.ndarray       # (n_pieces,) int32 first in-chunk offset
+    piece_hi: np.ndarray       # (n_pieces,) int32 last in-chunk offset
+    piece_row: np.ndarray      # (n_pieces,) int32 destination row
+    nnz: int
+
+    @property
+    def chunks_per_split(self) -> int:
+        return int(self.vals.shape[1])
+
+    @property
+    def n_pieces(self) -> int:
+        return int(self.piece_row.shape[0])
+
+    @property
+    def padding_ratio(self) -> float:
+        slots = self.vals.shape[0] * self.vals.shape[1] * self.vals.shape[2]
         return 1.0 - self.nnz / max(slots, 1)
 
 

@@ -57,7 +57,7 @@ __all__ = ["SpmvPlan", "DistributedSpmv", "build_distributed",
 #: (selector/majority order) and ``program.PROGRAM_KERNELS`` (the
 #: ``lax.switch`` branch ids) are aliases of this tuple, so the three
 #: layers cannot drift.
-PLAN_KERNELS = ("ell", "seg", "hyb")
+PLAN_KERNELS = ("ell", "seg", "hyb", "split")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,26 +70,33 @@ class SpmvPlan:
     work on one device the way it converges threads on one nodelet in the
     paper's §IV-D.  ``kernel`` picks the per-shard device format:
     ``"ell"`` (row-tiled padded slabs), ``"seg"`` (nonzero-balanced
-    segmented chunks whose *grid* is load-balance-aware too), or ``"hyb"``
-    (p95-capped ELL + COO overflow tail for skew-tolerant padding).
+    segmented chunks whose *grid* is load-balance-aware too), ``"hyb"``
+    (p95-capped ELL + COO overflow tail for skew-tolerant padding), or
+    ``"split"`` (split-nnz two-stage split-K: the seg chunk grid cut into
+    NS partial accumulators plus a tiny combine — the monster-row cure).
 
     ``shard_kernels`` (optional) overrides the kernel **per shard** — one
-    entry per shard, each in ``("ell", "seg", "hyb")`` — producing the
+    entry per shard, each in :data:`PLAN_KERNELS` — producing the
     heterogeneous programs the per-shard autotuner emits for
     mixed-structure matrices.  ``None`` (the default, and what legacy
     JSON without the field deserializes to) means the uniform program:
-    every shard uses ``kernel``.  Plans remain frozen, hashable and
-    JSON-round-trippable either way.
+    every shard uses ``kernel``.  ``split_counts`` (optional) pins the
+    per-shard split count NS for ``split`` shards — one entry per shard,
+    ignored (must be 1 or None-like) on non-split shards; ``None`` means
+    the lowering asks ``plan.split_meta`` (the occupancy-driven
+    ``get_meta_param`` analogue) per shard.  Plans remain frozen,
+    hashable and JSON-round-trippable either way.
     """
 
     layout: Literal["block", "cyclic"] = "block"
     distribution: Literal["row", "nonzero", "nnz"] = "nonzero"
     reordering: Literal["none", "random", "bfs", "metis", "degree"] = "none"
     exchange: Literal["allgather", "halo"] = "halo"
-    kernel: Literal["ell", "seg", "hyb"] = "ell"
+    kernel: Literal["ell", "seg", "hyb", "split"] = "ell"
     num_shards: int = 8
     seed: int = 0
     shard_kernels: tuple | None = None
+    split_counts: tuple | None = None
 
     def __post_init__(self):
         if self.shard_kernels is not None:
@@ -99,6 +106,11 @@ class SpmvPlan:
                 raise ValueError(f"unknown shard kernel(s) {bad!r}; expected "
                                  f"entries from {PLAN_KERNELS}")
             object.__setattr__(self, "shard_kernels", sk)
+        if self.split_counts is not None:
+            sc = tuple(int(c) for c in self.split_counts)
+            if any(c < 1 for c in sc):
+                raise ValueError(f"split_counts must be >= 1, got {sc!r}")
+            object.__setattr__(self, "split_counts", sc)
 
     def resolved_shard_kernels(self) -> tuple:
         """The per-shard kernel tuple this plan lowers to (length S)."""
@@ -110,19 +122,34 @@ class SpmvPlan:
                 f"num_shards={self.num_shards}")
         return self.shard_kernels
 
+    def resolved_split_counts(self) -> tuple:
+        """Per-shard split-count requests (length S; 0 = let the policy
+        decide).  Entries only matter for shards lowered as ``split``."""
+        if self.split_counts is None:
+            return (0,) * self.num_shards
+        if len(self.split_counts) != self.num_shards:
+            raise ValueError(
+                f"split_counts has {len(self.split_counts)} entries but "
+                f"num_shards={self.num_shards}")
+        return self.split_counts
+
     def retarget(self, num_shards: int) -> "SpmvPlan":
         """Re-target to a different shard count.
 
-        Per-shard kernel tuples are only meaningful for the shard count
-        they were tuned on, so a mismatched ``shard_kernels`` is dropped
-        (the plan falls back to its uniform ``kernel``) instead of
-        producing an unlowerable plan.
+        Per-shard kernel/split tuples are only meaningful for the shard
+        count they were tuned on, so a mismatched ``shard_kernels`` (or
+        ``split_counts``) is dropped (the plan falls back to its uniform
+        ``kernel`` / the split policy) instead of producing an
+        unlowerable plan.
         """
         sk = self.shard_kernels
         if sk is not None and len(sk) != num_shards:
             sk = None
+        sc = self.split_counts
+        if sc is not None and len(sc) != num_shards:
+            sc = None
         return dataclasses.replace(self, num_shards=num_shards,
-                                   shard_kernels=sk)
+                                   shard_kernels=sk, split_counts=sc)
 
     @classmethod
     def auto(cls, csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,

@@ -26,7 +26,7 @@ import numpy as np
 from repro.core.sparse_matrix import CSRMatrix, csr_from_coo
 
 __all__ = ["PAPER_SUITE", "make_matrix", "banded", "arrow_fem", "powerlaw",
-           "rmat", "dense_blocks", "mixed_structure"]
+           "rmat", "dense_blocks", "mixed_structure", "powerlaw_tail"]
 
 
 def _finish(rows, cols, vals, M, symmetric: bool) -> CSRMatrix:
@@ -199,6 +199,36 @@ def mixed_structure(M: int, nnz: int, *, band_frac: float = 0.2,
     cols = np.concatenate([c1, c2, rng.integers(0, M, n_cp),
                            np.arange(M)])
     vals = np.concatenate([v1, v2, rng.standard_normal(n_cp), np.ones(M)])
+    return csr_from_coo(rows, cols, vals, (M, M))
+
+
+def powerlaw_tail(M: int, nnz: int, *, n_monster: int = 8,
+                  monster_frac: float = 0.5, seed: int = 0) -> CSRMatrix:
+    """Power-law-tail matrix: a handful of *monster rows* ⊕ a uniform
+    short-row background — the paper's §IV-D hot-spot distilled.
+
+    Rows [0, n_monster) are fully dense (distinct columns across the
+    whole width, so duplicate-summing cannot thin them) and together hold
+    ~``monster_frac`` of the nnz budget; the remaining rows carry a
+    uniform ~``(1-monster_frac)*nnz/(M-n_monster)`` nnz each.  Under a
+    nonzero-balanced partition a shard ends up owning only a couple of
+    monster rows — the degenerate case where the seg carry chain
+    serializes and the split-nnz two-stage kernel is the cure
+    (``benchmarks/hetero_bench.py --workload powerlaw_tail``).
+    """
+    rng = np.random.default_rng(seed)
+    n_monster = max(min(n_monster, M // 4), 1)
+    r1 = np.repeat(np.arange(n_monster, dtype=np.int64), M)
+    c1 = np.tile(np.arange(M, dtype=np.int64), n_monster)
+    v1 = rng.standard_normal(r1.shape[0])
+    n_sp = max(int(nnz * (1.0 - monster_frac)), M)
+    k = max(n_sp // max(M - n_monster, 1), 1)
+    r2 = np.repeat(np.arange(n_monster, M, dtype=np.int64), k)
+    c2 = rng.integers(0, M, r2.shape[0])
+    v2 = rng.standard_normal(r2.shape[0])
+    rows = np.concatenate([r1, r2, np.arange(M)])
+    cols = np.concatenate([c1, c2, np.arange(M)])
+    vals = np.concatenate([v1, v2, np.ones(M)])
     return csr_from_coo(rows, cols, vals, (M, M))
 
 

@@ -1,7 +1,7 @@
 """Pallas SpMV kernels + pure-jnp oracles (``ref.py``) + jit'd wrappers
 (``ops.py``).
 
-Three kernel families, one per sparse format/work-distribution choice:
+Four kernel families, one per sparse format/work-distribution choice:
 
 * **ELL** (``spmv_ell.py``) — row-tiled padded-ELL SpMV (+ COO overflow
   tail = HYB via :func:`hyb_spmv`).  Grid is shape-aware: (rows, width)
@@ -14,6 +14,11 @@ Three kernel families, one per sparse format/work-distribution choice:
   assembles rows.  Grid is load-balance-aware: every step owns the same
   number of non-zeros regardless of row skew (the TPU analogue of the
   paper's nonzero work distribution, §III-C).
+* **Split** (``spmv_split.py``) — split-nnz *two-stage* SpMV (split-K):
+  the seg chunk grid is further cut into NS splits, stage 1 fills a 2-D
+  (split, chunk) grid of partial accumulators, stage 2 is a tiny
+  split-axis combine.  Cures the paper's §IV-D monster-row hot-spot at
+  *shard* granularity — a one-row shard still fills the whole grid.
 
 Every kernel has the same contract: pure-jnp oracle as the default
 execution path, ``use_kernel=True`` for the Pallas path (TPU), and
@@ -44,10 +49,21 @@ The segmented path built straight from a CSR matrix:
 >>> y = np.asarray(seg_spmv(seg, np.array([1.0, 2.0], np.float32)))
 >>> np.allclose(y, csr_to_dense(A) @ np.array([1.0, 2.0]))
 True
+
+The split-K path from the same matrix (two splits over the chunk grid):
+
+>>> from repro.kernels import split_from_csr, split_spmv
+>>> spl = split_from_csr(A, 2, chunk=128)
+>>> y2 = np.asarray(split_spmv(spl, np.array([1.0, 2.0], np.float32)))
+>>> np.allclose(y2, y)
+True
 """
 from .ops import (bell_from_bcsr, bell_spmm, bell_spmv, ell_spmv,
                   ell_spmv_ref, hyb_spmv, seg_from_csr, seg_spmv,
-                  seg_spmv_ref)
+                  seg_spmv_ref, split_flat_spmv, split_from_csr, split_spmv,
+                  split_spmv_ref)
 
 __all__ = ["ell_spmv", "ell_spmv_ref", "hyb_spmv", "bell_spmv", "bell_spmm",
-           "bell_from_bcsr", "seg_spmv", "seg_spmv_ref", "seg_from_csr"]
+           "bell_from_bcsr", "seg_spmv", "seg_spmv_ref", "seg_from_csr",
+           "split_spmv", "split_spmv_ref", "split_from_csr",
+           "split_flat_spmv"]

@@ -16,12 +16,16 @@ from . import ref
 from .spmv_ell import ell_spmv as _ell_spmv_pallas
 from .spmv_bell import bell_spmv as _bell_spmv_pallas, bell_spmm as _bell_spmm_pallas
 from .spmv_seg import seg_psum as _seg_psum_pallas
+from .spmv_split import split_combine as _split_combine_pallas, \
+    split_psum as _split_psum_pallas
 from repro.core.partition import nnz_chunk_starts
-from repro.core.sparse_matrix import EllMatrix, SegMatrix, hyb_cap_width
+from repro.core.sparse_matrix import EllMatrix, SegMatrix, SplitMatrix, \
+    hyb_cap_width
 
 __all__ = ["SEG_CHUNK", "ell_spmv_ref", "ell_spmv", "hyb_spmv", "hyb_from_csr",
            "bell_spmv", "bell_spmm", "bell_from_bcsr", "seg_spmv",
-           "seg_spmv_ref", "seg_from_csr"]
+           "seg_spmv_ref", "seg_from_csr", "split_from_csr", "split_spmv",
+           "split_spmv_ref", "split_flat_spmv"]
 
 #: Default elements per segmented chunk (lane-aligned).  Single source of
 #: truth shared with the plan cost model's padding arithmetic.
@@ -31,6 +35,7 @@ ell_spmv_ref = jax.jit(ref.ell_spmv_ref)
 bell_spmv_ref = jax.jit(ref.bell_spmv_ref)
 bell_spmm_ref = jax.jit(ref.bell_spmm_ref)
 seg_spmv_ref = jax.jit(ref.seg_spmv_ref, static_argnames=("num_rows",))
+split_spmv_ref = jax.jit(ref.split_spmv_ref, static_argnames=("num_rows",))
 
 
 def ell_spmv(data, cols, x, *, interpret: bool = False, **tiles):
@@ -201,6 +206,155 @@ def seg_from_csr(csr, *, chunk: int = SEG_CHUNK, lane: int = 128,
     return SegMatrix(shape=csr.shape, chunk=L, vals=vals, cols=cols,
                      rows=rows, piece_chunk=piece_chunk, piece_lo=piece_lo,
                      piece_hi=piece_hi, piece_row=piece_row, nnz=nnz)
+
+
+@functools.partial(jax.jit, static_argnames=("num_splits", "num_rows"))
+def _split_fixup(psum, piece_split, piece_chunk, piece_lo, piece_hi,
+                 piece_row, *, num_splits: int, num_rows: int):
+    """Carry fix-up into per-split partials: (NS, Cs, L) -> (NS, R).
+
+    Same prefix-difference contract as :func:`_seg_fixup`, but each piece
+    lands in its *split's* partial row sum — stage 2 reduces the split
+    axis afterwards, so no scatter ever crosses a split boundary.
+    """
+    hi = psum[piece_split, piece_chunk, piece_hi]
+    lo = jnp.where(piece_lo > 0,
+                   psum[piece_split, piece_chunk,
+                        jnp.maximum(piece_lo - 1, 0)],
+                   jnp.zeros((), dtype=psum.dtype))
+    part = jnp.zeros((num_splits, num_rows), dtype=psum.dtype)
+    return part.at[piece_split, piece_row].add(hi - lo)
+
+
+@functools.partial(jax.jit, static_argnames=("num_splits", "num_rows"))
+def _split_flat_fixup(psum, pieces, *, num_splits: int, num_rows: int):
+    """Flat-slab variant for the device path: psum is (NS*Cs, L) and
+    ``pieces`` is the (P, 5) table [flat_chunk, lo, hi, row, split]."""
+    p_chunk, p_lo, p_hi, p_row, p_split = (pieces[:, 0], pieces[:, 1],
+                                           pieces[:, 2], pieces[:, 3],
+                                           pieces[:, 4])
+    hi = psum[p_chunk, p_hi]
+    lo = jnp.where(p_lo > 0, psum[p_chunk, jnp.maximum(p_lo - 1, 0)],
+                   jnp.zeros((), dtype=psum.dtype))
+    part = jnp.zeros((num_splits, num_rows), dtype=psum.dtype)
+    return part.at[p_split, p_row].add(hi - lo)
+
+
+def split_spmv(spl: "SplitMatrix | tuple", x, *, num_rows: int | None = None,
+               use_kernel: bool = False, interpret: bool = False,
+               tile_c: int = 8):
+    """Split-nnz two-stage SpMV: y = A @ x with split-K partials.
+
+    ``spl`` is a host :class:`SplitMatrix` (or the equivalent array tuple
+    ``(vals, cols, rows, piece_split, piece_chunk, piece_lo, piece_hi,
+    piece_row)``).  The jnp scatter-add oracle is the default execution
+    path; ``use_kernel=True`` runs stage 1 (Pallas per-chunk prefix sums
+    on a 2-D (split, chunk-tile) grid), the jit'd per-split carry fix-up,
+    and stage 2 (Pallas split-axis combine).
+    """
+    if isinstance(spl, SplitMatrix):
+        arrays = (spl.vals, spl.cols, spl.rows, spl.piece_split,
+                  spl.piece_chunk, spl.piece_lo, spl.piece_hi, spl.piece_row)
+        if num_rows is None:
+            num_rows = spl.shape[0]
+    else:
+        arrays = spl
+        if num_rows is None:
+            raise ValueError("num_rows is required with raw split arrays")
+    vals, cols, rows, p_s, p_c, p_lo, p_hi, p_row = map(jnp.asarray, arrays)
+    NS = int(vals.shape[0])
+    if use_kernel:
+        def one(xb):
+            psum = _split_psum_pallas(vals, cols, xb, tile_c=tile_c,
+                                      interpret=interpret)
+            part = _split_fixup(psum, p_s, p_c, p_lo, p_hi, p_row,
+                                num_splits=NS, num_rows=num_rows)
+            return _split_combine_pallas(part, interpret=interpret)
+        if jnp.asarray(x).ndim == 2:    # multi-RHS: vmap the kernel path
+            return jax.vmap(one, in_axes=1, out_axes=1)(jnp.asarray(x))
+        return one(x)
+    return split_spmv_ref(vals, cols, rows, x, num_rows=num_rows)
+
+
+def split_flat_spmv(vals, cols, rows, pieces, x, *, num_rows: int,
+                    num_splits: int, use_kernel: bool = False,
+                    interpret: bool = False, tile_c: int = 8):
+    """Split SpMV over the *flattened* (NS*Cs, L) device slab.
+
+    The distributed executor stacks every shard's slab into one uniform
+    (C, L) operand, so the split structure travels in the (P, 5) int32
+    piece table [flat_chunk, lo, hi, row, split] instead of a third slab
+    axis (padded piece rows hold [0, 1, 0, 0, 0] — an exact zero).  The
+    oracle path is the seg scatter-add on the flat slab (the split axis
+    only partitions the stream); the kernel path is the two-stage
+    pipeline sharing :func:`~repro.kernels.spmv_seg.seg_psum` for stage 1.
+    """
+    if use_kernel:
+        def one(xb):
+            psum = _seg_psum_pallas(vals, cols, xb, tile_c=tile_c,
+                                    interpret=interpret)
+            part = _split_flat_fixup(psum, pieces, num_splits=num_splits,
+                                     num_rows=num_rows)
+            return _split_combine_pallas(part, interpret=interpret)
+        if jnp.asarray(x).ndim == 2:
+            return jax.vmap(one, in_axes=1, out_axes=1)(jnp.asarray(x))
+        return one(x)
+    return seg_spmv_ref(vals, cols, rows, x, num_rows=num_rows)
+
+
+def split_from_csr(csr, num_splits: int, *, chunk: int = SEG_CHUNK,
+                   lane: int = 128, sublane: int = 8) -> SplitMatrix:
+    """Convert host CSRMatrix -> split-nnz SplitMatrix.
+
+    The seg chunk grid is cut into ``num_splits`` contiguous groups of
+    ``Cs = ceil(C / num_splits)`` chunks; ``num_splits`` is clamped to
+    [1, C] so the slab never holds an all-padding split.  Unlike
+    :func:`seg_from_csr` the per-split chunk count is *not* sublane-padded
+    — stage 1 adapts its tile to a divisor of Cs — so a small split count
+    never multiplies the padding by NS.
+    """
+    L = ((max(chunk, 1) + lane - 1) // lane) * lane
+    nnz = csr.nnz
+    starts = nnz_chunk_starts(nnz, L)
+    C = starts.shape[0] - 1
+    ns = max(1, min(int(num_splits), C))
+    Cs = (C + ns - 1) // ns
+
+    vals = np.zeros((ns, Cs, L), dtype=np.float32)
+    cols = np.zeros((ns, Cs, L), dtype=np.int32)
+    rows = np.zeros((ns, Cs, L), dtype=np.int32)
+    row_of_nnz = np.repeat(np.arange(csr.nrows, dtype=np.int64),
+                           np.diff(csr.row_ptr))
+    flat_g = np.arange(nnz, dtype=np.int64) // L
+    s_idx = flat_g // Cs
+    c_idx = flat_g % Cs
+    l_idx = np.arange(nnz, dtype=np.int64) % L
+    vals[s_idx, c_idx, l_idx] = csr.values
+    cols[s_idx, c_idx, l_idx] = csr.col_index
+    rows[s_idx, c_idx, l_idx] = row_of_nnz
+
+    # Pieces: identical runs to seg_from_csr (cut at row changes and chunk
+    # boundaries); the owning chunk is just re-indexed as (split, within).
+    if nnz:
+        is_start = np.zeros(nnz, dtype=bool)
+        is_start[0] = True
+        is_start[1:] = row_of_nnz[1:] != row_of_nnz[:-1]
+        is_start[np.arange(0, nnz, L)] = True
+        p_start = np.flatnonzero(is_start)
+        p_end = np.concatenate([p_start[1:] - 1, [nnz - 1]])
+        p_g = p_start // L
+        piece_split = (p_g // Cs).astype(np.int32)
+        piece_chunk = (p_g % Cs).astype(np.int32)
+        piece_lo = (p_start % L).astype(np.int32)
+        piece_hi = (p_end % L).astype(np.int32)
+        piece_row = row_of_nnz[p_start].astype(np.int32)
+    else:
+        piece_split = piece_chunk = piece_lo = piece_hi = piece_row = \
+            np.zeros(0, np.int32)
+    return SplitMatrix(shape=csr.shape, chunk=L, num_splits=ns, vals=vals,
+                       cols=cols, rows=rows, piece_split=piece_split,
+                       piece_chunk=piece_chunk, piece_lo=piece_lo,
+                       piece_hi=piece_hi, piece_row=piece_row, nnz=nnz)
 
 
 def bell_from_bcsr(bcsr) -> tuple[np.ndarray, np.ndarray]:

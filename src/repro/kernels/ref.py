@@ -9,7 +9,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 __all__ = ["ell_spmv_ref", "bell_spmv_ref", "coo_spmv_ref", "bell_spmm_ref",
-           "seg_spmv_ref", "seg_psum_ref"]
+           "seg_spmv_ref", "seg_psum_ref", "split_psum_ref",
+           "split_partial_ref", "split_combine_ref", "split_spmv_ref"]
 
 
 def ell_spmv_ref(data: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
@@ -56,6 +57,50 @@ def seg_spmv_ref(vals: jnp.ndarray, cols: jnp.ndarray, rows: jnp.ndarray,
 def seg_psum_ref(vals: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
     """Within-chunk inclusive prefix sums — oracle for kernels.spmv_seg."""
     return jnp.cumsum(vals * jnp.take(x, cols, axis=0), axis=1)
+
+
+def split_psum_ref(vals: jnp.ndarray, cols: jnp.ndarray,
+                   x: jnp.ndarray) -> jnp.ndarray:
+    """Stage-1 oracle: within-chunk scans over the (NS, Cs, L) slab."""
+    return jnp.cumsum(vals * jnp.take(x, cols, axis=0), axis=-1)
+
+
+def split_partial_ref(psum: jnp.ndarray, piece_split: jnp.ndarray,
+                      piece_chunk: jnp.ndarray, piece_lo: jnp.ndarray,
+                      piece_hi: jnp.ndarray, piece_row: jnp.ndarray,
+                      num_splits: int, num_rows: int) -> jnp.ndarray:
+    """Carry fix-up into per-split partial row sums.
+
+    psum: (NS, Cs, L) stage-1 scans (trailing batch dims allowed).  Each
+    piece contributes ``psum[s, c, hi] - psum[s, c, lo-1]`` to partial
+    row ``(s, row)``; ``lo == 0`` contributes the plain prefix.  Returns
+    (NS, num_rows) partials (plus any batch dims).
+    """
+    hi = psum[piece_split, piece_chunk, piece_hi]
+    lo = jnp.where((piece_lo > 0)[(...,) + (None,) * (hi.ndim - 1)],
+                   psum[piece_split, piece_chunk,
+                        jnp.maximum(piece_lo - 1, 0)], 0)
+    contrib = hi - lo
+    out = jnp.zeros((num_splits, num_rows) + psum.shape[3:],
+                    dtype=psum.dtype)
+    return out.at[piece_split, piece_row].add(contrib)
+
+
+def split_combine_ref(partial: jnp.ndarray) -> jnp.ndarray:
+    """Stage-2 oracle: reduce the split axis, (NS, R, ...) -> (R, ...)."""
+    return jnp.sum(partial, axis=0)
+
+
+def split_spmv_ref(vals: jnp.ndarray, cols: jnp.ndarray, rows: jnp.ndarray,
+                   x: jnp.ndarray, num_rows: int) -> jnp.ndarray:
+    """End-to-end split oracle — identical contract to seg_spmv_ref.
+
+    The split axis only partitions the nnz stream; flattening it back to
+    a (NS*Cs, L) slab and scatter-adding gives the order-free answer.
+    """
+    NS, Cs, L = vals.shape
+    return seg_spmv_ref(vals.reshape(NS * Cs, L), cols.reshape(NS * Cs, L),
+                        rows.reshape(NS * Cs, L), x, num_rows)
 
 
 def bell_spmv_ref(blocks: jnp.ndarray, bcols: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:

@@ -1,0 +1,91 @@
+"""Pallas TPU kernels: split-nnz two-stage SpMV (split-K).
+
+``spmv_seg`` cures row skew at chunk granularity, but its grid is the
+chunk count: a shard that is one monster row lowers to a handful of
+chunks and leaves the machine idle — the paper's §IV-D hot-spot
+reappears one level up.  This is the split-K decode idiom (aiter MLA,
+SNIPPETS.md §2) ported to SpMV:
+
+* stage 1 (``split_psum``): the (C, L) nnz slab is reshaped to
+  (NS, Cs, L) and a 2-D grid ``(NS, Cs // tc)`` computes within-chunk
+  inclusive prefix sums per split — NS independent partial accumulators,
+  so even a one-row shard fills ``NS * Cs/tc`` grid steps;
+* the carry fix-up scatters each split's pieces into a *partial* row-sum
+  buffer (NS, R) (cheap jit'd gather/scatter in ops, same shape as the
+  seg fix-up but indexed by split);
+* stage 2 (``split_combine``): a tiny reduction over the split axis,
+  (NS, R) -> (R,) — the aiter ``_fwd_kernel_stage2`` analogue.
+
+The split count NS is a planning decision (``plan.split_meta``), driven
+by the row span (chunks of the longest row) and the device core count —
+the ``get_meta_param`` analogue.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["split_psum", "split_combine"]
+
+
+def _split_psum_kernel(vals_ref, cols_ref, x_ref, psum_ref):
+    vals = vals_ref[0]                         # (TC, L) tile of one split
+    cols = cols_ref[0]                         # (TC, L)
+    x = x_ref[...]                             # (N,) resident in VMEM
+    prod = vals * jnp.take(x, cols, axis=0)    # VMEM dynamic gather
+    psum_ref[0] = jnp.cumsum(prod, axis=1)     # within-chunk inclusive scan
+
+
+@functools.partial(jax.jit, static_argnames=("tile_c", "interpret"))
+def split_psum(vals: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray,
+               *, tile_c: int = 8, interpret: bool = False) -> jnp.ndarray:
+    """Stage 1: per-chunk inclusive prefix sums over a split slab.
+
+    vals/cols: (NS, Cs, L) nnz-stream slab with L % 128 == 0.  The grid
+    is 2-D, (NS, Cs // tc): the split axis keeps every core busy even
+    when Cs is tiny (one monster row => C chunks cut into NS splits).
+    x: (N,) gathered vector, fits VMEM alongside the tiles.
+    Returns psum: (NS, Cs, L) in x.dtype.
+    """
+    NS, Cs, L = vals.shape
+    tc = min(tile_c, Cs)
+    while Cs % tc:                 # largest divisor of Cs not above tile_c
+        tc -= 1
+    grid = (NS, Cs // tc)
+    return pl.pallas_call(
+        _split_psum_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tc, L), lambda s, c: (s, c, 0)),   # vals tile
+            pl.BlockSpec((1, tc, L), lambda s, c: (s, c, 0)),   # cols tile
+            pl.BlockSpec((x.shape[0],), lambda s, c: (0,)),     # full x
+        ],
+        out_specs=pl.BlockSpec((1, tc, L), lambda s, c: (s, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((NS, Cs, L), x.dtype),
+        interpret=interpret,
+    )(vals, cols, x)
+
+
+def _split_combine_kernel(part_ref, y_ref):
+    y_ref[...] = jnp.sum(part_ref[...], axis=0)   # (NS, TR) -> (TR,)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_r", "interpret"))
+def split_combine(partial: jnp.ndarray, *, tile_r: int = 128,
+                  interpret: bool = False) -> jnp.ndarray:
+    """Stage 2: reduce the per-split partial row sums, (NS, R) -> (R,)."""
+    NS, R = partial.shape
+    tr = min(tile_r, R)
+    while R % tr:                  # largest divisor of R not above tile_r
+        tr -= 1
+    return pl.pallas_call(
+        _split_combine_kernel,
+        grid=(R // tr,),
+        in_specs=[pl.BlockSpec((NS, tr), lambda r: (0, r))],
+        out_specs=pl.BlockSpec((tr,), lambda r: (r,)),
+        out_shape=jax.ShapeDtypeStruct((R,), partial.dtype),
+        interpret=interpret,
+    )(partial)

@@ -362,9 +362,14 @@ def _try_partial_replan(csr: CSRMatrix, monitor: LoadMonitor,
     actually touches.  The gate is the load-weighted kernel-slot cost
     (sum over shards of ``load_p * cost[kernel_p][p]``) improving by
     ``cfg.min_gain``; the Emu drift oracle cannot see kernels, so the
-    analytic table is the authoritative metric here.  Only the changed
-    stages are rebuilt (:func:`~repro.core.program.relower`) and the
-    candidate must still reproduce ``csr_matvec`` before the swap.
+    analytic table is the authoritative metric here.  The candidate grid
+    is the full :data:`~repro.core.plan.KERNELS` — including the
+    split-nnz two-stage ``split`` family, so a shard that drifted onto a
+    monster-row hot-spot can be swapped onto split partials without a
+    full re-plan (the split count re-derives from
+    :func:`~repro.core.plan.split_meta` at relower time).  Only the
+    changed stages are rebuilt (:func:`~repro.core.program.relower`) and
+    the candidate must still reproduce ``csr_matvec`` before the swap.
     """
     old_plan = current.plan
     if old_plan.num_shards != program.plan.num_shards:

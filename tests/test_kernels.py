@@ -4,6 +4,8 @@ Shape/dtype sweeps + hypothesis property tests, per the assignment brief.
 ``hypothesis`` is an optional extra: without it only the property-test
 class is skipped — the sweep tests always collect and run.
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -27,9 +29,21 @@ except ModuleNotFoundError:
 
     st = _AnyStrategy()
 
-from repro.core.sparse_matrix import csr_from_coo, csr_to_bcsr, csr_to_dense, csr_to_ell
-from repro.data.matrices import powerlaw
+from repro.core.sparse_matrix import csr_from_coo, csr_matvec, csr_to_bcsr, \
+    csr_to_dense, csr_to_ell
+from repro.data.matrices import powerlaw, powerlaw_tail
 from repro.kernels import ops, ref
+
+
+def _np_slab_oracle(vals, cols, rows, x, num_rows):
+    """Float64 numpy ground truth for any seg/split-style (..., L) slab:
+    scatter-add every slot into its output row.  Padded slots carry
+    ``val == 0`` so they contribute exactly nothing."""
+    y = np.zeros(num_rows, np.float64)
+    np.add.at(y, np.asarray(rows).reshape(-1),
+              (np.asarray(vals, np.float64) *
+               np.asarray(x, np.float64)[np.asarray(cols)]).reshape(-1))
+    return y
 
 
 def rand_problem(M, N, nnz, seed=0, dtype=np.float32):
@@ -227,6 +241,38 @@ class TestSegKernel:
         np.testing.assert_allclose(Y_ref, csr_to_dense(A) @ X,
                                    rtol=1e-4, atol=1e-4)
 
+    def test_monster_row_carry_pinned_vs_csr_matvec(self):
+        """Regression pin for the seg carry fix-up when a *single* row
+        spans many chunks: one fully dense row (span 16 under chunk=128)
+        over a thin background must reproduce ``csr_matvec`` through the
+        oracle and the Pallas path, and a float64 scatter over the slab
+        must match ``csr_matvec`` on the same (fp32-stored) values to
+        fp64 round-off — the carry chain either sums every chunk's carry
+        exactly once or drifts visibly."""
+        rng = np.random.default_rng(11)
+        M = 2048
+        r = np.concatenate([np.zeros(M, int), np.arange(1, M)])
+        c = np.concatenate([np.arange(M), rng.integers(0, M, M - 1)])
+        v = rng.standard_normal(2 * M - 1)
+        A = csr_from_coo(r, c, v, (M, M))
+        seg = ops.seg_from_csr(A, chunk=128)
+        assert np.diff(A.row_ptr)[0] == M          # monster row intact
+        assert M // seg.chunk >= 16                # spans >= 16 chunks
+        x = rng.standard_normal(M)
+        want = csr_matvec(A, x)
+        xj = jnp.asarray(x, jnp.float32)
+        y_ref = np.asarray(ops.seg_spmv(seg, xj))
+        y_pal = np.asarray(ops.seg_spmv(seg, xj, use_kernel=True,
+                                        interpret=True))
+        # fp32 paths: the monster row sums 2048 terms — scale tolerance
+        np.testing.assert_allclose(y_ref, want, rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(y_pal, want, rtol=1e-4, atol=1e-3)
+        A32 = dataclasses.replace(
+            A, values=A.values.astype(np.float32).astype(np.float64))
+        y64 = _np_slab_oracle(seg.vals, seg.cols, seg.rows, x, M)
+        np.testing.assert_allclose(y64, csr_matvec(A32, x),
+                                   rtol=1e-12, atol=1e-12)
+
     def test_grid_is_nnz_balanced(self):
         """Structural invariant: every chunk except the last holds exactly
         ``chunk`` non-zeros, no matter how skewed the rows are — the whole
@@ -245,6 +291,129 @@ class TestSegKernel:
             assert 0 <= lo <= hi < seg.chunk
             covered += hi - lo + 1
         assert covered == A.nnz
+
+
+class TestSplitKernel:
+    """Split-nnz two-stage SpMV: stage-1 per-split prefix sums + carry
+    fix-up into (NS, rows) partials, stage-2 segmented combine."""
+
+    @pytest.mark.parametrize("ns", [1, 2, 3, 4, 8])
+    def test_matches_seg_and_float64_oracle(self, ns):
+        A = powerlaw(1024, 12000, seed=4)
+        x = np.random.default_rng(4).standard_normal(1024)
+        xj = jnp.asarray(x, jnp.float32)
+        spl = ops.split_from_csr(A, ns)
+        seg = ops.seg_from_csr(A)
+        y_spl = np.asarray(ops.split_spmv(spl, xj))
+        y_seg = np.asarray(ops.seg_spmv(seg, xj))
+        np.testing.assert_allclose(y_spl, y_seg, rtol=1e-5, atol=1e-5)
+        y64 = _np_slab_oracle(spl.vals, spl.cols, spl.rows, x, 1024)
+        np.testing.assert_allclose(y_spl, y64, rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("ns", [2, 4])
+    def test_pallas_two_stage_matches_oracle(self, ns):
+        """stage-1 ``split_psum`` + fix-up + stage-2 ``split_combine``
+        (interpret mode) vs the jnp oracle, on a monster-row matrix."""
+        A = powerlaw_tail(1024, 2 * 4 * 1024, n_monster=4, seed=2)
+        x = jnp.asarray(np.random.default_rng(2).standard_normal(1024),
+                        jnp.float32)
+        spl = ops.split_from_csr(A, ns)
+        y_ref = np.asarray(ops.split_spmv(spl, x))
+        y_pal = np.asarray(ops.split_spmv(spl, x, use_kernel=True,
+                                          interpret=True))
+        np.testing.assert_allclose(y_pal, y_ref, rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(
+            y_pal, csr_matvec(A, np.asarray(x, np.float64)),
+            rtol=1e-3, atol=1e-2)
+
+    def test_monster_row_split_kills_carry_span(self):
+        """The structural point of the format: a row spanning ``span``
+        chunks in seg spans at most ``ceil(C/ns)`` chunks of each split's
+        slab (the splits cut the flat chunk stream, so the boundaries
+        land inside the row once ``ns > C/span``), and the result is
+        unchanged."""
+        A = powerlaw_tail(512, 2 * 2 * 512, n_monster=2, seed=0)
+        seg = ops.seg_from_csr(A, chunk=128)      # monster rows span 4+
+        spl = ops.split_from_csr(A, 10, chunk=128)   # 2-chunk splits
+        span_seg = max(np.bincount(seg.piece_row,
+                                   minlength=A.shape[0]).max(), 1)
+        span_spl = 0
+        for s in range(spl.num_splits):
+            m = spl.piece_split == s
+            if m.any():
+                span_spl = max(span_spl, np.bincount(
+                    spl.piece_row[m], minlength=A.shape[0]).max())
+        assert span_spl < span_seg
+        x = jnp.asarray(np.random.default_rng(1).standard_normal(512),
+                        jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(ops.split_spmv(spl, x)),
+            np.asarray(ops.seg_spmv(seg, x)), rtol=1e-5, atol=1e-5)
+
+    def test_batched_matches_per_vector(self):
+        """(N, B) batched split SpMV: every column equals its per-vector
+        run — exactly for the oracle path, tightly for the vmapped
+        Pallas path."""
+        A = powerlaw_tail(512, 2 * 2 * 512, n_monster=2, seed=5)
+        X = np.random.default_rng(5).standard_normal((512, 3)) \
+            .astype(np.float32)
+        spl = ops.split_from_csr(A, 4)
+        Y_ref = np.asarray(ops.split_spmv(spl, jnp.asarray(X)))
+        Y_pal = np.asarray(ops.split_spmv(spl, jnp.asarray(X),
+                                          use_kernel=True, interpret=True))
+        assert Y_ref.shape == (512, 3)
+        for b in range(3):
+            np.testing.assert_allclose(
+                Y_ref[:, b],
+                np.asarray(ops.split_spmv(spl, jnp.asarray(X[:, b]))),
+                rtol=1e-5, atol=1e-5)
+            np.testing.assert_allclose(
+                Y_pal[:, b],
+                np.asarray(ops.split_spmv(spl, jnp.asarray(X[:, b]),
+                                          use_kernel=True, interpret=True)),
+                rtol=1e-5, atol=1e-5)
+
+    def test_empty_matrix_and_count_clamp(self):
+        """Zero-nnz matrices lower to a valid no-op split slab for every
+        requested count, and absurd counts clamp to the chunk count."""
+        E = csr_from_coo(np.zeros(0, int), np.zeros(0, int), np.zeros(0),
+                         (16, 16))
+        for ns in (1, 4, 999):
+            spl = ops.split_from_csr(E, ns)
+            assert spl.num_splits == 1            # clamped to C == 1
+            y = np.asarray(ops.split_spmv(spl, jnp.zeros(16, jnp.float32),
+                                          use_kernel=True, interpret=True))
+            assert y.shape == (16,) and not y.any()
+        A = powerlaw(256, 2000, seed=6)
+        spl = ops.split_from_csr(A, 10**6)
+        assert 1 <= spl.num_splits <= spl.chunks_per_split * spl.num_splits
+        x = jnp.asarray(np.random.default_rng(6).standard_normal(256),
+                        jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(ops.split_spmv(spl, x)),
+            np.asarray(ops.seg_spmv(ops.seg_from_csr(A), x)),
+            rtol=1e-5, atol=1e-5)
+
+    def test_flat_path_matches_structured(self):
+        """``split_flat_spmv`` (the device-path flattened slab + widened
+        piece table) agrees with the structured ``split_spmv``."""
+        A = powerlaw_tail(512, 2 * 2 * 512, n_monster=2, seed=8)
+        x = jnp.asarray(np.random.default_rng(8).standard_normal(512),
+                        jnp.float32)
+        spl = ops.split_from_csr(A, 4)
+        ns, Cs = spl.num_splits, spl.chunks_per_split
+        pieces = np.stack([spl.piece_split * Cs + spl.piece_chunk,
+                           spl.piece_lo, spl.piece_hi, spl.piece_row,
+                           spl.piece_split], axis=1).astype(np.int32)
+        L = spl.vals.shape[-1]
+        y_flat = np.asarray(ops.split_flat_spmv(
+            jnp.asarray(spl.vals.reshape(ns * Cs, L)),
+            jnp.asarray(spl.cols.reshape(ns * Cs, L)),
+            jnp.asarray(spl.rows.reshape(ns * Cs, L)),
+            jnp.asarray(pieces), x, num_rows=512, num_splits=ns,
+            use_kernel=True, interpret=True))
+        np.testing.assert_allclose(y_flat, np.asarray(ops.split_spmv(spl, x)),
+                                   rtol=1e-5, atol=1e-5)
 
 
 @pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
@@ -277,6 +446,36 @@ class TestKernelProperties:
         seg = ops.seg_from_csr(A)
         y_seg = np.asarray(ops.seg_spmv(seg, jnp.asarray(x)))
         np.testing.assert_allclose(y_seg, y_ell, rtol=1e-4, atol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(M=st.sampled_from([64, 256]), nnz=st.integers(16, 2000),
+           ns=st.integers(1, 12), seed=st.integers(0, 2**16))
+    def test_split_matches_float64_oracle(self, M, nnz, ns, seed):
+        """Across arbitrary split counts, the two-stage split result
+        matches the float64 numpy slab oracle and the seg family."""
+        A, x = rand_problem(M, M, nnz, seed=seed)
+        spl = ops.split_from_csr(A, ns)
+        y = np.asarray(ops.split_spmv(spl, jnp.asarray(x)))
+        y64 = _np_slab_oracle(spl.vals, spl.cols, spl.rows, x, M)
+        np.testing.assert_allclose(y, y64, rtol=1e-4, atol=1e-4)
+        y_seg = np.asarray(ops.seg_spmv(ops.seg_from_csr(A),
+                                        jnp.asarray(x)))
+        np.testing.assert_allclose(y, y_seg, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(ns=st.integers(1, 8), seed=st.integers(0, 2**16))
+    def test_split_batched_columns_independent(self, ns, seed):
+        """(N, B) split oracle: each column equals its per-vector run."""
+        A, _ = rand_problem(128, 128, 900, seed=seed)
+        X = np.random.default_rng(seed).standard_normal((128, 2)) \
+            .astype(np.float32)
+        spl = ops.split_from_csr(A, ns)
+        Y = np.asarray(ops.split_spmv(spl, jnp.asarray(X)))
+        for b in range(2):
+            np.testing.assert_allclose(
+                Y[:, b],
+                np.asarray(ops.split_spmv(spl, jnp.asarray(X[:, b]))),
+                rtol=1e-5, atol=1e-5)
 
     @settings(max_examples=15, deadline=None)
     @given(nnz=st.integers(16, 600), seed=st.integers(0, 2**16))

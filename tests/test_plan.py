@@ -93,9 +93,10 @@ def test_ranking_sorted_and_full_grid():
     # uniform grid (kernels now include hyb) + optional per-shard
     # heterogeneous candidates (one per base x exchange, only when the
     # per-shard selection is genuinely mixed)
+    from repro.core.plan import KERNELS
     uniform = [r for r in choice.ranking if r.plan.shard_kernels is None]
     hetero = [r for r in choice.ranking if r.plan.shard_kernels is not None]
-    assert len(uniform) == 2 * 2 * len(REORDERINGS) * 3 * 2
+    assert len(uniform) == 2 * 2 * len(REORDERINGS) * len(KERNELS) * 2
     for r in hetero:
         assert len(set(r.plan.shard_kernels)) > 1
         assert len(r.plan.shard_kernels) == 4
@@ -141,9 +142,61 @@ def test_shard_kernel_selection_reads_structure():
     assert sel[0] == "ell" and sel[1] == "ell", sel
     assert sel[3] == "seg", sel
     costs = kernel_shard_costs(A, part)
-    assert set(costs) == {"ell", "seg", "hyb"}
+    assert set(costs) == {"ell", "seg", "hyb", "split"}
     for v in costs.values():
         assert v.shape == (4,) and (v > 0).all()
+    # short-row shards never prefer split over seg: the stage-2 combine
+    # is pure overhead when no row spans a chunk
+    assert (costs["split"] >= costs["seg"]).sum() >= 1
+
+
+def test_split_meta_policy():
+    """The split-count policy: 1 below the span floor, capped by chunks
+    and core count, power-of-two, and monotone-ish in work."""
+    from repro.core.plan import SPLIT_CORES, SPLIT_MIN_SPAN, split_meta
+    assert split_meta(100, 10) == 1                   # nothing spans
+    assert split_meta(8 * 512, 2 * 512) == 1          # span < min floor
+    ns = split_meta(16 * 512, 16 * 512)               # one monster row
+    assert ns >= SPLIT_MIN_SPAN and ns & (ns - 1) == 0
+    assert split_meta(10**9, 10**8) <= SPLIT_CORES
+    for nnz, mx in ((10**5, 10**4), (10**6, 10**5), (10**7, 10**6)):
+        n = split_meta(nnz, mx)
+        chunks = -(-nnz // 512)
+        assert 1 <= n <= min(chunks, SPLIT_CORES)
+
+
+def test_split_reachable_from_auto_on_powerlaw_tail():
+    """`SpmvPlan.auto` on the monster-row workload reaches the split
+    family on its own, and the plan serves exactly."""
+    from repro.data.matrices import powerlaw_tail
+    A = powerlaw_tail(2048, 2 * 4 * 2048, n_monster=4, seed=0)
+    choice = autotune(A, num_shards=4, seed=0)
+    kernels = choice.plan.shard_kernels or (choice.plan.kernel,) * 4
+    assert "split" in kernels, choice.plan
+    from repro.core.program import execute, lower
+    prog = lower(A, choice.plan)
+    x = np.random.default_rng(0).standard_normal(A.ncols)
+    np.testing.assert_allclose(execute(prog, x),
+                               csr_to_dense(A) @ x, atol=1e-4, rtol=1e-5)
+
+
+def test_plan_json_roundtrip_with_split_counts():
+    """Plans carrying explicit per-shard split counts survive the
+    PlanChoice JSON round-trip and validate their shapes."""
+    import dataclasses
+    p = SpmvPlan(num_shards=4, shard_kernels=("split", "seg", "seg", "seg"),
+                 split_counts=(8, 1, 1, 1))
+    assert p.resolved_split_counts() == (8, 1, 1, 1)
+    d = json.loads(json.dumps(dataclasses.asdict(p)))
+    back = SpmvPlan(**d)
+    assert back == p and back.split_counts == (8, 1, 1, 1)
+    # None -> policy decides (0 sentinel per shard)
+    q = SpmvPlan(num_shards=4, kernel="split")
+    assert q.resolved_split_counts() == (0, 0, 0, 0)
+    with pytest.raises(ValueError, match="split_counts"):
+        SpmvPlan(num_shards=4, split_counts=(2, 2)).resolved_split_counts()
+    with pytest.raises(ValueError, match="split_counts"):
+        SpmvPlan(num_shards=2, split_counts=(0, 1))
 
 
 LEGACY_CHOICE_JSON = """

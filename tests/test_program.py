@@ -15,13 +15,16 @@ import pytest
 from repro.core.program import execute, lower, probe_program, relower
 from repro.core.sparse_matrix import csr_matvec
 from repro.core.spmv import SpmvPlan
-from repro.data.matrices import make_matrix, mixed_structure, powerlaw
+from repro.data.matrices import make_matrix, mixed_structure, powerlaw, \
+    powerlaw_tail
 
 KERNEL_CONFIGS = [
     ("ell", None),
     ("seg", None),
     ("hyb", None),
+    ("split", None),
     ("seg", ("ell", "seg", "hyb", "seg")),      # heterogeneous program
+    ("seg", ("ell", "split", "hyb", "seg")),    # heterogeneous with split
 ]
 
 
@@ -86,6 +89,69 @@ def test_relower_shares_unchanged_stages():
     with pytest.raises(ValueError, match="base field"):
         relower(prog, SpmvPlan(num_shards=4, layout="cyclic",
                                shard_kernels=("ell", "ell", "hyb", "seg")))
+
+
+def test_relower_shares_stages_on_unchanged_split_count():
+    """Re-planning that keeps a shard's *effective* split count must share
+    the stage object; changing the count rebuilds only that stage."""
+    A = powerlaw_tail(2048, 2 * 4 * 2048, n_monster=4, seed=0)
+    p1 = SpmvPlan(num_shards=4, shard_kernels=("split", "seg", "seg", "seg"),
+                  split_counts=(4, 1, 1, 1))
+    prog = lower(A, p1)
+    assert prog.stages[0].split is not None
+    assert prog.stages[0].split.num_splits == 4
+    # same requested count -> all stages shared
+    prog2 = relower(prog, SpmvPlan(
+        num_shards=4, shard_kernels=("split", "seg", "seg", "seg"),
+        split_counts=(4, 1, 1, 1)))
+    assert all(prog2.stages[p] is prog.stages[p] for p in range(4))
+    # different effective count -> only the split stage rebuilds
+    prog3 = relower(prog, SpmvPlan(
+        num_shards=4, shard_kernels=("split", "seg", "seg", "seg"),
+        split_counts=(2, 1, 1, 1)))
+    assert prog3.stages[0] is not prog.stages[0]
+    assert prog3.stages[0].split.num_splits == 2
+    assert all(prog3.stages[p] is prog.stages[p] for p in (1, 2, 3))
+    x = np.random.default_rng(5).standard_normal(A.ncols)
+    for pr in (prog, prog2, prog3):
+        np.testing.assert_allclose(execute(pr, x), csr_matvec(A, x),
+                                   atol=1e-4, rtol=1e-5)
+
+
+def test_degenerate_matrix_empty_shards_all_families():
+    """A 6x6 matrix lowered over 4 shards leaves shards with zero rows
+    and/or zero nnz; every kernel family must produce a valid no-op stage
+    and the exact result (empty-shard lowering regression)."""
+    from repro.core.sparse_matrix import csr_from_coo
+    A = csr_from_coo([0, 0, 5], [1, 4, 0], [2.0, -1.0, 3.0], (6, 6))
+    x = np.arange(6, dtype=np.float64)
+    for kernel in ("ell", "seg", "hyb", "split"):
+        for dist in ("row", "nonzero"):
+            prog = lower(A, SpmvPlan(kernel=kernel, distribution=dist,
+                                     num_shards=4))
+            nnz_per_shard = [
+                int(A.row_ptr[prog.partition.starts[p + 1]] -
+                    A.row_ptr[prog.partition.starts[p]])
+                for p in range(4)]
+            assert 0 in nnz_per_shard, (kernel, dist)   # genuinely empty
+            np.testing.assert_allclose(execute(prog, x), csr_matvec(A, x),
+                                       atol=1e-6, err_msg=f"{kernel}/{dist}")
+            res = probe_program(prog)               # emu backend runs too
+            assert res.ticks > 0
+
+
+def test_monster_row_numpy_and_emu_backends():
+    """Monster-row shard (rows spanning many chunks) through the numpy
+    executor and the Emu probe, for seg and split programs."""
+    A = powerlaw_tail(2048, 2 * 4 * 2048, n_monster=4, seed=3)
+    x = np.random.default_rng(3).standard_normal(A.ncols)
+    for sk in (None, ("split", "split", "seg", "seg")):
+        plan = SpmvPlan(kernel="seg", shard_kernels=sk,
+                        distribution="nonzero", num_shards=4)
+        prog = lower(A, plan)
+        np.testing.assert_allclose(execute(prog, x), csr_matvec(A, x),
+                                   atol=1e-4, rtol=1e-5)
+        assert probe_program(prog).ticks > 0
 
 
 def test_emu_backend_is_deterministic_and_plan_driven():
@@ -155,14 +221,17 @@ _SUBPROC = textwrap.dedent("""
              ("halo", "block", "nonzero"),
              ("halo", "cyclic", "row"))
     for exch, layout, dist_s in bases:
-        for sk in (None, ("ell", "seg", "hyb", "seg")):
+        for sk in (None, ("ell", "seg", "hyb", "seg"),
+                   ("ell", "split", "hyb", "seg")):
             plan = SpmvPlan(layout=layout, distribution=dist_s,
                             exchange=exch, kernel="seg",
                             shard_kernels=sk, num_shards=4)
             prog = lower(A, plan)
             y_np = execute(prog, x)
             y_sm = execute(prog, x, backend="shard_map", mesh=mesh)
-            key = f"{exch}/{layout}/{dist_s}/{'het' if sk else 'seg'}"
+            tag = "seg" if sk is None else \\
+                ("het+split" if "split" in sk else "het")
+            key = f"{exch}/{layout}/{dist_s}/{tag}"
             out[key] = bool(
                 np.allclose(y_np, ref, atol=1e-3) and
                 np.allclose(y_sm, ref, atol=1e-3) and
@@ -182,6 +251,37 @@ _SUBPROC = textwrap.dedent("""
     with mesh:
         ys = fn(jnp.asarray(prog.x_to_device(x)))
     out["fn_form"] = bool(np.allclose(gather_b(prog, ys), ref, atol=1e-3))
+    # monster-row shards through the device split path (jnp oracle,
+    # Pallas interpret, and batched), vs the numpy backend and csr_matvec
+    from repro.data.matrices import powerlaw_tail
+    Am = powerlaw_tail(1024, 2 * 4 * 1024, n_monster=4, seed=3)
+    xm = np.random.default_rng(3).standard_normal(Am.ncols) \\
+        .astype(np.float32)
+    refm = csr_matvec(Am, xm)
+    pm = lower(Am, SpmvPlan(num_shards=4, distribution="nonzero",
+                            shard_kernels=("split", "split", "seg", "seg")))
+    y_np = execute(pm, xm)
+    y_sm = execute(pm, xm, backend="shard_map", mesh=mesh)
+    y_pk = execute(pm, xm, backend="shard_map", mesh=mesh,
+                   use_kernel=True, interpret=True)
+    out["monster_split"] = bool(
+        np.allclose(y_np, refm, atol=1e-2) and
+        np.allclose(y_sm, refm, atol=1e-2) and
+        np.allclose(y_pk, refm, atol=1e-2))
+    Xm = np.random.default_rng(4).standard_normal((Am.ncols, 3)) \\
+        .astype(np.float32)
+    Ym = execute(pm, Xm, backend="shard_map", mesh=mesh)
+    out["monster_split_batched"] = bool(
+        np.allclose(Ym, csr_matvec(Am, Xm), atol=1e-2))
+    # empty shards on the device path, all four families
+    from repro.core.sparse_matrix import csr_from_coo
+    Ad = csr_from_coo([0, 0, 5], [1, 4, 0], [2.0, -1.0, 3.0], (6, 6))
+    xd = np.arange(6, dtype=np.float32)
+    refd = csr_matvec(Ad, xd)
+    for kern in ("ell", "seg", "hyb", "split"):
+        pd = lower(Ad, SpmvPlan(kernel=kern, num_shards=4))
+        yd = execute(pd, xd, backend="shard_map", mesh=mesh)
+        out[f"empty_{kern}"] = bool(np.allclose(yd, refd, atol=1e-5))
     print(json.dumps(out))
 """)
 

@@ -263,6 +263,51 @@ def test_partial_replan_swaps_only_hot_shards():
     assert ev_full.mode == "full"
 
 
+def test_partial_replan_reaches_split_on_monster_row_shard():
+    """When the hot shard holds monster rows, the partial tier's
+    per-shard re-kernel lands on the split family (its per-shard cost
+    beats seg there), with the split count derived by the policy at
+    relower time — and the swapped program still matches the oracle."""
+    from repro.core.plan import PlanChoice, RankedPlan, estimate_cost, \
+        extract_features
+    from repro.core.program import execute, lower
+    from repro.core.spmv import SpmvPlan
+    from repro.data.matrices import powerlaw_tail
+    from repro.serve.rebalance import hot_shards, replan
+
+    A = powerlaw_tail(2048, 2 * 4 * 2048, n_monster=4, seed=0)
+    plan = SpmvPlan(layout="block", distribution="row", reordering="none",
+                    exchange="halo", kernel="seg", num_shards=4)
+    prog = lower(A, plan)
+    cfg = RebalanceConfig(window=16, probe=0)
+    mon = LoadMonitor(prog, cfg)
+    # skewed toward shard 0's x columns, but mild enough that the
+    # traffic-thinned probe structure keeps the monster rows spanning
+    # many chunks (heavy thinning would shorten them below the split
+    # policy's span floor)
+    w = np.ones(A.ncols)
+    w[:512] = 3.0
+    mon._act_ema = w / w.mean()
+    assert list(hot_shards(mon.shard_load(), cfg.hot_factor)) == [0]
+
+    choice = PlanChoice(
+        features=extract_features(A, num_shards=4),
+        ranking=(RankedPlan(plan=plan, cost=estimate_cost(A, plan)),),
+        probed=0)
+    dist, new_choice, ev = replan(A, mon, choice, num_shards=4, seed=0,
+                                  cfg=cfg, request_index=0, program=prog)
+    assert ev.swapped and ev.mode == "partial"
+    assert ev.swapped_shards == (0,)
+    assert dist.shard_kernels()[0] == "split"
+    assert dist.shard_kernels()[1:] == ("seg",) * 3
+    assert dist.stages[0].split is not None
+    assert dist.stages[0].split.num_splits > 1     # policy-derived count
+    assert all(dist.stages[p] is prog.stages[p] for p in (1, 2, 3))
+    x = np.random.default_rng(0).standard_normal(A.ncols)
+    np.testing.assert_allclose(execute(dist, x), csr_matvec(A, x),
+                               atol=1e-4, rtol=1e-5)
+
+
 def test_partial_replan_needs_skewed_traffic():
     """Uniform traffic never takes the partial tier (nothing local to
     re-derive) — the full tier answers the trip instead."""
