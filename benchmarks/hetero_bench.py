@@ -11,6 +11,15 @@ partition the two regimes land on *different shards*.  One global
 (ell/hyb) or pay scan/scatter overhead on the regular band (seg); the
 per-shard autotuner pays ``sum_p min_k`` instead of ``min_k sum_p``.
 
+``--workload pipeline``: ``data.matrices.halo_spikes`` — broad-reader
+rows over a tight local band, the exchange-bound regime.  The headline
+is the modeled **device-path** (SPMD) latency of the pre-pipeline serial
+schedule vs the pipelined one (:func:`repro.core.plan.device_path_model`
+over the full ranking, best-achievable vs best-achievable); the
+acceptance gate is >= 1.15x on the full run, recorded via ``perf_probe
+--pipeline``.  With enough visible devices the two schedules are also
+run through the real shard_map executor and checked bitwise-equal.
+
 ``--workload powerlaw_tail``: ``data.matrices.powerlaw_tail`` — a
 handful of fully-dense *monster rows* over a uniform short-row
 background (the paper's §IV-D hot-spot distilled).  A nonzero-balanced
@@ -50,14 +59,18 @@ import time
 
 import numpy as np
 
-from repro.core.plan import DEFAULT_PROBE, autotune
+from repro.core.partition import make_partition
+from repro.core.plan import DEFAULT_PROBE, autotune, device_path_model
 from repro.core.program import execute, lower
+from repro.core.reorder import reordering_permutation
 from repro.core.sparse_matrix import csr_matvec
-from repro.data.matrices import mixed_structure, powerlaw_tail
+from repro.data.matrices import halo_spikes, mixed_structure, powerlaw_tail
 
 
 def _plan_str(p) -> str:
-    s = f"{p.reordering}/{p.layout}/{p.distribution}/{p.exchange}"
+    ex = p.exchange if p.shard_exchanges is None else \
+        f"[{'+'.join(p.shard_exchanges)}]"
+    s = f"{p.reordering}/{p.layout}/{p.distribution}/{ex}"
     if p.shard_kernels is not None:
         return f"{s}/[{'+'.join(p.shard_kernels)}]"
     return f"{s}/{p.kernel}"
@@ -245,13 +258,126 @@ def check_split(entry: dict, *, fast: bool = False) -> bool:
             entry.get("oracle_ok", False))
 
 
+def run_pipeline_bench(*, M: int = 8192, nnz_per_row: int = 8,
+                       shards: int = 8, seed: int = 0,
+                       fast: bool = False) -> dict:
+    """Run the exchange-bound pipelining scenario on ``halo_spikes``.
+
+    The headline is the modeled **device-path** (SPMD shard_map) latency:
+    serial schedule (exchange completes before any kernel work, the
+    pre-pipeline executor) vs the pipelined schedule (all-local rows run
+    while the collective is in flight) — :func:`device_path_model` over
+    the full autotune ranking, best-achievable vs best-achievable, so a
+    plan change cannot manufacture the win.  ``halo_spikes`` puts a few
+    broad-reader rows on every shard over a tight local band: each
+    shard's unique remote-column set is large (the exchange term rivals
+    the kernel term) while most rows stay local (there is work to hide
+    the exchange behind).
+
+    When enough devices are visible (``XLA_FLAGS
+    --xla_force_host_platform_device_count``), the pipelined and serial
+    schedules are additionally executed through the real shard_map path
+    and checked bitwise-equal, with wall-clock recorded for reference.
+    """
+    if fast:
+        M, shards = 2048, 4
+    A0 = halo_spikes(M, M * nnz_per_row, seed=seed)
+    choice = autotune(A0, num_shards=shards, seed=seed, probe=0)
+
+    cache: dict = {}
+    best_ser = best_pipe = None
+    for r in choice.ranking:
+        plan = r.plan
+        bk = (plan.reordering, plan.distribution)
+        if bk not in cache:
+            perm = reordering_permutation(A0, plan.reordering,
+                                          seed=plan.seed, parts=shards)
+            Ar = A0 if plan.reordering == "none" else A0.permuted(perm, perm)
+            cache[bk] = (Ar, make_partition(Ar, shards, plan.distribution))
+        Ar, part = cache[bk]
+        m = device_path_model(Ar, part, plan)
+        if best_ser is None or m["serial_cycles"] < best_ser[0]:
+            best_ser = (m["serial_cycles"], plan)
+        if best_pipe is None or m["pipelined_cycles"] < best_pipe[0]:
+            best_pipe = (m["pipelined_cycles"], plan, m)
+
+    ser_cycles, ser_plan = best_ser
+    pipe_cycles, pipe_plan, pipe_terms = best_pipe
+    entry = {
+        "workload": "pipeline/halo_spikes", "M": A0.nrows, "nnz": A0.nnz,
+        "shards": shards,
+        "serial_plan": _plan_str(ser_plan),
+        "pipelined_plan": _plan_str(pipe_plan),
+        "shard_exchanges": list(pipe_plan.resolved_shard_exchanges()),
+        "model_device_cycles": {
+            "serial": round(ser_cycles, 1),
+            "pipelined": round(pipe_cycles, 1),
+            "speedup": round(ser_cycles / max(pipe_cycles, 1e-12), 3)},
+        "pipelined_terms": {k: round(v, 1) for k, v in pipe_terms.items()
+                            if k != "speedup"},
+    }
+
+    prog = lower(A0, pipe_plan)
+    x = np.random.default_rng(seed).standard_normal(A0.ncols)
+    ref = csr_matvec(A0, x)
+    entry["oracle_ok"] = bool(np.allclose(execute(prog, x), ref,
+                                          atol=1e-4, rtol=1e-5))
+
+    try:
+        import jax
+        from repro.launch.mesh import auto_axis_types
+        n_dev = jax.device_count()
+    except Exception:
+        n_dev = 0
+    if n_dev >= shards:
+        mesh = jax.make_mesh((shards,), ("model",), **auto_axis_types(1))
+        y_pipe = execute(prog, x, backend="shard_map", mesh=mesh)
+        y_ser = execute(prog, x, backend="shard_map", mesh=mesh,
+                        pipeline=False)
+        entry["device_bitwise_ok"] = bool(
+            np.array_equal(np.asarray(y_pipe), np.asarray(y_ser)))
+        entry["device_oracle_ok"] = bool(
+            np.allclose(np.asarray(y_pipe), ref, atol=2e-4, rtol=1e-4))
+        from repro.core.program import make_program_spmv_fn
+        xs = prog.x_to_device(np.asarray(x, dtype=np.float32))
+        for key, flag in (("pipelined", True), ("serial", False)):
+            fn = make_program_spmv_fn(prog, mesh, pipeline=flag)
+            with mesh:
+                jax.block_until_ready(fn(xs))   # compile outside the clock
+                fn_t = []
+                for _ in range(5):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(fn(xs))
+                    fn_t.append(time.perf_counter() - t0)
+            entry.setdefault("device_host_us_per_spmv", {})[key] = \
+                round(float(np.median(fn_t)) * 1e6, 1)
+    return entry
+
+
+def check_pipeline(entry: dict, *, fast: bool = False) -> bool:
+    """Acceptance gates for the pipeline workload: the best-achievable
+    pipelined device-path latency beats the best-achievable serial one by
+    >= 1.15x on the recorded full run (a strict win suffices at CI-smoke
+    scale), the pipelined plan's program reproduces the oracle, and —
+    when enough devices were visible to run the real shard_map path —
+    the two schedules are bitwise-equal."""
+    bar = 1.0 if fast else 1.15
+    sp = entry.get("model_device_cycles", {}).get("speedup", 0.0)
+    return ((sp > bar if fast else sp >= bar) and
+            entry.get("oracle_ok", False) and
+            entry.get("device_bitwise_ok", True) and
+            entry.get("device_oracle_ok", True))
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--workload", choices=("mixed", "powerlaw_tail"),
+    ap.add_argument("--workload",
+                    choices=("mixed", "powerlaw_tail", "pipeline"),
                     default="mixed",
                     help="mixed: per-shard vs best-global on "
                          "mixed_structure; powerlaw_tail: split vs best "
-                         "non-split on monster rows")
+                         "non-split on monster rows; pipeline: serial vs "
+                         "pipelined device schedule on halo_spikes")
     ap.add_argument("--m", type=int, default=None, help="matrix dimension "
                     "(default: per-workload)")
     ap.add_argument("--nnz-per-row", type=int, default=33,
@@ -273,7 +399,12 @@ def main() -> int:
     args = ap.parse_args()
 
     t0 = time.perf_counter()
-    if args.workload == "powerlaw_tail":
+    if args.workload == "pipeline":
+        kwargs = {} if args.m is None else {"M": args.m}
+        entry = run_pipeline_bench(shards=args.shards, seed=args.seed,
+                                   fast=args.fast, **kwargs)
+        ok = check_pipeline(entry, fast=args.fast)
+    elif args.workload == "powerlaw_tail":
         kwargs = {} if args.m is None else {"M": args.m}
         entry = run_split_bench(shards=args.shards, probe=args.probe,
                                 seed=args.seed, fast=args.fast, **kwargs)
@@ -292,6 +423,30 @@ def main() -> int:
 
     if args.json:
         print(json.dumps(entry, indent=2))
+    elif args.workload == "pipeline":
+        print(f"hetero bench: {entry['workload']} M={entry['M']} "
+              f"nnz={entry['nnz']} shards={entry['shards']}")
+        print(f"  serial plan : {entry['serial_plan']}")
+        print(f"  pipelined   : {entry['pipelined_plan']} "
+              f"(exchanges {entry['shard_exchanges']})")
+        md = entry["model_device_cycles"]
+        bar = "> 1.0 (fast)" if args.fast else ">= 1.15"
+        print(f"  device path : {md['serial']} -> {md['pipelined']} "
+              f"cycles ({md['speedup']}x, bar {bar})")
+        t = entry["pipelined_terms"]
+        print(f"  terms       : kernel {t['kernel_cycles']} = local "
+              f"{t['local_slice_cycles']} || comm {t['comm_cycles']} "
+              f"then remote {t['remote_slice_cycles']}")
+        if "device_bitwise_ok" in entry:
+            h = entry.get("device_host_us_per_spmv", {})
+            print(f"  shard_map   : bitwise_ok={entry['device_bitwise_ok']} "
+                  f"oracle_ok={entry['device_oracle_ok']} host "
+                  f"{h.get('serial')} -> {h.get('pipelined')} us/SpMV "
+                  f"(reference only)")
+        budget = f", wall {wall:.1f}s <= {args.budget_seconds:.0f}s" \
+            if args.budget_seconds is not None else f", wall {wall:.1f}s"
+        print(f"  -> {'PASS' if ok else 'FAIL'} "
+              f"(oracle_ok={entry['oracle_ok']}{budget})")
     elif args.workload == "powerlaw_tail":
         print(f"hetero bench: {entry['workload']} M={entry['M']} "
               f"nnz={entry['nnz']} shards={entry['shards']}")

@@ -31,6 +31,13 @@ bench and records the split-vs-best-non-split kernel-slot headline
 (acceptance bar: >= 1.1x):
 
     PYTHONPATH=src python -m benchmarks.perf_probe --split
+
+Pipeline mode runs the exchange-bound halo_spikes scenario and records
+the serial-vs-pipelined device-path headline (acceptance bar: >= 1.15x);
+the forced 512-device host platform lets the real shard_map executor
+verify the two schedules bitwise-equal as part of the same run:
+
+    PYTHONPATH=src python -m benchmarks.perf_probe --pipeline
 """
 from __future__ import annotations
 
@@ -209,6 +216,31 @@ def run_split_probe(out: str | None) -> int:
     return 0 if ok else 1
 
 
+def run_pipeline_probe(out: str | None) -> int:
+    """Record the pipelined-executor headline in ``BENCH_emu.json``.
+
+    Runs the full exchange-bound scenario (see ``benchmarks/hetero_bench
+    .py --workload pipeline``) and appends its entry; exit status is the
+    bench's acceptance gate (best-achievable pipelined device-path
+    latency >= 1.15x better than best-achievable serial, oracle
+    reproduced, shard_map pipelined == serial bitwise).  Because this
+    module forces a many-device host platform, the real shard_map
+    bitwise check always runs here.
+    """
+    from benchmarks.hetero_bench import check_pipeline, run_pipeline_bench
+    entry = run_pipeline_bench()
+    ok = check_pipeline(entry)
+    path = append_bench_entry(entry, out)
+    print(json.dumps(entry, indent=2))
+    md = entry["model_device_cycles"]
+    print(f"# pipeline: {entry['serial_plan']} serial vs "
+          f"{entry['pipelined_plan']} pipelined; device-path speedup "
+          f"{md['speedup']}x (bar >= 1.15), bitwise "
+          f"{entry.get('device_bitwise_ok')} -> "
+          f"{'PASS' if ok else 'FAIL'}; recorded in {path}")
+    return 0 if ok else 1
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("arch", nargs="?")
@@ -226,6 +258,10 @@ def main():
                     help="run the power-law-tail split-SpMV bench and "
                          "record headline numbers (benchmarks/hetero_bench"
                          ".py --workload powerlaw_tail)")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="run the exchange-bound pipelined-executor bench "
+                         "and record headline numbers (benchmarks/"
+                         "hetero_bench.py --workload pipeline)")
     ap.add_argument("--scale", type=float, default=1.0,
                     help="fig8 matrix scale for the vectorized timing")
     ap.add_argument("--ref-scale", type=float, default=0.02,
@@ -252,6 +288,8 @@ def main():
         sys.exit(run_hetero_probe(args.out))
     if args.split:
         sys.exit(run_split_probe(args.out))
+    if args.pipeline:
+        sys.exit(run_pipeline_probe(args.out))
     if args.arch is None or args.shape is None:
         ap.error("arch and shape are required unless --emu is given")
 

@@ -45,7 +45,7 @@ from .partition import Partition, make_partition
 from .reorder import REORDERINGS, reordering_permutation
 from .sparse_matrix import CSRMatrix, ELL_LANE, ELL_SUBLANE, csr_from_coo, \
     csr_row_nnz, hyb_cap_width
-from .spmv import PLAN_KERNELS, SpmvPlan
+from .spmv import PLAN_EXCHANGES, PLAN_KERNELS, SpmvPlan
 from repro.kernels.ops import SEG_CHUNK
 
 __all__ = ["DEFAULT_PROBE", "KERNELS", "SPLIT_CORES", "SPLIT_MIN_SPAN",
@@ -53,7 +53,8 @@ __all__ = ["DEFAULT_PROBE", "KERNELS", "SPLIT_CORES", "SPLIT_MIN_SPAN",
            "PlanCost", "RankedPlan", "PlanChoice", "extract_features",
            "extract_shard_features", "estimate_cost", "autotune",
            "feature_key", "kernel_shard_costs", "select_shard_kernels",
-           "split_meta"]
+           "exchange_shard_costs", "select_shard_exchanges",
+           "remote_row_share", "device_path_model", "split_meta"]
 
 #: Bases the autotuner re-ranks with the Emu timeline simulator when the
 #: caller does not pass ``probe``.  Probing is on by default since the
@@ -69,6 +70,17 @@ _W_PAD = 0.02
 #: Cycles charged per x element moved by the collective exchange (halo
 #: all-to-all vs all-gather) — again sub-dominant, decisive within a base.
 _W_COMM = 0.25
+#: Relative per-element cost of the two exchange mechanisms.  A halo
+#: element is gathered through the send tables (indexed read on the
+#: sender, positioned write on the reader) — ``_W_EXCH_GATHER`` each; an
+#: all-gather element streams contiguously with no index math —
+#: ``_W_EXCH_STREAM`` each.  A shard whose halo would cover more than
+#: ``_W_EXCH_STREAM/_W_EXCH_GATHER`` of the padded vector is cheaper on
+#: full replication — exactly the skewed shards of §IV; banded shards
+#: keep the exact-entries halo.  ``select_shard_exchanges`` is the
+#: per-shard argmin of these two columns.
+_W_EXCH_GATHER = 2.0
+_W_EXCH_STREAM = 1.0
 
 #: Kernel formats a shard stage may select, in tie-break preference order
 #: — alias of the single definition in ``spmv.PLAN_KERNELS`` (also aliased
@@ -360,7 +372,15 @@ class PlanCost:
     ``ell``/``seg``/``hyb`` kernels (the field name predates the per-shard
     refactor and is kept for JSON back-compatibility);
     ``comm_cycles`` the (down-weighted) collective-volume term that
-    separates ``halo``/``allgather``.  ``total`` is the ranking key.
+    separates ``halo``/``allgather`` — since the per-shard exchange axis
+    it is the hottest reader's weighted ingest under the plan's
+    (possibly per-shard) policies.  ``overlap_cycles`` is the part of
+    the schedule the pipelined executor hides: the smaller of the comm
+    term and the local-slice share of the kernel term (rows with no
+    remote reads execute while the collective is in flight), and
+    ``total = max(issue, ingress) + migration + padding + comm -
+    overlap`` is the ranking key.  ``overlap_cycles`` defaults to 0.0 so
+    JSON written before the pipelined executor still loads.
     """
 
     issue_cycles: float
@@ -369,6 +389,7 @@ class PlanCost:
     padding_cycles: float
     comm_cycles: float
     total: float
+    overlap_cycles: float = 0.0
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -491,11 +512,13 @@ def _base_metrics(A: CSRMatrix, part: Partition, layout: str,
         pair_counts = np.zeros((S, S), dtype=np.int64)
         np.add.at(pair_counts, (up, xl.owner_of(ucol)), 1)
         H = int(pair_counts.max())
+        halo_per_shard = pair_counts.sum(axis=1).astype(np.float64)
     else:
         H = 0
+        halo_per_shard = np.zeros(S, dtype=np.float64)
     return {"issue": issue, "ingress": ingress, "migration": migration,
             "halo_elems": S * max(H, 1), "allgather_elems": xl.padded_length(),
-            "part": part}
+            "halo_per_shard": halo_per_shard, "part": part}
 
 
 def kernel_shard_costs(A: CSRMatrix, part: Partition) -> dict:
@@ -607,6 +630,130 @@ def _majority_kernel(sel: tuple) -> str:
     return max(KERNELS, key=lambda k: (counts[k], -KERNELS.index(k)))
 
 
+def exchange_shard_costs(A: CSRMatrix, part: Partition,
+                         layout="block") -> dict:
+    """Per-shard weighted exchange cost of both policies.
+
+    Returns ``{policy: (S,) float64}`` — the elements reader shard p
+    ingests under each policy, weighted by the mechanism's per-element
+    cost: ``halo`` counts p's unique active remote columns (zero-valued
+    stored entries excluded, matching the executor's tables) at
+    ``_W_EXCH_GATHER`` each; ``allgather`` counts the full padded vector
+    at ``_W_EXCH_STREAM`` each.  The per-shard argmin is
+    :func:`select_shard_exchanges`; the plan cost's comm term takes the
+    hottest reader (:func:`_assemble_cost`).  ``layout`` may be a layout
+    name or a built :class:`~repro.core.layout.VectorLayout`.
+    """
+    S = part.num_shards
+    xl = layout if hasattr(layout, "owner_of") else \
+        make_layout(layout, A.ncols, S)
+    rows_of_nnz = np.repeat(np.arange(A.nrows), csr_row_nnz(A))
+    home = part.owner_of_rows(A.nrows)[rows_of_nnz]
+    owners = xl.owner_of(A.col_index)
+    rem = (A.values != 0) & (owners != home)
+    halo_per = np.zeros(S, dtype=np.float64)
+    if rem.any():
+        key = home[rem].astype(np.int64) * A.ncols + \
+            A.col_index[rem].astype(np.int64)
+        uniq = np.unique(key)
+        np.add.at(halo_per, uniq // A.ncols, 1.0)
+    return {"halo": _W_EXCH_GATHER * halo_per,
+            "allgather": np.full(S, _W_EXCH_STREAM * float(xl.padded_length()),
+                                 dtype=np.float64)}
+
+
+def select_shard_exchanges(A: CSRMatrix, part: Partition, layout="block",
+                           costs: dict | None = None) -> tuple:
+    """Per-shard argmin of :func:`exchange_shard_costs` (ties prefer the
+    earlier entry of :data:`~repro.core.spmv.PLAN_EXCHANGES` — the
+    exact-entries halo)."""
+    costs = exchange_shard_costs(A, part, layout) if costs is None else costs
+    return tuple(
+        min(PLAN_EXCHANGES,
+            key=lambda e: (costs[e][p], PLAN_EXCHANGES.index(e)))
+        for p in range(part.num_shards))
+
+
+def _majority_exchange(sel: tuple) -> str:
+    counts = {e: 0 for e in PLAN_EXCHANGES}
+    for e in sel:
+        counts[e] += 1
+    return max(PLAN_EXCHANGES,
+               key=lambda e: (counts[e], -PLAN_EXCHANGES.index(e)))
+
+
+def remote_row_share(A: CSRMatrix, part: Partition,
+                     layout="block") -> np.ndarray:
+    """(S,) fraction of each shard's stored entries living in rows that
+    read at least one active remote x entry.
+
+    This is the pipelined executor's slice split exactly
+    (``program._row_remote_flags``): entries in all-local rows run in
+    the local pass — issuable while the exchange is in flight — so
+    ``1 - share`` of a shard's kernel slots can hide behind the
+    collective.  ``layout`` may be a name or a built layout.
+    """
+    S = part.num_shards
+    xl = layout if hasattr(layout, "owner_of") else \
+        make_layout(layout, A.ncols, S)
+    per_row = csr_row_nnz(A)
+    rows_of_nnz = np.repeat(np.arange(A.nrows), per_row)
+    home = part.owner_of_rows(A.nrows)[rows_of_nnz]
+    owners = xl.owner_of(A.col_index)
+    rem = (A.values != 0) & (owners != home)
+    row_remote = np.zeros(A.nrows, dtype=bool)
+    row_remote[rows_of_nnz[rem]] = True
+    share = np.zeros(S, dtype=np.float64)
+    for p in range(S):
+        r0, r1 = int(part.starts[p]), int(part.starts[p + 1])
+        nnz_p = int(A.row_ptr[r1] - A.row_ptr[r0])
+        if nnz_p:
+            share[p] = float(per_row[r0:r1][row_remote[r0:r1]].sum()) / nnz_p
+    return share
+
+
+def device_path_model(A: CSRMatrix, part: Partition, plan: SpmvPlan,
+                      emu: EmuConfig | None = None) -> dict:
+    """Modeled device-path (SPMD) latency of one SpMV, serial vs pipelined.
+
+    The :class:`PlanCost` totals model the Emu machine, where the kernel
+    term is *total work* (summed over nodelets).  The shard_map device
+    path is SPMD: one step's latency is the **slowest shard's** kernel
+    time plus the collective.  This helper prices exactly that from the
+    same per-shard tables:
+
+    * ``serial`` — the pre-pipeline schedule: the exchange completes
+      before any kernel work, so latency is
+      ``max_p(slots_p) + comm``.
+    * ``pipelined`` — the local slice (all-local rows,
+      :func:`remote_row_share`) runs during the collective:
+      ``max(max_p(local_p), comm) + max_p(remote_p)``.
+
+    ``A``/``part`` must already be in the plan's reordered index space.
+    Returns the two latencies (cycles) plus every term.
+    """
+    emu = emu or EmuConfig(nodelets=plan.num_shards)
+    costs = kernel_shard_costs(A, part)
+    slots = np.array([costs[k][p] for p, k in
+                      enumerate(plan.resolved_shard_kernels())],
+                     dtype=np.float64)
+    share = remote_row_share(A, part, plan.layout)
+    ex = exchange_shard_costs(A, part, layout=plan.layout)
+    per = np.array([ex[e][p] for p, e in
+                    enumerate(plan.resolved_shard_exchanges())],
+                   dtype=np.float64)
+    comm = _W_COMM * max(float(per.max()), 1.0)
+    t_all = _W_PAD * float(slots.max()) * emu.access_cycles
+    t_loc = _W_PAD * float((slots * (1.0 - share)).max()) * emu.access_cycles
+    t_rem = _W_PAD * float((slots * share).max()) * emu.access_cycles
+    serial = t_all + comm
+    pipelined = max(t_loc, comm) + t_rem
+    return {"serial_cycles": serial, "pipelined_cycles": pipelined,
+            "kernel_cycles": t_all, "local_slice_cycles": t_loc,
+            "remote_slice_cycles": t_rem, "comm_cycles": comm,
+            "speedup": serial / max(pipelined, 1e-12)}
+
+
 def _permute_weights(w: np.ndarray, perm: np.ndarray | None) -> np.ndarray:
     """Carry per-column weights through a symmetric reordering.
 
@@ -707,23 +854,47 @@ def estimate_cost(csr: CSRMatrix, plan: SpmvPlan, *,
             np.asarray(col_weight, dtype=np.float64), perm)
     part = make_partition(A, plan.num_shards, plan.distribution)
     base = _base_metrics(A, part, plan.layout, emu, col_weight=w)
-    slots = _plan_kernel_slots(kernel_shard_costs(A, part), plan)
-    return _assemble_cost(base, slots, plan.exchange, emu)
+    costs = kernel_shard_costs(A, part)
+    sk = plan.resolved_shard_kernels()
+    slots_p = np.array([costs[k][p] for p, k in enumerate(sk)],
+                       dtype=np.float64)
+    share = remote_row_share(A, part, plan.layout)
+    local_slots = float((slots_p * (1.0 - share)).sum())
+    return _assemble_cost(base, float(slots_p.sum()),
+                          plan.resolved_shard_exchanges(), emu,
+                          local_slots=local_slots)
 
 
-def _assemble_cost(base: dict, pad_slots: float, exchange: str,
-                   emu: EmuConfig) -> PlanCost:
+def _assemble_cost(base: dict, pad_slots: float, policies, emu: EmuConfig,
+                   local_slots: float = 0.0) -> PlanCost:
+    """Assemble a :class:`PlanCost` under the pipelined schedule.
+
+    ``policies`` is a per-shard exchange tuple (or one uniform policy
+    string); the comm term is the hottest reader's weighted ingest —
+    ``_W_EXCH_GATHER`` per exact halo element vs ``_W_EXCH_STREAM`` per
+    streamed full-replication element.  ``local_slots`` is the kernel
+    slot share living in all-local rows: the pipelined executor runs
+    those while the collective is in flight, so the smaller of that
+    slice and the comm term comes off the serial total.
+    """
     pad = _W_PAD * pad_slots * emu.access_cycles
-    elems = base["halo_elems"] if exchange == "halo" else \
-        base["allgather_elems"]
-    comm = _W_COMM * float(elems)
+    halo_per = base["halo_per_shard"]
+    ag = float(base["allgather_elems"])
+    if isinstance(policies, str):
+        policies = (policies,) * len(halo_per)
+    per_cost = [_W_EXCH_GATHER * float(halo_per[p]) if e == "halo"
+                else _W_EXCH_STREAM * ag
+                for p, e in enumerate(policies)]
+    comm = _W_COMM * max(max(per_cost), 1.0)
+    pad_local = min(_W_PAD * local_slots * emu.access_cycles, pad)
+    overlap = min(comm, pad_local)
     total = max(base["issue"], base["ingress"]) + base["migration"] + \
-        pad + comm
+        pad + comm - overlap
     return PlanCost(issue_cycles=float(base["issue"]),
                     ingress_cycles=float(base["ingress"]),
                     migration_cycles=float(base["migration"]),
                     padding_cycles=float(pad), comm_cycles=float(comm),
-                    total=float(total))
+                    total=float(total), overlap_cycles=float(overlap))
 
 
 # --------------------------------------------------------------------------
@@ -752,7 +923,11 @@ def autotune(csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
     shards, so the heterogeneous candidate's kernel term is never worse
     than any uniform kernel's on the same base, and strictly better
     exactly on the mixed-structure matrices the global plan loses on
-    (``benchmarks/hetero_bench.py``).  The model's top candidates are then
+    (``benchmarks/hetero_bench.py``).  When both exchange policies are in
+    play, each base likewise contributes mixed-exchange candidates
+    (:func:`select_shard_exchanges`, ``plan.shard_exchanges``) whenever
+    the per-shard argmin over :func:`exchange_shard_costs` disagrees
+    across shards.  The model's top candidates are then
     optionally re-ranked with a short empirical probe: the Emu timeline
     simulator (:func:`~repro.core.emu.run_spmv`) run on the ``probe`` best
     distinct (reordering, layout, distribution) bases.  Probed candidates
@@ -851,6 +1026,15 @@ def autotune(csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
                 key = (method, layout, dist)
                 bases[key] = _base_metrics(A, part, layout, emu,
                                            col_weight=weights[method])
+                share = remote_row_share(A, part, layout)
+                ex_sel = None
+                if per_shard and "halo" in exchanges \
+                        and "allgather" in exchanges:
+                    sel = select_shard_exchanges(A, part, layout)
+                    if len(set(sel)) > 1:  # uniform pick == existing plan
+                        ex_sel = sel
+                loc = {k: float((costs[k] * (1.0 - share)).sum())
+                       for k in kernels}
                 for kernel in kernels:
                     for exchange in exchanges:
                         plan = SpmvPlan(layout=layout, distribution=dist,
@@ -859,19 +1043,41 @@ def autotune(csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
                                         seed=seed)
                         cost = _assemble_cost(bases[key],
                                               float(costs[kernel].sum()),
-                                              exchange, emu)
+                                              exchange, emu,
+                                              local_slots=loc[kernel])
+                        candidates.append(RankedPlan(plan=plan, cost=cost))
+                    if ex_sel is not None:
+                        plan = SpmvPlan(layout=layout, distribution=dist,
+                                        reordering=method,
+                                        exchange=_majority_exchange(ex_sel),
+                                        kernel=kernel, num_shards=num_shards,
+                                        seed=seed, shard_exchanges=ex_sel)
+                        cost = _assemble_cost(bases[key],
+                                              float(costs[kernel].sum()),
+                                              ex_sel, emu,
+                                              local_slots=loc[kernel])
                         candidates.append(RankedPlan(plan=plan, cost=cost))
                 if shard_sel is not None:
                     slots = float(sum(costs[k][p]
                                       for p, k in enumerate(shard_sel)))
-                    for exchange in exchanges:
-                        plan = SpmvPlan(layout=layout, distribution=dist,
-                                        reordering=method, exchange=exchange,
-                                        kernel=_majority_kernel(shard_sel),
-                                        num_shards=num_shards, seed=seed,
-                                        shard_kernels=shard_sel)
+                    slots_loc = float(sum(costs[k][p] * (1.0 - share[p])
+                                          for p, k in enumerate(shard_sel)))
+                    hetero_ex = list(exchanges)
+                    if ex_sel is not None:
+                        hetero_ex.append(ex_sel)
+                    for exchange in hetero_ex:
+                        uniform = isinstance(exchange, str)
+                        plan = SpmvPlan(
+                            layout=layout, distribution=dist,
+                            reordering=method,
+                            exchange=exchange if uniform
+                            else _majority_exchange(exchange),
+                            kernel=_majority_kernel(shard_sel),
+                            num_shards=num_shards, seed=seed,
+                            shard_kernels=shard_sel,
+                            shard_exchanges=None if uniform else exchange)
                         cost = _assemble_cost(bases[key], slots, exchange,
-                                              emu)
+                                              emu, local_slots=slots_loc)
                         candidates.append(RankedPlan(plan=plan, cost=cost))
 
     candidates.sort(key=lambda r: r.cost.total)

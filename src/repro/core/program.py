@@ -18,10 +18,11 @@ makes that selectable:
   (all-gather vs halo all-to-all) is part of the program, not of any
   particular executor.
 * :func:`relower` — rebuilds **only** the stages whose kernel changed
-  (same base: layout/distribution/reordering/exchange), sharing every
-  other stage with the old program.  This is the per-shard
-  double-buffered swap the serving rebalancer uses for hot-shard-only
-  re-plans (``serve/rebalance.py``).
+  (same base: layout/distribution/reordering), sharing every other stage
+  with the old program; exchange-policy changes (uniform or per-shard)
+  share *all* stages.  This is the per-shard double-buffered swap the
+  serving rebalancer uses for hot-shard-only re-plans
+  (``serve/rebalance.py``).
 * :func:`execute` — one entry point, three backends:
 
   - ``"numpy"``: the exact host oracle (float64, bitwise-stable batched
@@ -316,21 +317,28 @@ def lower(csr: CSRMatrix, plan: SpmvPlan) -> SpmvProgram:
         stages=stages, perm=perm)
 
 
-_BASE_FIELDS = ("layout", "distribution", "reordering", "exchange",
-                "num_shards", "seed")
+#: Plan fields that force a full :func:`lower` when they change.  The
+#: exchange (uniform or per-shard) is *not* one of them: stages, the
+#: partition and the traffic accounting are exchange-independent — only
+#: the executor's prologue and column remaps move, and those are rebuilt
+#: lazily per program object — so an exchange flip relowers with every
+#: stage shared (the rebalancer's cheapest partial move).
+_BASE_FIELDS = ("layout", "distribution", "reordering", "num_shards", "seed")
 
 
 def relower(program: SpmvProgram, new_plan: SpmvPlan) -> SpmvProgram:
     """Re-lower only the stages whose kernel (or effective split count)
     changed, keeping the same base.
 
-    The base (layout / distribution / reordering / exchange / shards /
-    seed) must match the incumbent plan — everything structural (matrix,
-    partition, layouts, traffic) is shared, and unchanged stages are the
-    *same objects* as the old program's.  This is what makes the serving
-    rebalancer's hot-shard-only swap cheap: only the re-kerneled shards
-    pay a slab rebuild, and the old program keeps serving until the new
-    one validates.
+    The base (layout / distribution / reordering / shards / seed) must
+    match the incumbent plan — everything structural (matrix, partition,
+    layouts, traffic) is shared, and unchanged stages are the *same
+    objects* as the old program's.  Exchange policy changes (uniform or
+    ``shard_exchanges``) share **all** stages: the exchange only selects
+    the executor prologue.  This is what makes the serving rebalancer's
+    hot-shard-only swap cheap: only the re-kerneled shards pay a slab
+    rebuild, and the old program keeps serving until the new one
+    validates.
     """
     old_plan = program.plan
     for f in _BASE_FIELDS:
@@ -442,19 +450,24 @@ def _execute_numpy_block(program: SpmvProgram, x: np.ndarray) -> np.ndarray:
 # --------------------------------------------------------------------------
 
 def _halo_tables(program: SpmvProgram):
-    """Structure-level halo exchange tables (format-independent).
+    """Structure-level exchange tables (format-independent, per policy).
 
-    Shard q sends to shard p exactly the x entries p's stored non-zeros
-    read from q (zero-valued stored entries excluded — they contribute
-    nothing, so they must not widen the halo).  Returns
-    ``(send_idx, pos_map, H)``: ``send_idx[q, p]`` are sender-local
-    indices (padded to H) and ``pos_map[p, g]`` the augmented-buffer
-    position of global id g on reader p (the buffer is
-    ``[x_local ++ recv]``, ``per + q * H + slot``).
+    For a reader p with exchange policy ``"halo"``, shard q sends exactly
+    the x entries p's stored non-zeros read from q (zero-valued stored
+    entries excluded — they contribute nothing, so they must not widen
+    the halo).  For a reader with policy ``"allgather"`` (per-shard mixed
+    programs), q sends *all* of its owned real columns — full replication
+    for that shard, delivered through the same single ``all_to_all`` that
+    serves the halo readers.  Returns ``(send_idx, pos_map, H)``:
+    ``send_idx[q, p]`` are sender-local indices (padded to H) and
+    ``pos_map[p, g]`` the augmented-buffer position of global id g on
+    reader p (the buffer is ``[x_local ++ recv]``, ``per + q * H +
+    slot``).
     """
     A, part, lay = program.matrix, program.partition, program.x_layout
     S = part.num_shards
     per = lay.padded_length() // S
+    policies = program.plan.resolved_shard_exchanges()
     rows_of_nnz = np.repeat(np.arange(A.nrows), np.diff(A.row_ptr))
     home = part.owner_of_rows(A.nrows)[rows_of_nnz]
     owners = lay.owner_of(A.col_index)
@@ -467,8 +480,19 @@ def _halo_tables(program: SpmvProgram):
         up, ucol = uniq // A.ncols, uniq % A.ncols
         uq = lay.owner_of(ucol)
         for p in range(S):
+            if policies[p] != "halo":
+                continue
             for q in range(S):
                 needed[p][q] = ucol[(up == p) & (uq == q)]
+    if any(e == "allgather" for e in policies):
+        col_owner = lay.owner_of(np.arange(A.ncols))
+        owned = [np.flatnonzero(col_owner == q).astype(np.int64)
+                 for q in range(S)]
+        for p in range(S):
+            if policies[p] == "allgather":
+                for q in range(S):
+                    if q != p:
+                        needed[p][q] = owned[q]
     H = max(max((ids.size for row in needed for ids in row), default=1), 1)
     send_idx = np.zeros((S, S, H), dtype=np.int32)
     pos_map = np.zeros((S, A.ncols), dtype=np.int32)
@@ -495,39 +519,74 @@ def _remap_cols(cols: np.ndarray, vals: np.ndarray, lay: VectorLayout,
     return out
 
 
-def _device_operands(program: SpmvProgram) -> dict:
-    """Stack every stage into the common-shape operand set of the one
-    shard_map program (cached on the program).
+def _row_remote_flags(program: SpmvProgram) -> np.ndarray:
+    """(nrows,) bool — rows with >= 1 stored non-zero reading a remote x
+    entry under the program's layout.  These are the rows whose partial
+    products must wait for the exchange; every other row is computable
+    from ``x_local`` alone (the pipelined executor's local slice)."""
+    A, part, lay = program.matrix, program.partition, program.x_layout
+    rows_of_nnz = np.repeat(np.arange(A.nrows), np.diff(A.row_ptr))
+    home = part.owner_of_rows(A.nrows)[rows_of_nnz]
+    owners = lay.owner_of(A.col_index)
+    rem = (A.values != 0) & (owners != home)
+    flags = np.zeros(A.nrows, dtype=bool)
+    flags[rows_of_nnz[rem]] = True
+    return flags
 
-    Every format payload exists for every shard (zeros where unused)
-    so the per-shard ``lax.switch`` can trace each branch with uniform
-    shapes; ``kid`` selects the live one.  Split stages flatten their
-    (NS, Cs, L) slab into the shared seg (C, L) operand — the split
-    structure travels in the piece table, widened to 5 columns
-    [flat_chunk, lo, hi, row, split] (padded rows [0, 1, 0, 0, 0] are an
-    exact zero).  With ``exchange="halo"`` every column-id operand is
-    pre-remapped into the augmented ``[x_local ++ recv]`` buffer.
+
+def _row_masked_csr(sub: CSRMatrix, keep: np.ndarray) -> CSRMatrix:
+    """Same-shape CSR with the entries of non-kept rows dropped.
+
+    Row count (and shard-local row ids) are preserved so the masked
+    stage scatters into the same (R,) output as the full stage; only the
+    masked-out rows lower to empty rows."""
+    if keep.all():
+        return sub
+    per_row = np.diff(sub.row_ptr)
+    rows = np.repeat(np.arange(sub.nrows), per_row)
+    m = keep[rows]
+    counts = np.bincount(rows[m], minlength=sub.nrows)
+    row_ptr = np.zeros(sub.nrows + 1, dtype=np.int64)
+    np.cumsum(counts, out=row_ptr[1:])
+    return CSRMatrix(shape=sub.shape, values=sub.values[m],
+                     col_index=sub.col_index[m], row_ptr=row_ptr)
+
+
+def _masked_stage(sub: CSRMatrix, keep: np.ndarray,
+                  st: ShardStage) -> ShardStage:
+    """Lower one row-slice (local or remote) of a shard into the same
+    kernel family as its full stage — the executor-level stage split the
+    pipelined schedule runs."""
+    m = _row_masked_csr(sub, keep)
+    ell = seg = split = None
+    if st.kernel == "ell":
+        ell = csr_to_ell(m)
+    elif st.kernel == "hyb":
+        ell = kops.hyb_from_csr(m)
+    elif st.kernel == "seg":
+        seg = kops.seg_from_csr(m)
+    else:                                    # "split"
+        L = ((kops.SEG_CHUNK + ELL_LANE - 1) // ELL_LANE) * ELL_LANE
+        C = max(-(-m.nnz // L), 1)
+        ns = max(1, min(st.split.num_splits, C))
+        split = kops.split_from_csr(m, ns)
+    return ShardStage(shard=st.shard, kernel=st.kernel, rows=st.rows,
+                      row_offset=st.row_offset, nnz=m.nnz, ell=ell, seg=seg,
+                      split=split)
+
+
+def _stack_stages(stages, R: int, remap) -> dict:
+    """Stack a per-shard stage list into one uniform-shape operand set.
+
+    Every format payload exists for every shard (zeros where unused) so
+    the per-shard ``lax.switch`` can trace each branch with uniform
+    shapes.  Split stages flatten their (NS, Cs, L) slab into the shared
+    seg (C, L) operand — the split structure travels in the piece table,
+    widened to 5 columns [flat_chunk, lo, hi, row, split] (padded rows
+    [0, 1, 0, 0, 0] are an exact zero).  ``remap(cols, vals, p)`` maps
+    global column ids into the buffer this set's kernel pass reads.
     """
-    cached = getattr(program, "_device_ops_cache", None)
-    if cached is not None:
-        return cached
-    S = program.plan.num_shards
-    stages = program.stages
-    halo = program.plan.exchange == "halo"
-    lay = program.x_layout
-
-    if halo:
-        send_idx, pos_map, H = _halo_tables(program)
-    else:
-        send_idx = np.zeros((S, 1, 1), dtype=np.int32)
-        pos_map, H = None, 0
-
-    def remap(cols, vals, p):
-        if not halo:
-            return cols.astype(np.int32)
-        return _remap_cols(cols, vals, lay, p, pos_map[p])
-
-    R = int(max(_round_up(max(st.rows, 1), ELL_SUBLANE) for st in stages))
+    S = len(stages)
     ells = [st.ell for st in stages if st.ell is not None]
     W = max((e.width for e in ells), default=ELL_LANE)
     O = max((e.overflow_vals.size for e in ells), default=0)
@@ -549,7 +608,6 @@ def _device_operands(program: SpmvProgram) -> dict:
              max((s.n_pieces for s in spls), default=0))
     Pp = max(Pp, 1)
 
-    kid = np.zeros(S, dtype=np.int32)
     ell_data = np.zeros((S, R, W), dtype=np.float32)
     ell_cols = np.zeros((S, R, W), dtype=np.int32)
     ovf_rows = np.zeros((S, O), dtype=np.int32)
@@ -562,7 +620,6 @@ def _device_operands(program: SpmvProgram) -> dict:
     seg_pieces[:, :, 1] = 1           # (lo=1, hi=0, row=0, split=0) -> zero
 
     for p, st in enumerate(stages):
-        kid[p] = PROGRAM_KERNELS.index(st.kernel)
         if st.ell is not None:
             e = st.ell
             r, w = e.data.shape
@@ -596,11 +653,71 @@ def _device_operands(program: SpmvProgram) -> dict:
             seg_pieces[p, :n, 2] = s.piece_hi
             seg_pieces[p, :n, 3] = s.piece_row
             seg_pieces[p, :n, 4] = s.piece_split
-    cached = dict(kid=kid, ell_data=ell_data, ell_cols=ell_cols,
-                  ovf_rows=ovf_rows, ovf_cols=ovf_cols, ovf_vals=ovf_vals,
-                  seg_vals=seg_vals, seg_cols=seg_cols, seg_rows=seg_rows,
-                  seg_pieces=seg_pieces, send_idx=send_idx, R=R, halo_H=H,
-                  NS=NS)
+    return dict(ell_data=ell_data, ell_cols=ell_cols, ovf_rows=ovf_rows,
+                ovf_cols=ovf_cols, ovf_vals=ovf_vals, seg_vals=seg_vals,
+                seg_cols=seg_cols, seg_rows=seg_rows, seg_pieces=seg_pieces,
+                NS=NS)
+
+
+def _device_operands(program: SpmvProgram) -> dict:
+    """Build the pipelined executor's operand sets (cached on the program).
+
+    Each shard's kernel work is split by row into a **local slice**
+    (rows reading only columns the shard owns — runnable from
+    ``x_local`` before any communication) and a **remote slice** (rows
+    with at least one halo-dependent read — combined when the exchange
+    lands).  Both slices are lowered into the shard's own kernel family
+    and stacked into two uniform-shape operand sets (``loc_*`` /
+    ``rem_*``); ``row_remote`` selects, per output row, which pass owns
+    the result.  Column ids in the local set are pre-remapped to
+    ``x_local`` positions; the remote set's ids target the exchange
+    buffer (``[x_local ++ recv]`` for any program with a halo reader,
+    the gathered global x for uniform all-gather).
+    """
+    cached = getattr(program, "_device_ops_cache", None)
+    if cached is not None:
+        return cached
+    S = program.plan.num_shards
+    stages = program.stages
+    policies = program.plan.resolved_shard_exchanges()
+    use_a2a = any(e == "halo" for e in policies)
+    lay = program.x_layout
+
+    if use_a2a:
+        send_idx, pos_map, H = _halo_tables(program)
+    else:
+        send_idx = np.zeros((S, 1, 1), dtype=np.int32)
+        pos_map, H = None, 0
+
+    def remap_rem(cols, vals, p):
+        if not use_a2a:
+            return cols.astype(np.int32)
+        return _remap_cols(cols, vals, lay, p, pos_map[p])
+
+    def remap_loc(cols, vals, p):
+        # Local-slice entries only read columns owned by p; zero-valued
+        # (padding) slots keep position 0 — x_local[0] times 0 is 0.
+        out = lay.local_index(cols).astype(np.int32)
+        return np.where(vals != 0, out, 0).astype(np.int32)
+
+    R = int(max(_round_up(max(st.rows, 1), ELL_SUBLANE) for st in stages))
+    flags = _row_remote_flags(program)
+    row_remote = np.zeros((S, R), dtype=bool)
+    loc_stages, rem_stages = [], []
+    kid = np.zeros(S, dtype=np.int32)
+    for p, st in enumerate(stages):
+        kid[p] = PROGRAM_KERNELS.index(st.kernel)
+        rr = flags[st.row_offset: st.row_offset + st.rows]
+        row_remote[p, : st.rows] = rr
+        sub = program.partition.shard_csr(program.matrix, p)
+        loc_stages.append(_masked_stage(sub, ~rr, st))
+        rem_stages.append(_masked_stage(sub, rr, st))
+    loc = _stack_stages(loc_stages, R, remap_loc)
+    rem = _stack_stages(rem_stages, R, remap_rem)
+    cached = dict(kid=kid, send_idx=send_idx, row_remote=row_remote,
+                  R=R, halo_H=H, NS_loc=loc.pop("NS"), NS_rem=rem.pop("NS"))
+    cached.update({"loc_" + k: v for k, v in loc.items()})
+    cached.update({"rem_" + k: v for k, v in rem.items()})
     program._device_ops_cache = cached
     return cached
 
@@ -609,23 +726,41 @@ def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
-_OPERAND_KEYS = ("kid", "ell_data", "ell_cols", "ovf_rows", "ovf_cols",
-                 "ovf_vals", "seg_vals", "seg_cols", "seg_rows",
-                 "seg_pieces", "send_idx")
+_SET_KEYS = ("ell_data", "ell_cols", "ovf_rows", "ovf_cols", "ovf_vals",
+             "seg_vals", "seg_cols", "seg_rows", "seg_pieces")
+
+_OPERAND_KEYS = (("kid",)
+                 + tuple("loc_" + k for k in _SET_KEYS)
+                 + tuple("rem_" + k for k in _SET_KEYS)
+                 + ("send_idx", "row_remote"))
 
 
 def make_program_spmv_fn(program: SpmvProgram, mesh, axis: str = "model", *,
-                         use_kernel: bool = False, interpret: bool = True):
+                         use_kernel: bool = False, interpret: bool = True,
+                         pipeline: bool = True):
     """THE device executor: one shard_map function for any lowered program.
 
     Returns ``f(x_shards) -> y_shards`` with ``x_shards`` of shape
     (S, per_shard) or batched (S, per_shard, B) in layout order, and
     ``y_shards`` of shape (S, rows_pad[, B]) (slice each shard to its true
     ``rows_per_shard``, or use :func:`gather_b`).  The exchange prologue
-    follows ``plan.exchange`` (all-gather of x vs halo all-to-all of
-    exactly the needed entries), and each shard dispatches to its stage's
-    kernel (``ell`` / ``seg`` / ``hyb`` / ``split``) through a
+    follows ``plan.resolved_shard_exchanges()``: uniform all-gather when
+    every shard picks ``allgather``, otherwise one all-to-all whose
+    per-reader payload is the exact halo (``halo`` shards) or the full
+    replication (``allgather`` shards).  Each shard dispatches to its
+    stage's kernel (``ell`` / ``seg`` / ``hyb`` / ``split``) through a
     ``lax.switch`` — one SPMD program, heterogeneous per-shard execution.
+
+    The schedule is **pipelined** (the ROADMAP item-4 executor): each
+    shard's kernel work is pre-split by row into a local slice whose
+    pass reads only ``x_local`` — issuable while the collective is in
+    flight — and a remote slice whose pass waits for the exchange
+    buffer; ``row_remote`` selects per row which pass owns the result.
+    ``pipeline=False`` runs the *same* two passes behind an
+    ``optimization_barrier`` that ties the local pass's input to the
+    completed exchange — the pre-pipeline serial order, bitwise-equal
+    output by construction (identical operands and combine, scheduling
+    freedom removed).
 
     ``use_kernel=True`` runs the Pallas kernels (``interpret=True`` on
     CPU); the default runs the pure-jnp oracles, same as the old
@@ -639,8 +774,9 @@ def make_program_spmv_fn(program: SpmvProgram, mesh, axis: str = "model", *,
 
     ops = _device_operands(program)
     R = ops["R"]
-    NS = ops["NS"]
-    halo = program.plan.exchange == "halo"
+    NS_loc, NS_rem = ops["NS_loc"], ops["NS_rem"]
+    policies = program.plan.resolved_shard_exchanges()
+    use_a2a = any(e == "halo" for e in policies)
     kind = program.x_layout.kind
     if use_kernel:
         ell_op = partial(kops.ell_spmv, interpret=interpret,
@@ -654,10 +790,38 @@ def make_program_spmv_fn(program: SpmvProgram, mesh, axis: str = "model", *,
             return x_all.reshape((-1,) + x_all.shape[2:])
         return jnp.swapaxes(x_all, 0, 1).reshape((-1,) + x_all.shape[2:])
 
-    def shard_fn(kid, ed, ec, orow, ocol, oval, sv, sc, sr, sp, send_idx,
-                 x_shard):
+    def kernel_pass(kid, ed, ec, orow, ocol, oval, sv, sc, sr, sp, ns, xv):
+        """One slice's kernel dispatch against its own x buffer."""
+
+        def ell_branch(_):
+            return ell_op(ed[0], ec[0], xv)
+
+        def seg_branch(_):
+            pc = sp[0]
+            return kops.seg_spmv(
+                (sv[0], sc[0], sr[0], pc[:, 0], pc[:, 1], pc[:, 2],
+                 pc[:, 3]), xv, num_rows=R,
+                use_kernel=use_kernel, interpret=interpret)
+
+        def hyb_branch(_):
+            y = ell_op(ed[0], ec[0], xv)
+            xs = jnp.take(xv, ocol[0], axis=0)             # (O[, B])
+            v = oval[0][:, None] if xs.ndim == 2 else oval[0]
+            return y.at[orow[0]].add(v * xs)
+
+        def split_branch(_):
+            return kops.split_flat_spmv(
+                sv[0], sc[0], sr[0], sp[0], xv, num_rows=R, num_splits=ns,
+                use_kernel=use_kernel, interpret=interpret)
+
+        return jax.lax.switch(kid[0], (ell_branch, seg_branch, hyb_branch,
+                                       split_branch), None)
+
+    def shard_fn(kid, led, lec, lorow, locol, loval, lsv, lsc, lsr, lsp,
+                 red, rec, rorow, rocol, roval, rsv, rsc, rsr, rsp,
+                 send_idx, row_rem, x_shard):
         x_local = x_shard[0]                               # (per[, B])
-        if halo:
+        if use_a2a:
             to_send = jnp.take(x_local, send_idx[0], axis=0)   # (S, H[, B])
             recv = jax.lax.all_to_all(to_send, axis, split_axis=0,
                                       concat_axis=0, tiled=True)
@@ -667,29 +831,23 @@ def make_program_spmv_fn(program: SpmvProgram, mesh, axis: str = "model", *,
             x_all = jax.lax.all_gather(x_local, axis)      # (S, per[, B])
             xg = _to_global(x_all)
 
-        def ell_branch(_):
-            return ell_op(ed[0], ec[0], xg)
+        x_loc_in = x_local
+        if not pipeline:
+            # Serial order: tie the local pass's input to the completed
+            # exchange so no kernel work precedes the collective.  The
+            # values are untouched — identical operands, identical
+            # combine — so serial and pipelined runs are bitwise-equal;
+            # only the scheduling freedom differs.
+            x_loc_in, _ = jax.lax.optimization_barrier((x_local, xg))
 
-        def seg_branch(_):
-            pc = sp[0]
-            return kops.seg_spmv(
-                (sv[0], sc[0], sr[0], pc[:, 0], pc[:, 1], pc[:, 2],
-                 pc[:, 3]), xg, num_rows=R,
-                use_kernel=use_kernel, interpret=interpret)
-
-        def hyb_branch(_):
-            y = ell_op(ed[0], ec[0], xg)
-            xs = jnp.take(xg, ocol[0], axis=0)             # (O[, B])
-            v = oval[0][:, None] if xs.ndim == 2 else oval[0]
-            return y.at[orow[0]].add(v * xs)
-
-        def split_branch(_):
-            return kops.split_flat_spmv(
-                sv[0], sc[0], sr[0], sp[0], xg, num_rows=R, num_splits=NS,
-                use_kernel=use_kernel, interpret=interpret)
-
-        y = jax.lax.switch(kid[0], (ell_branch, seg_branch, hyb_branch,
-                                    split_branch), None)
+        y_loc = kernel_pass(kid, led, lec, lorow, locol, loval, lsv, lsc,
+                            lsr, lsp, NS_loc, x_loc_in)
+        y_rem = kernel_pass(kid, red, rec, rorow, rocol, roval, rsv, rsc,
+                            rsr, rsp, NS_rem, xg)
+        m = row_rem[0]
+        if y_rem.ndim == 2:                                # batched (R, B)
+            m = m[:, None]
+        y = jnp.where(m, y_rem, y_loc)
         return y[None]
 
     n_ops = len(_OPERAND_KEYS)
@@ -734,6 +892,7 @@ def probe_program(program: SpmvProgram, *, emu: EmuConfig | None = None,
 def execute(program: SpmvProgram, x: np.ndarray | None = None, *,
             backend: str = "numpy", mesh=None, axis: str = "model",
             use_kernel: bool = False, interpret: bool = True,
+            pipeline: bool = True,
             emu: EmuConfig | None = None, engine: str = "vectorized"):
     """Execute a lowered program — the single entry point for every backend.
 
@@ -743,7 +902,9 @@ def execute(program: SpmvProgram, x: np.ndarray | None = None, *,
       ``plan.num_shards`` devices along ``axis``); builds the one-shot
       :func:`make_program_spmv_fn`, runs it, and assembles the caller-order
       result — use ``make_program_spmv_fn`` directly for a reusable
-      compiled function.
+      compiled function.  ``pipeline=False`` forces the pre-pipeline
+      serial schedule (exchange completes before any kernel work) —
+      bitwise-equal to the default pipelined schedule.
     * ``backend="emu"``: ignores ``x`` and returns the
       :class:`~repro.core.emu.EmuResult` timeline probe.
     """
@@ -758,7 +919,8 @@ def execute(program: SpmvProgram, x: np.ndarray | None = None, *,
             raise ValueError("backend='shard_map' needs a mesh with "
                              "plan.num_shards devices")
         fn = make_program_spmv_fn(program, mesh, axis=axis,
-                                  use_kernel=use_kernel, interpret=interpret)
+                                  use_kernel=use_kernel, interpret=interpret,
+                                  pipeline=pipeline)
         xs = program.x_to_device(np.asarray(x, dtype=np.float32))
         with mesh:
             y = fn(xs)

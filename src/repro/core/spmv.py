@@ -59,6 +59,12 @@ __all__ = ["SpmvPlan", "DistributedSpmv", "build_distributed",
 #: layers cannot drift.
 PLAN_KERNELS = ("ell", "seg", "hyb", "split")
 
+#: Exchange policies a plan accepts (uniform or per-shard).  ``halo``
+#: first: on a cost tie the exact-entries exchange wins over full
+#: replication.  Single definition — ``plan.select_shard_exchanges`` and
+#: the executor's prologue both read this tuple.
+PLAN_EXCHANGES = ("halo", "allgather")
+
 
 @dataclasses.dataclass(frozen=True)
 class SpmvPlan:
@@ -84,8 +90,15 @@ class SpmvPlan:
     per-shard split count NS for ``split`` shards — one entry per shard,
     ignored (must be 1 or None-like) on non-split shards; ``None`` means
     the lowering asks ``plan.split_meta`` (the occupancy-driven
-    ``get_meta_param`` analogue) per shard.  Plans remain frozen,
-    hashable and JSON-round-trippable either way.
+    ``get_meta_param`` analogue) per shard.
+
+    ``shard_exchanges`` (optional) overrides the exchange **per shard**
+    — one entry per shard, each in :data:`PLAN_EXCHANGES`.  A skewed
+    shard that reads most of x pays less streaming the full replication
+    (``allgather``) than assembling a near-total halo; a banded shard
+    keeps the exact-entries ``halo``.  ``None`` (the default, and what
+    legacy JSON deserializes to) means every shard uses ``exchange``.
+    Plans remain frozen, hashable and JSON-round-trippable either way.
     """
 
     layout: Literal["block", "cyclic"] = "block"
@@ -97,6 +110,7 @@ class SpmvPlan:
     seed: int = 0
     shard_kernels: tuple | None = None
     split_counts: tuple | None = None
+    shard_exchanges: tuple | None = None
 
     def __post_init__(self):
         if self.shard_kernels is not None:
@@ -111,6 +125,13 @@ class SpmvPlan:
             if any(c < 1 for c in sc):
                 raise ValueError(f"split_counts must be >= 1, got {sc!r}")
             object.__setattr__(self, "split_counts", sc)
+        if self.shard_exchanges is not None:
+            se = tuple(self.shard_exchanges)  # JSON lists -> hashable tuple
+            bad = [e for e in se if e not in PLAN_EXCHANGES]
+            if bad:
+                raise ValueError(f"unknown shard exchange(s) {bad!r}; "
+                                 f"expected entries from {PLAN_EXCHANGES}")
+            object.__setattr__(self, "shard_exchanges", se)
 
     def resolved_shard_kernels(self) -> tuple:
         """The per-shard kernel tuple this plan lowers to (length S)."""
@@ -121,6 +142,16 @@ class SpmvPlan:
                 f"shard_kernels has {len(self.shard_kernels)} entries but "
                 f"num_shards={self.num_shards}")
         return self.shard_kernels
+
+    def resolved_shard_exchanges(self) -> tuple:
+        """The per-shard exchange tuple this plan executes with (length S)."""
+        if self.shard_exchanges is None:
+            return (self.exchange,) * self.num_shards
+        if len(self.shard_exchanges) != self.num_shards:
+            raise ValueError(
+                f"shard_exchanges has {len(self.shard_exchanges)} entries "
+                f"but num_shards={self.num_shards}")
+        return self.shard_exchanges
 
     def resolved_split_counts(self) -> tuple:
         """Per-shard split-count requests (length S; 0 = let the policy
@@ -136,10 +167,11 @@ class SpmvPlan:
     def retarget(self, num_shards: int) -> "SpmvPlan":
         """Re-target to a different shard count.
 
-        Per-shard kernel/split tuples are only meaningful for the shard
-        count they were tuned on, so a mismatched ``shard_kernels`` (or
-        ``split_counts``) is dropped (the plan falls back to its uniform
-        ``kernel`` / the split policy) instead of producing an
+        Per-shard kernel/split/exchange tuples are only meaningful for
+        the shard count they were tuned on, so a mismatched
+        ``shard_kernels`` (or ``split_counts``, or ``shard_exchanges``)
+        is dropped (the plan falls back to its uniform ``kernel`` / the
+        split policy / its uniform ``exchange``) instead of producing an
         unlowerable plan.
         """
         sk = self.shard_kernels
@@ -148,8 +180,12 @@ class SpmvPlan:
         sc = self.split_counts
         if sc is not None and len(sc) != num_shards:
             sc = None
+        se = self.shard_exchanges
+        if se is not None and len(se) != num_shards:
+            se = None
         return dataclasses.replace(self, num_shards=num_shards,
-                                   shard_kernels=sk, split_counts=sc)
+                                   shard_kernels=sk, split_counts=sc,
+                                   shard_exchanges=se)
 
     @classmethod
     def auto(cls, csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
@@ -202,9 +238,10 @@ def make_spmv_fn(dist, mesh: Mesh, axis: str = "model",
     """
     from .program import make_program_spmv_fn
     prog = dist
-    if prog.plan.exchange != "allgather":
+    if prog.plan.exchange != "allgather" or prog.plan.shard_exchanges:
         prog = lower_with_exchange(
-            prog, dataclasses.replace(prog.plan, exchange="allgather"))
+            prog, dataclasses.replace(prog.plan, exchange="allgather",
+                                      shard_exchanges=None))
     inner = make_program_spmv_fn(prog, mesh, axis=axis,
                                  use_kernel=use_kernel, interpret=interpret)
 
@@ -224,9 +261,11 @@ def make_seg_spmv_fn(dist, mesh: Mesh, axis: str = "model",
         raise ValueError("build_distributed was not run with plan.kernel='seg'")
     from .program import make_program_spmv_fn
     prog = dist
-    if prog.plan.exchange != "allgather":   # historical factory: all-gather
+    if prog.plan.exchange != "allgather" or prog.plan.shard_exchanges:
+        # historical factory: uniform all-gather
         prog = lower_with_exchange(
-            prog, dataclasses.replace(prog.plan, exchange="allgather"))
+            prog, dataclasses.replace(prog.plan, exchange="allgather",
+                                      shard_exchanges=None))
     inner = make_program_spmv_fn(prog, mesh, axis=axis,
                                  use_kernel=use_kernel, interpret=interpret)
     rows_pad = int(dist.rows_per_shard.max())
@@ -330,11 +369,12 @@ def make_halo_spmv_fn(dist, halo: HaloProgram, mesh: Mesh,
     """
     from .program import make_program_spmv_fn
     prog = dist
-    if prog.plan.exchange != "halo":
-        # Historical behaviour: this factory always produced the halo
-        # program for the plan's base, whatever plan.exchange said.
+    if prog.plan.exchange != "halo" or prog.plan.shard_exchanges:
+        # Historical behaviour: this factory always produced the uniform
+        # halo program for the plan's base, whatever plan.exchange said.
         prog = lower_with_exchange(
-            prog, dataclasses.replace(prog.plan, exchange="halo"))
+            prog, dataclasses.replace(prog.plan, exchange="halo",
+                                      shard_exchanges=None))
     inner = make_program_spmv_fn(prog, mesh, axis=axis,
                                  use_kernel=use_kernel, interpret=interpret)
 

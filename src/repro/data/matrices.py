@@ -26,7 +26,8 @@ import numpy as np
 from repro.core.sparse_matrix import CSRMatrix, csr_from_coo
 
 __all__ = ["PAPER_SUITE", "make_matrix", "banded", "arrow_fem", "powerlaw",
-           "rmat", "dense_blocks", "mixed_structure", "powerlaw_tail"]
+           "rmat", "dense_blocks", "mixed_structure", "powerlaw_tail",
+           "halo_spikes"]
 
 
 def _finish(rows, cols, vals, M, symmetric: bool) -> CSRMatrix:
@@ -95,6 +96,43 @@ def arrow_fem(M: int, nnz: int, *, hot_frac: float = 0.125,
     cols = np.concatenate([dst, np.arange(M)])
     vals = rng.standard_normal(rows.shape[0])
     return _finish(rows, cols, vals, M, symmetric=True)
+
+
+def halo_spikes(M: int, nnz: int, *, n_broad: int | None = None,
+                bandwidth: int = 8, broad_frac: float = 0.55,
+                seed: int = 0) -> CSRMatrix:
+    """Exchange-bound workload: a tight local band plus *broad-reader* rows.
+
+    The background is a narrow band (offsets within ``bandwidth``), so
+    under a contiguous row partition almost every background row reads
+    only columns its own shard owns — local-slice work the pipelined
+    executor can run while the exchange is in flight.  On top of it,
+    ``n_broad`` rows (spread evenly over the row range, so every shard
+    owns a few) each gather ``broad_frac`` of the nnz budget from
+    uniform-random columns across the whole index range.  Each shard's
+    unique remote-column set is then large (the broad rows' gathers)
+    while its remote *rows* are few — the regime where the exchange term
+    rivals the kernel term and overlap pays, unlike ``mixed_structure``
+    (short scattered rows: every row slightly remote, nothing to hide
+    the exchange behind) or ``powerlaw_tail`` (uniform scattered
+    background, no local slice at all).
+    """
+    rng = np.random.default_rng(seed)
+    if n_broad is None:
+        n_broad = max(M // 128, 8)
+    n_brd = int(nnz * broad_frac)
+    n_bg = max(nnz - n_brd - M, 0)
+    bg_rows = rng.integers(0, M, n_bg)
+    bg_cols = np.clip(bg_rows + rng.integers(-bandwidth, bandwidth + 1,
+                                             n_bg), 0, M - 1)
+    broad_ids = (np.arange(n_broad) * M) // n_broad + M // (2 * n_broad)
+    brd_rows = np.repeat(broad_ids, n_brd // n_broad)
+    brd_cols = rng.integers(0, M, brd_rows.shape[0])
+    rows = np.concatenate([bg_rows, brd_rows, np.arange(M)])
+    cols = np.concatenate([bg_cols, brd_cols, np.arange(M)])
+    vals = np.concatenate([rng.standard_normal(n_bg + brd_rows.shape[0]),
+                           np.ones(M)])
+    return _finish(rows, cols, vals, M, symmetric=False)
 
 
 def powerlaw(M: int, nnz: int, *, alpha: float = 1.8, hub_frac: float = 0.4,

@@ -236,6 +236,8 @@ class SparseMatrixEngine:
         for n, m in self._matrices.items():
             s = {"plan": dataclasses.asdict(m.choice.plan),
                  "shard_kernels": list(m.dist.shard_kernels()),
+                 "shard_exchanges":
+                     list(m.choice.plan.resolved_shard_exchanges()),
                  "nnz": m.dist.matrix.nnz,
                  "migrations": m.dist.traffic.migrations,
                  "hotspot_share": m.dist.traffic.hotspot_share,

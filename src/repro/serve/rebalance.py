@@ -57,11 +57,11 @@ from repro.core.migration import shard_load_map
 from repro.core.partition import make_partition
 from repro.core.plan import KERNELS, PlanChoice, RankedPlan, \
     _active_submatrix, _permute_weights, autotune, estimate_cost, \
-    kernel_shard_costs
+    exchange_shard_costs, kernel_shard_costs
 from repro.core.program import SpmvProgram, lower, relower
 from repro.core.reorder import REORDERINGS, reordering_permutation
 from repro.core.sparse_matrix import CSRMatrix, csr_matvec
-from repro.core.spmv import SpmvPlan, local_spmv
+from repro.core.spmv import PLAN_EXCHANGES, SpmvPlan, local_spmv
 
 __all__ = ["RebalanceConfig", "RebalanceEvent", "LoadMonitor", "replan",
            "hot_shards", "probe_plan_seconds", "weighted_shard_load"]
@@ -135,8 +135,11 @@ class RebalanceEvent:
     """One detector trip: what was measured, decided, and (maybe) swapped.
 
     ``mode`` records which re-plan tier produced the decision:
-    ``"partial"`` (hot-shard kernel re-selection, only ``swapped_shards``
-    stages rebuilt) or ``"full"`` (budgeted traffic-weighted autotune).
+    ``"partial"`` (hot-shard kernel/exchange re-selection, only
+    ``swapped_shards`` stages rebuilt) or ``"full"`` (budgeted
+    traffic-weighted autotune).  ``exchange_flips`` lists the shards whose
+    exchange policy changed — those need no stage rebuild at all, only
+    the device-operand cache (exchange is not a lowering-base field).
     """
 
     request_index: int
@@ -151,6 +154,7 @@ class RebalanceEvent:
     reason: str
     mode: str = "full"
     swapped_shards: tuple = ()
+    exchange_flips: tuple = ()
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -353,23 +357,34 @@ def _try_partial_replan(csr: CSRMatrix, monitor: LoadMonitor,
                         current: PlanChoice, program: SpmvProgram,
                         w: np.ndarray, cfg: RebalanceConfig,
                         request_index: int):
-    """Hot-shard-only kernel re-selection; None when it does not apply.
+    """Hot-shard-only kernel/exchange re-selection; None when inapplicable.
 
-    The hot shards' kernels are re-derived from the *traffic-thinned*
-    structure (:func:`~repro.core.plan._active_submatrix` permuted into
-    the deployed program's order) against the **deployed** partition — the
-    format each hot shard would want for the entries the request stream
-    actually touches.  The gate is the load-weighted kernel-slot cost
-    (sum over shards of ``load_p * cost[kernel_p][p]``) improving by
-    ``cfg.min_gain``; the Emu drift oracle cannot see kernels, so the
-    analytic table is the authoritative metric here.  The candidate grid
-    is the full :data:`~repro.core.plan.KERNELS` — including the
-    split-nnz two-stage ``split`` family, so a shard that drifted onto a
-    monster-row hot-spot can be swapped onto split partials without a
-    full re-plan (the split count re-derives from
-    :func:`~repro.core.plan.split_meta` at relower time).  Only the
-    changed stages are rebuilt (:func:`~repro.core.program.relower`) and
-    the candidate must still reproduce ``csr_matvec`` before the swap.
+    Two independent axes, each with its own gate:
+
+    * **Kernel.**  The hot shards' kernels are re-derived from the
+      *traffic-thinned* structure (:func:`~repro.core.plan._active_submatrix`
+      permuted into the deployed program's order) against the **deployed**
+      partition — the format each hot shard would want for the entries the
+      request stream actually touches.  The gate is the load-weighted
+      kernel-slot cost (sum over shards of ``load_p * cost[kernel_p][p]``)
+      improving by ``cfg.min_gain``; the Emu drift oracle cannot see
+      kernels, so the analytic table is the authoritative metric here.
+      The candidate grid is the full :data:`~repro.core.plan.KERNELS` —
+      including the split-nnz two-stage ``split`` family, so a shard that
+      drifted onto a monster-row hot-spot can be swapped onto split
+      partials without a full re-plan (the split count re-derives from
+      :func:`~repro.core.plan.split_meta` at relower time).
+    * **Exchange.**  The hot shards' exchange policies are re-derived the
+      same way from :func:`~repro.core.plan.exchange_shard_costs` on the
+      thinned structure, gated on the load-weighted exchange cost
+      improving by ``cfg.min_gain``.  A flip rebuilds **no** stages at
+      all — exchange is not a lowering-base field, so ``relower`` shares
+      every stage and only the device-operand cache is re-derived.
+
+    An axis whose gate fails is reverted; the partial tier applies
+    whichever axes survive (``None`` when neither does).  Only the
+    kernel-changed stages are rebuilt (:func:`~repro.core.program.relower`)
+    and the candidate must still reproduce ``csr_matvec`` before the swap.
     """
     old_plan = current.plan
     if old_plan.num_shards != program.plan.num_shards:
@@ -383,30 +398,84 @@ def _try_partial_replan(csr: CSRMatrix, monitor: LoadMonitor,
         return None                       # uniform traffic: nothing local
     sub_r = sub if program.perm is None else \
         sub.permuted(program.perm, program.perm)
+
+    # -- kernel axis --------------------------------------------------------
     costs = kernel_shard_costs(sub_r, program.partition)
     old_k = old_plan.resolved_shard_kernels()
     new_k = list(old_k)
     for p in hot:
         new_k[p] = min(KERNELS, key=lambda k: (costs[k][p],
                                                KERNELS.index(k)))
-    if tuple(new_k) == tuple(old_k):
+    kernel_ok = tuple(new_k) != tuple(old_k)
+    if kernel_ok:
+        old_c = float(sum(load[p] * costs[k][p]
+                          for p, k in enumerate(old_k)))
+        new_c = float(sum(load[p] * costs[k][p]
+                          for p, k in enumerate(new_k)))
+        if not new_c < (1.0 - cfg.min_gain) * max(old_c, 1e-30):
+            kernel_ok = False
+    if not kernel_ok:
+        new_k = list(old_k)
+
+    # -- exchange axis ------------------------------------------------------
+    ex_costs = exchange_shard_costs(sub_r, program.partition,
+                                    layout=old_plan.layout)
+    old_e = old_plan.resolved_shard_exchanges()
+    new_e = list(old_e)
+    for p in hot:
+        new_e[p] = min(PLAN_EXCHANGES,
+                       key=lambda e: (ex_costs[e][p],
+                                      PLAN_EXCHANGES.index(e)))
+    ex_ok = tuple(new_e) != tuple(old_e)
+    if ex_ok:
+        old_ec = float(sum(load[p] * ex_costs[e][p]
+                           for p, e in enumerate(old_e)))
+        new_ec = float(sum(load[p] * ex_costs[e][p]
+                           for p, e in enumerate(new_e)))
+        if not new_ec < (1.0 - cfg.min_gain) * max(old_ec, 1e-30):
+            ex_ok = False
+    if not ex_ok:
+        new_e = list(old_e)
+
+    if not (kernel_ok or ex_ok):
         return None
-    old_c = float(sum(load[p] * costs[k][p] for p, k in enumerate(old_k)))
-    new_c = float(sum(load[p] * costs[k][p] for p, k in enumerate(new_k)))
-    if not new_c < (1.0 - cfg.min_gain) * max(old_c, 1e-30):
-        return None
-    new_plan = dataclasses.replace(old_plan, shard_kernels=tuple(new_k))
+
+    new_plan = old_plan
+    if kernel_ok:
+        new_plan = dataclasses.replace(new_plan, shard_kernels=tuple(new_k))
+    if ex_ok:
+        if len(set(new_e)) == 1:          # flips converged on one policy
+            new_plan = dataclasses.replace(new_plan, exchange=new_e[0],
+                                           shard_exchanges=None)
+        else:
+            new_plan = dataclasses.replace(new_plan,
+                                           shard_exchanges=tuple(new_e))
 
     dist = relower(program, new_plan)
     if not _validated(dist, csr, cfg, request_index):
         return None                       # fall through to the full tier
     changed = tuple(int(p) for p in range(len(old_k))
                     if new_k[p] != old_k[p])
+    flips = tuple(int(p) for p in range(len(old_e))
+                  if new_e[p] != old_e[p])
     choice = PlanChoice(
         features=current.features,
         ranking=(RankedPlan(plan=new_plan,
                             cost=estimate_cost(csr, new_plan)),),
         probed=0, shard_features=current.shard_features)
+    parts = []
+    if kernel_ok:
+        parts.append(
+            f"re-lowered hot shard(s) {list(changed)} "
+            f"({'/'.join(old_k[p] for p in changed)} -> "
+            f"{'/'.join(new_k[p] for p in changed)}), weighted kernel cost "
+            f"{(1.0 - new_c / max(old_c, 1e-30)):.1%} down")
+    if ex_ok:
+        parts.append(
+            f"flipped exchange on shard(s) {list(flips)} "
+            f"({'/'.join(old_e[p] for p in flips)} -> "
+            f"{'/'.join(new_e[p] for p in flips)}), weighted exchange cost "
+            f"{(1.0 - new_ec / max(old_ec, 1e-30)):.1%} down")
     event = RebalanceEvent(
         request_index=request_index, window_index=monitor.windows_closed,
         old_plan=old_plan, new_plan=new_plan,
@@ -414,10 +483,8 @@ def _try_partial_replan(csr: CSRMatrix, monitor: LoadMonitor,
         load_cv_after=_cv(weighted_shard_load(dist, w)),
         probe_old_seconds=None, probe_new_seconds=None,
         swapped=True, mode="partial", swapped_shards=changed,
-        reason=f"partial: re-lowered hot shard(s) {list(changed)} "
-        f"({'/'.join(old_k[p] for p in changed)} -> "
-        f"{'/'.join(new_k[p] for p in changed)}), weighted kernel cost "
-        f"{(1.0 - new_c / max(old_c, 1e-30)):.1%} down")
+        exchange_flips=flips,
+        reason="partial: " + "; ".join(parts))
     return dist, choice, event
 
 
@@ -470,13 +537,16 @@ def replan(csr: CSRMatrix, monitor: LoadMonitor, current: PlanChoice, *,
 
     old_s = probe_plan_seconds(csr, old_plan, w)
     new_s = probe_plan_seconds(csr, new_plan, w)
+    # Exchange is deliberately NOT a base field: flipping it re-lowers
+    # cheaply (every stage shared, only device operands rebuilt), so a
+    # kernel- or exchange-only winner goes through relower below.
     same_base = all(getattr(new_plan, f) == getattr(old_plan, f)
                     for f in ("layout", "distribution", "reordering",
-                              "exchange", "num_shards", "seed"))
+                              "num_shards", "seed"))
     if same_base:
         # The Emu oracle only separates bases; a same-base candidate
-        # (kernel-only change) is gated by the traffic-weighted analytic
-        # model instead.
+        # (kernel/exchange-only change) is gated by the traffic-weighted
+        # analytic model instead.
         old_t = estimate_cost(csr, old_plan, col_weight=w).total
         new_t = estimate_cost(csr, new_plan, col_weight=w).total
         if new_t > (1.0 - cfg.min_gain) * old_t:
@@ -502,6 +572,10 @@ def replan(csr: CSRMatrix, monitor: LoadMonitor, current: PlanChoice, *,
     changed = tuple(int(p) for p in range(num_shards)
                     if p >= len(old_k) or new_k[p] != old_k[p]) \
         if same_base else tuple(range(num_shards))
+    old_e = old_plan.resolved_shard_exchanges()
+    new_e = new_plan.resolved_shard_exchanges()
+    flips = tuple(int(p) for p in range(num_shards)
+                  if p >= len(old_e) or new_e[p] != old_e[p])
     cv_after = _cv(weighted_shard_load(dist, w))
     event = RebalanceEvent(
         request_index=request_index, window_index=monitor.windows_closed,
@@ -509,6 +583,7 @@ def replan(csr: CSRMatrix, monitor: LoadMonitor, current: PlanChoice, *,
         load_cv_before=cv_before, load_cv_after=cv_after,
         probe_old_seconds=old_s, probe_new_seconds=new_s,
         swapped=True, mode="full", swapped_shards=changed,
+        exchange_flips=flips,
         reason="swapped: modeled gain "
         f"{(1.0 - new_s / max(old_s, 1e-30)):.1%}")
     return dist, choice, event

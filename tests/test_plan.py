@@ -2,6 +2,7 @@
 correctness on the synthetic suite, and the regret bound vs the Emu model.
 """
 import json
+import pathlib
 
 import numpy as np
 import pytest
@@ -91,19 +92,29 @@ def test_ranking_sorted_and_full_grid():
     totals = [r.cost.total for r in choice.ranking]
     assert totals == sorted(totals)
     # uniform grid (kernels now include hyb) + optional per-shard
-    # heterogeneous candidates (one per base x exchange, only when the
-    # per-shard selection is genuinely mixed)
+    # heterogeneous candidates (per-shard kernels and/or per-shard
+    # exchange policies, only when the selection is genuinely mixed)
     from repro.core.plan import KERNELS
-    uniform = [r for r in choice.ranking if r.plan.shard_kernels is None]
-    hetero = [r for r in choice.ranking if r.plan.shard_kernels is not None]
+    uniform = [r for r in choice.ranking
+               if r.plan.shard_kernels is None
+               and r.plan.shard_exchanges is None]
+    hetero = [r for r in choice.ranking
+              if r.plan.shard_kernels is not None]
+    mixed_ex = [r for r in choice.ranking
+                if r.plan.shard_exchanges is not None]
     assert len(uniform) == 2 * 2 * len(REORDERINGS) * len(KERNELS) * 2
     for r in hetero:
         assert len(set(r.plan.shard_kernels)) > 1
         assert len(r.plan.shard_kernels) == 4
+    for r in mixed_ex:
+        assert len(set(r.plan.shard_exchanges)) > 1
+        assert len(r.plan.shard_exchanges) == 4
     assert choice.probed == 0
     # disabling per_shard reproduces the pre-refactor uniform-only grid
     uni_only = autotune(A, num_shards=4, probe=0, per_shard=False)
-    assert all(r.plan.shard_kernels is None for r in uni_only.ranking)
+    assert all(r.plan.shard_kernels is None
+               and r.plan.shard_exchanges is None
+               for r in uni_only.ranking)
 
 
 def test_per_shard_candidate_never_loses_to_uniform_on_same_base():
@@ -199,19 +210,11 @@ def test_plan_json_roundtrip_with_split_counts():
         SpmvPlan(num_shards=2, split_counts=(0, 1))
 
 
-LEGACY_CHOICE_JSON = """
-{"features": {"nrows": 64, "ncols": 64, "nnz": 128, "density": 0.03125,
-  "row_nnz_mean": 2.0, "row_nnz_cv": 0.5, "row_nnz_max": 4.0,
-  "tail_share": 0.03, "bandwidth_mean": 0.1, "bandwidth_p95": 0.3,
-  "hot_col_share": 0.25, "remote_frac": 0.5},
- "ranking": [{"plan": {"layout": "block", "distribution": "nonzero",
-   "reordering": "none", "exchange": "halo", "kernel": "seg",
-   "num_shards": 4, "seed": 0},
-   "cost": {"issue_cycles": 1.0, "ingress_cycles": 2.0,
-   "migration_cycles": 3.0, "padding_cycles": 4.0, "comm_cycles": 5.0,
-   "total": 15.0}, "probe_seconds": null, "probe_mbs": null}],
- "probed": 0}
-"""
+FIXTURES = pathlib.Path(__file__).parent / "fixtures"
+# Kept as a module constant for external reference; the frozen bytes now
+# live in tests/fixtures/ alongside the pre-per-shard-exchange one.
+LEGACY_CHOICE_JSON = (FIXTURES /
+                      "plan_choice_pre_shard_kernels.json").read_text()
 
 
 def test_legacy_plan_choice_json_loads_as_uniform_program():
@@ -231,6 +234,34 @@ def test_legacy_plan_choice_json_loads_as_uniform_program():
                                atol=1e-6)
     # and the new-style JSON of the same choice still round-trips
     assert PlanChoice.from_json(choice.to_json()) == choice
+
+
+def test_pre_shard_exchange_fixture_loads_and_executes():
+    """PlanChoice JSON frozen before the per-shard exchange axis existed
+    (plans carry shard_kernels/split_counts but no ``shard_exchanges``
+    key) must load as the uniform exchange policy it always meant,
+    round-trip through the new writer, and still execute."""
+    from repro.core.program import execute, lower
+    raw = (FIXTURES / "plan_choice_pre_shard_exchanges.json").read_text()
+    assert "shard_exchanges" not in raw
+    choice = PlanChoice.from_json(raw)
+    assert choice.plan.shard_exchanges is None
+    assert choice.plan.resolved_shard_exchanges() == ("halo",) * 4
+    assert choice.plan.shard_kernels == ("ell", "seg", "hyb", "split")
+    assert choice.plan.split_counts == (1, 1, 1, 2)
+    # the audit trail survives, including the ranked runner-up
+    assert choice.shard_features is not None
+    assert len(choice.shard_features) == 4
+    assert choice.ranking[1].plan.resolved_shard_exchanges() == \
+        ("allgather",) * 4
+    # new-style JSON of the same choice round-trips exactly
+    assert PlanChoice.from_json(choice.to_json()) == choice
+    # and the loaded plan lowers and matches the oracle end to end
+    A = make_matrix("ford1", scale=0.05)
+    prog = lower(A, choice.plan)
+    x = np.random.default_rng(0).standard_normal(A.ncols)
+    np.testing.assert_allclose(execute(prog, x), csr_to_dense(A) @ x,
+                               atol=1e-5)
 
 
 def test_plan_retarget_drops_mismatched_shard_kernels():

@@ -294,3 +294,93 @@ def test_executor_equivalence_4dev_subprocess():
     assert r.returncode == 0, r.stderr[-2000:]
     res = json.loads(r.stdout.strip().splitlines()[-1])
     assert all(res.values()), res
+
+
+_SUBPROC_PIPELINE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import json
+    import jax, numpy as np
+    from repro.core.program import execute, lower
+    from repro.core.sparse_matrix import csr_matvec
+    from repro.core.spmv import SpmvPlan
+    from repro.data.matrices import make_matrix, mixed_structure, \\
+        powerlaw_tail
+    from repro.launch.mesh import auto_axis_types
+
+    mesh = jax.make_mesh((4,), ("model",), **auto_axis_types(1))
+    A_mixed = mixed_structure(1024, 1024 * 8, seed=0)
+    A_tail = powerlaw_tail(1024, 2 * 4 * 1024, n_monster=4, seed=3)
+    A_cop = make_matrix("cop20k_A", scale=0.003)
+    # "drifted" cop20k_A: the serving-path failure mode — an ordering
+    # artifact scrambles the ingest-time structure out from under the plan
+    perm = np.random.default_rng(7).permutation(A_cop.nrows)
+    A_drift = A_cop.permuted(perm, perm)
+
+    cases = {
+        "mixed_structure": (A_mixed, SpmvPlan(
+            num_shards=4, exchange="halo",
+            shard_kernels=("ell", "seg", "hyb", "split"))),
+        "mixed_structure_mixed_exchange": (A_mixed, SpmvPlan(
+            num_shards=4, exchange="halo", kernel="seg",
+            shard_exchanges=("halo", "allgather", "halo", "allgather"))),
+        "powerlaw_tail": (A_tail, SpmvPlan(
+            num_shards=4, distribution="nonzero",
+            shard_kernels=("split", "split", "seg", "seg"))),
+        "cop20k_A_drifted_allgather": (A_drift, SpmvPlan(
+            num_shards=4, exchange="allgather", kernel="seg")),
+        "cop20k_A_drifted_halo": (A_drift, SpmvPlan(
+            num_shards=4, exchange="halo", kernel="hyb",
+            layout="cyclic", distribution="nonzero")),
+    }
+    out = {}
+    for name, (A, plan) in cases.items():
+        x = np.random.default_rng(5).standard_normal(A.ncols) \\
+            .astype(np.float32)
+        X = np.random.default_rng(6).standard_normal((A.ncols, 3)) \\
+            .astype(np.float32)
+        prog = lower(A, plan)
+        ref = csr_matvec(A, x)
+        y_pipe = np.asarray(execute(prog, x, backend="shard_map",
+                                    mesh=mesh))
+        y_ser = np.asarray(execute(prog, x, backend="shard_map", mesh=mesh,
+                                   pipeline=False))
+        Y_pipe = np.asarray(execute(prog, X, backend="shard_map",
+                                    mesh=mesh))
+        Y_ser = np.asarray(execute(prog, X, backend="shard_map", mesh=mesh,
+                                   pipeline=False))
+        out[name] = bool(np.array_equal(y_pipe, y_ser) and
+                         np.array_equal(Y_pipe, Y_ser) and
+                         np.allclose(y_pipe, ref, atol=1e-2, rtol=1e-4))
+    # Pallas-interpret kernels: the pipelined and serial schedules feed
+    # the same kernel bodies, so bitwise equality must hold there too
+    xk = np.random.default_rng(5).standard_normal(A_mixed.ncols) \\
+        .astype(np.float32)
+    prog = lower(A_mixed, SpmvPlan(
+        num_shards=4, exchange="halo",
+        shard_kernels=("ell", "seg", "hyb", "seg")))
+    y_pipe = np.asarray(execute(prog, xk, backend="shard_map", mesh=mesh,
+                                use_kernel=True, interpret=True))
+    y_ser = np.asarray(execute(prog, xk, backend="shard_map", mesh=mesh,
+                               use_kernel=True, interpret=True,
+                               pipeline=False))
+    out["pallas_interpret_bitwise"] = bool(
+        np.array_equal(y_pipe, y_ser) and
+        np.allclose(y_pipe, csr_matvec(A_mixed, xk), atol=1e-2, rtol=1e-4))
+    print(json.dumps(out))
+""")
+
+
+@pytest.mark.slow
+def test_pipelined_executor_bitwise_equals_serial_4dev_subprocess():
+    """The pipelined schedule (local slice overlapping the exchange) must
+    be bitwise-identical to the pre-pipeline serial execution order on
+    every workload/backend — the serial path runs the identical slice
+    split behind an optimization barrier, so any divergence is a real
+    operand bug, not float reassociation."""
+    r = subprocess.run([sys.executable, "-c", _SUBPROC_PIPELINE],
+                       capture_output=True, text=True, timeout=600,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert r.returncode == 0, r.stderr[-2000:]
+    res = json.loads(r.stdout.strip().splitlines()[-1])
+    assert all(res.values()), res

@@ -308,6 +308,60 @@ def test_partial_replan_reaches_split_on_monster_row_shard():
                                atol=1e-4, rtol=1e-5)
 
 
+def test_partial_replan_flips_only_hot_shard_exchange():
+    """When the hot shard's traffic-thinned halo beats streaming the full
+    padded vector, the partial tier flips *only* that shard's exchange
+    policy: no stage is rebuilt (exchange is not a lowering-base field,
+    every stage object is shared), the flip is logged in
+    ``RebalanceEvent.exchange_flips``, and the swapped program still
+    matches the oracle."""
+    from repro.core.plan import (KERNELS, PlanChoice, RankedPlan,
+                                 _active_submatrix, estimate_cost,
+                                 extract_features, kernel_shard_costs)
+    from repro.core.program import execute, lower
+    from repro.core.spmv import SpmvPlan
+    from repro.data.matrices import mixed_structure
+    from repro.serve.rebalance import hot_shards, replan
+
+    A = mixed_structure(1024, 33 * 1024, seed=0)
+    cfg = RebalanceConfig(window=16, probe=0)
+    w = np.ones(A.ncols)
+    w[:256] = 50.0                      # traffic on shard 0's x columns
+
+    # pin shard 0's kernel to the thinned-structure argmin up front, so
+    # the kernel axis is a no-op and the exchange axis acts alone
+    part = make_partition(A, 4, "row")
+    sub = _active_submatrix(A, w / w.mean(), seed=cfg.seed)
+    kc = kernel_shard_costs(sub, part)
+    k0 = min(KERNELS, key=lambda k: (kc[k][0], KERNELS.index(k)))
+    plan = SpmvPlan(layout="block", distribution="row", reordering="none",
+                    exchange="allgather", kernel="seg", num_shards=4,
+                    shard_kernels=(k0, "seg", "seg", "seg"))
+    prog = lower(A, plan)
+    mon = LoadMonitor(prog, cfg)
+    mon._act_ema = w / w.mean()
+    assert list(hot_shards(mon.shard_load(), cfg.hot_factor)) == [0]
+
+    choice = PlanChoice(
+        features=extract_features(A, num_shards=4),
+        ranking=(RankedPlan(plan=plan, cost=estimate_cost(A, plan)),),
+        probed=0)
+    dist, new_choice, ev = replan(A, mon, choice, num_shards=4, seed=0,
+                                  cfg=cfg, request_index=0, program=prog)
+    assert ev.swapped and ev.mode == "partial"
+    assert ev.exchange_flips == (0,)
+    assert ev.swapped_shards == ()                 # exchange axis only
+    assert "flipped exchange" in ev.reason
+    assert dist.plan.resolved_shard_exchanges() == \
+        ("halo", "allgather", "allgather", "allgather")
+    # a flip rebuilds nothing: every stage object is shared
+    assert all(dist.stages[p] is prog.stages[p] for p in range(4))
+    assert new_choice.plan == dist.plan
+    x = np.random.default_rng(0).standard_normal(A.ncols)
+    np.testing.assert_allclose(execute(dist, x), csr_matvec(A, x),
+                               atol=1e-5, rtol=1e-6)
+
+
 def test_partial_replan_needs_skewed_traffic():
     """Uniform traffic never takes the partial tier (nothing local to
     re-derive) — the full tier answers the trip instead."""
