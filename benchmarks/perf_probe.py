@@ -241,6 +241,31 @@ def run_pipeline_probe(out: str | None) -> int:
     return 0 if ok else 1
 
 
+def run_serve_probe(out: str | None) -> int:
+    """Record the multi-tenant warm-restart serving headline.
+
+    Replays the mixed-tenant bursty trace (``benchmarks/trace_replay.py``)
+    against a cold engine and a warm-restarted one sharing its artifact
+    store, and appends cold-vs-warm requests/sec, p99 latency and the
+    warm-restart ingest speedup; exit status is the bench's acceptance
+    gate (>= 2 tenants all warm-started, ingest speedup >= 5x, bitwise
+    identical outputs).
+    """
+    from benchmarks.trace_replay import check, run_trace_replay
+    entry = run_trace_replay()
+    ok = check(entry)
+    path = append_bench_entry(entry, out)
+    print(json.dumps(entry, indent=2))
+    print(f"# serve: {len(entry['tenants'])} tenants, cold "
+          f"{entry['cold']['rps']} req/s p99 {entry['cold']['p99_ms']}ms "
+          f"vs warm {entry['warm']['rps']} req/s p99 "
+          f"{entry['warm']['p99_ms']}ms; warm-restart ingest speedup "
+          f"{entry['ingest_speedup']}x (bar >= 5), bitwise "
+          f"{entry['bitwise_equal']} -> "
+          f"{'PASS' if ok else 'FAIL'}; recorded in {path}")
+    return 0 if ok else 1
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("arch", nargs="?")
@@ -262,6 +287,10 @@ def main():
                     help="run the exchange-bound pipelined-executor bench "
                          "and record headline numbers (benchmarks/"
                          "hetero_bench.py --workload pipeline)")
+    ap.add_argument("--serve", action="store_true",
+                    help="run the multi-tenant cold-vs-warm trace-replay "
+                         "bench and record headline numbers (benchmarks/"
+                         "trace_replay.py)")
     ap.add_argument("--scale", type=float, default=1.0,
                     help="fig8 matrix scale for the vectorized timing")
     ap.add_argument("--ref-scale", type=float, default=0.02,
@@ -290,6 +319,8 @@ def main():
         sys.exit(run_split_probe(args.out))
     if args.pipeline:
         sys.exit(run_pipeline_probe(args.out))
+    if args.serve:
+        sys.exit(run_serve_probe(args.out))
     if args.arch is None or args.shape is None:
         ap.error("arch and shape are required unless --emu is given")
 

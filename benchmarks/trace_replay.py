@@ -1,0 +1,268 @@
+"""Mixed-tenant trace replay: cold vs warm-restart serving (PAPER.md §IV).
+
+The paper's amortization story — optimization only pays once its cost is
+spread over enough SpMVs — has a fleet-scale corollary: a *restart* that
+re-runs feature extraction, the autotune grid, the Emu probe and the full
+lowering resets the amortization clock for every tenant at once.  This
+bench replays one realistic serving trace against two engines:
+
+* **cold**: a fresh :class:`~repro.serve.router.SparseMatrixEngine` with
+  an empty artifact store — every tenant pays autotune + probe + lower;
+* **warm**: a second engine instance pointed at the artifact store the
+  cold engine populated — every tenant digest-hits its bundle and loads
+  device-ready slabs (no autotune, no probe, no lower).
+
+The trace is mixed-tenant (a skewed power-law "web" tenant interleaved
+with a banded "grid" tenant), **bursty** (tenants arrive in geometric
+bursts, not round-robin), and **log-structured** in column activity: each
+request's hot columns form a window that advances through the matrix like
+a log head, so consecutive requests overlap but the active set drifts —
+the workload shape the paper's §IV load-balance study worries about.
+
+Recorded per engine: total ingest seconds, requests/sec and p99 latency
+over the identical trace; the headline is the warm-restart ingest speedup
+(gate: >= 5x) with **bitwise-identical** ``y`` on every replayed request.
+A final phase replays a concurrent slice of the trace with cross-request
+micro-batching enabled and records its requests/sec and batch widths.
+
+CLI mirrors ``hetero_bench``: ``--fast`` shrinks the tenants for the CI
+smoke step, ``--budget-seconds`` is the wall-clock tripwire, and
+``perf_probe --serve`` appends the entry to ``BENCH_emu.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import concurrent.futures
+import json
+import shutil
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# trace generation
+# --------------------------------------------------------------------------
+
+def make_tenants(*, fast: bool, seed: int = 0) -> dict:
+    """name -> CSRMatrix for the two serving tenants."""
+    from repro.data.matrices import banded, powerlaw
+    if fast:
+        return {"web": powerlaw(384, 12_000, seed=seed),
+                "grid": banded(384, 10_000, 12, seed=seed + 1)}
+    return {"web": powerlaw(2048, 120_000, seed=seed),
+            "grid": banded(2048, 100_000, 24, seed=seed + 1)}
+
+
+def make_trace(tenants: dict, n_requests: int, *, seed: int = 0,
+               burst_mean: float = 6.0, hot_frac: float = 0.06,
+               advance_frac: float = 0.01) -> list:
+    """A bursty, log-structured request trace: ``[(tenant, x), ...]``.
+
+    Tenants arrive in geometric bursts of mean ``burst_mean``.  Each
+    request's x is small background noise plus a hot window of
+    ``hot_frac * N`` columns; the window start advances by
+    ``advance_frac * N`` per request to that tenant (wrapping), so the
+    active column set crawls through the matrix like a log head.
+    """
+    rng = np.random.default_rng(seed)
+    names = sorted(tenants)
+    heads = {n: 0 for n in names}
+    trace = []
+    while len(trace) < n_requests:
+        name = names[int(rng.integers(len(names)))]
+        burst = 1 + int(rng.geometric(1.0 / burst_mean))
+        N = tenants[name].ncols
+        W = max(int(hot_frac * N), 8)
+        step = max(int(advance_frac * N), 1)
+        for _ in range(min(burst, n_requests - len(trace))):
+            x = 0.01 * rng.standard_normal(N)
+            lo = heads[name]
+            idx = (lo + np.arange(W)) % N
+            x[idx] += 1.0 + 0.1 * rng.standard_normal(W)
+            heads[name] = (lo + step) % N
+            trace.append((name, x))
+    return trace
+
+
+# --------------------------------------------------------------------------
+# replay
+# --------------------------------------------------------------------------
+
+def _replay(engine, trace) -> dict:
+    """Serve the whole trace sequentially; returns timings + outputs."""
+    lat = np.empty(len(trace))
+    outs = []
+    t0 = time.perf_counter()
+    for i, (name, x) in enumerate(trace):
+        r0 = time.perf_counter()
+        outs.append(engine.spmv(name, x))
+        lat[i] = time.perf_counter() - r0
+    total = time.perf_counter() - t0
+    return {"rps": round(len(trace) / total, 1),
+            "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
+            "total_seconds": round(total, 3),
+            "outs": outs}
+
+
+def _ingest_all(engine, tenants: dict) -> dict:
+    per = {}
+    for name, csr in tenants.items():
+        t0 = time.perf_counter()
+        engine.ingest(name, csr)
+        per[name] = round(time.perf_counter() - t0, 4)
+    return per
+
+
+def run_trace_replay(*, fast: bool = False, shards: int = 8,
+                     probe: int | None = None, seed: int = 0,
+                     n_requests: int | None = None,
+                     threads: int = 4) -> dict:
+    from repro.serve.router import MicroBatchConfig, SparseMatrixEngine
+
+    tenants = make_tenants(fast=fast, seed=seed)
+    n = n_requests if n_requests is not None else (160 if fast else 600)
+    trace = make_trace(tenants, n, seed=seed + 7)
+    store = tempfile.mkdtemp(prefix="trace_replay_artifacts_")
+    try:
+        cold_eng = SparseMatrixEngine(num_shards=shards, probe=probe,
+                                      seed=seed, artifact_dir=store)
+        cold_ing = _ingest_all(cold_eng, tenants)
+        cold = _replay(cold_eng, trace)
+
+        warm_eng = SparseMatrixEngine(num_shards=shards, probe=probe,
+                                      seed=seed, artifact_dir=store)
+        warm_ing = _ingest_all(warm_eng, tenants)
+        warm = _replay(warm_eng, trace)
+        warm_stats = warm_eng.stats()
+
+        bitwise = all(np.array_equal(a, b)
+                      for a, b in zip(cold.pop("outs"), warm.pop("outs")))
+
+        # Concurrent phase: the same tenants behind micro-batching, a
+        # thread pool firing a slice of the trace at once per wave.
+        mb_eng = SparseMatrixEngine(
+            num_shards=shards, probe=probe, seed=seed, artifact_dir=store,
+            micro_batch=MicroBatchConfig(max_batch=threads, max_wait_ms=2.0))
+        _ingest_all(mb_eng, tenants)
+        mb_lat = []
+        mb_outs = []
+        t0 = time.perf_counter()
+        with concurrent.futures.ThreadPoolExecutor(threads) as pool:
+            for w0 in range(0, len(trace), threads):
+                wave = trace[w0: w0 + threads]
+                r0 = time.perf_counter()
+                futs = [pool.submit(mb_eng.spmv, nm, x) for nm, x in wave]
+                ys = [f.result() for f in futs]
+                mb_lat.append(time.perf_counter() - r0)
+                mb_outs.append((wave, ys))
+        mb_total = time.perf_counter() - t0
+        for wave, ys in mb_outs:
+            for (nm, x), y in zip(wave, ys):
+                if not np.array_equal(y, warm_eng.spmv(nm, x)):
+                    raise AssertionError(
+                        "micro-batched output differs from solo serve")
+        mb_stats = mb_eng.stats()
+
+        cold_total = round(sum(cold_ing.values()), 4)
+        warm_total = round(sum(warm_ing.values()), 4)
+        return {
+            "workload": "serve/trace_replay",
+            "shards": shards,
+            "n_requests": n,
+            "threads": threads,
+            "fast": fast,
+            "tenants": {name: {"shape": list(csr.shape), "nnz": csr.nnz,
+                               "plan_kernel": cold_eng.plan(name).kernel,
+                               "warm_start":
+                                   warm_stats[name]["warm_start"]}
+                        for name, csr in tenants.items()},
+            "cold": {"ingest_seconds": cold_ing,
+                     "total_ingest_seconds": cold_total,
+                     "rps": cold["rps"], "p99_ms": cold["p99_ms"]},
+            "warm": {"ingest_seconds": warm_ing,
+                     "total_ingest_seconds": warm_total,
+                     "rps": warm["rps"], "p99_ms": warm["p99_ms"]},
+            "ingest_speedup": round(cold_total / max(warm_total, 1e-9), 1),
+            "bitwise_equal": bitwise,
+            "micro_batch": {
+                "rps": round(len(trace) / mb_total, 1),
+                "p99_wave_ms": round(
+                    float(np.percentile(mb_lat, 99)) * 1e3, 3),
+                **{name: mb_stats[name]["micro_batch"]
+                   for name in tenants}},
+        }
+    finally:
+        shutil.rmtree(store, ignore_errors=True)
+
+
+def check(entry: dict) -> bool:
+    """Acceptance gate: >= 2 tenants all warm-started, warm-restart ingest
+    >= 5x faster than cold, bitwise-identical outputs, positive rps."""
+    tenants = entry["tenants"]
+    return (len(tenants) >= 2
+            and all(t["warm_start"] for t in tenants.values())
+            and entry["ingest_speedup"] >= 5.0
+            and entry["bitwise_equal"]
+            and entry["cold"]["rps"] > 0
+            and entry["warm"]["rps"] > 0)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="CI smoke: small two-tenant trace, same gates")
+    ap.add_argument("--shards", type=int, default=8)
+    ap.add_argument("--probe", type=int, default=None,
+                    help="autotune probe budget for the cold ingests "
+                         "(default: repro.core.plan.DEFAULT_PROBE)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--threads", type=int, default=4)
+    ap.add_argument("--budget-seconds", type=float, default=None,
+                    help="fail if the whole run exceeds this wall-clock "
+                         "budget (CI tripwire)")
+    ap.add_argument("--json", action="store_true",
+                    help="print the entry as JSON only")
+    args = ap.parse_args()
+
+    t0 = time.perf_counter()
+    entry = run_trace_replay(fast=args.fast, shards=args.shards,
+                             probe=args.probe, seed=args.seed,
+                             n_requests=args.requests,
+                             threads=args.threads)
+    ok = check(entry)
+    wall = time.perf_counter() - t0
+    entry["wall_seconds"] = round(wall, 2)
+    if args.budget_seconds is not None and wall > args.budget_seconds:
+        ok = False
+        entry["budget_exceeded"] = True
+
+    if args.json:
+        print(json.dumps(entry, indent=2))
+    else:
+        print(f"trace replay: {len(entry['tenants'])} tenants, "
+              f"{entry['n_requests']} requests, shards={entry['shards']}")
+        for name, t in entry["tenants"].items():
+            print(f"  {name:>6}: shape={t['shape']} nnz={t['nnz']} "
+                  f"kernel={t['plan_kernel']} warm_start={t['warm_start']}")
+        c, w = entry["cold"], entry["warm"]
+        print(f"  cold : ingest {c['total_ingest_seconds']}s, "
+              f"{c['rps']} req/s, p99 {c['p99_ms']}ms")
+        print(f"  warm : ingest {w['total_ingest_seconds']}s, "
+              f"{w['rps']} req/s, p99 {w['p99_ms']}ms")
+        print(f"  warm-restart ingest speedup: "
+              f"{entry['ingest_speedup']}x (bar >= 5), bitwise "
+              f"{entry['bitwise_equal']}")
+        mb = entry["micro_batch"]
+        print(f"  micro-batch x{entry['threads']}: {mb['rps']} req/s, "
+              f"p99 wave {mb['p99_wave_ms']}ms")
+        print(f"  wall {entry['wall_seconds']}s -> "
+              f"{'PASS' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -32,7 +32,9 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
 import json
+import os
 from typing import Iterable, Sequence
 
 import numpy as np
@@ -52,7 +54,7 @@ __all__ = ["DEFAULT_PROBE", "KERNELS", "SPLIT_CORES", "SPLIT_MIN_SPAN",
            "MatrixFeatures", "ShardFeatures",
            "PlanCost", "RankedPlan", "PlanChoice", "extract_features",
            "extract_shard_features", "estimate_cost", "autotune",
-           "feature_key", "kernel_shard_costs", "select_shard_kernels",
+           "feature_key", "PlanCache", "kernel_shard_costs", "select_shard_kernels",
            "exchange_shard_costs", "select_shard_exchanges",
            "remote_row_share", "device_path_model", "split_meta"]
 
@@ -1130,3 +1132,75 @@ def autotune(csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
     return PlanChoice(features=extract_features(csr, num_shards=num_shards),
                       ranking=tuple(candidates), probed=n_probed,
                       shard_features=shard_features)
+
+
+# --------------------------------------------------------------------------
+# plan cache (feature-keyed, disk-backed)
+# --------------------------------------------------------------------------
+
+class PlanCache:
+    """Feature-keyed plan cache: in-memory L1 dict + optional disk L2.
+
+    Keys are whatever the caller derives from :func:`feature_key` (the
+    serving layer uses ``(feature_key(features), num_shards)``); values
+    are :class:`~repro.core.spmv.SpmvPlan`.  With ``cache_dir`` set, every
+    ``put`` also writes a small JSON file named by the key's hash, so a
+    *different engine instance* — or a restarted process — skips the
+    autotune grid for any structurally similar matrix the fleet has seen.
+    The stored key is verified verbatim on read (hash collisions and
+    ``feature_key`` version bumps degrade to a miss, never a wrong plan),
+    and corrupt or concurrently rewritten files read as misses too.
+
+    >>> cache = PlanCache()
+    >>> cache.put(("fk1", 8), SpmvPlan(kernel="seg"))
+    >>> cache.get(("fk1", 8)).kernel
+    'seg'
+    >>> cache.get(("fk1", 9)) is None
+    True
+    """
+
+    def __init__(self, cache_dir: str | None = None):
+        self._mem: dict = {}
+        self.cache_dir = cache_dir
+        if cache_dir:
+            os.makedirs(cache_dir, exist_ok=True)
+
+    def _path(self, key) -> str:
+        h = hashlib.sha256(repr(key).encode()).hexdigest()[:32]
+        return os.path.join(self.cache_dir, f"plan_{h}.json")
+
+    def get(self, key) -> SpmvPlan | None:
+        """The cached plan for ``key``, promoting disk hits into the L1."""
+        if key in self._mem:
+            return self._mem[key]
+        if not self.cache_dir:
+            return None
+        try:
+            with open(self._path(key)) as f:
+                d = json.load(f)
+            if d.get("key") != repr(key):
+                return None
+            plan = SpmvPlan(**d["plan"])
+        except (FileNotFoundError, json.JSONDecodeError, TypeError,
+                ValueError, KeyError):
+            return None
+        self._mem[key] = plan
+        return plan
+
+    def put(self, key, plan: SpmvPlan) -> None:
+        """Record ``key -> plan`` in the L1 and (atomically) on disk."""
+        self._mem[key] = plan
+        if not self.cache_dir:
+            return
+        d = dataclasses.asdict(plan)
+        for f_ in ("shard_kernels", "split_counts", "shard_exchanges"):
+            if d[f_] is not None:
+                d[f_] = list(d[f_])
+        path = self._path(key)
+        tmp = f"{path}.tmp{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump({"key": repr(key), "plan": d}, f, indent=1)
+        os.replace(tmp, path)
+
+    def __len__(self) -> int:
+        return len(self._mem)

@@ -25,6 +25,7 @@ the one program executor.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Literal
 
 import jax
@@ -205,6 +206,22 @@ class SpmvPlan:
                         **grid).plan
 
 
+
+#: Shims that already warned this process — each deprecated ``make_*`` shim
+#: emits its DeprecationWarning exactly once, so a tight legacy serving
+#: loop is not spammed while migration off the pre-IR API is in flight.
+_DEPRECATION_WARNED: set = set()
+
+
+def _warn_deprecated(name: str, replacement: str) -> None:
+    if name in _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED.add(name)
+    warnings.warn(
+        f"{name} is deprecated; use {replacement} instead",
+        DeprecationWarning, stacklevel=3)
+
+
 def build_distributed(csr: CSRMatrix, plan: SpmvPlan):
     """Deprecated alias of :func:`repro.core.program.lower`."""
     from .program import lower
@@ -236,6 +253,7 @@ def make_spmv_fn(dist, mesh: Mesh, axis: str = "model",
     :func:`~repro.core.program.make_program_spmv_fn` for plan-driven
     exchange selection.
     """
+    _warn_deprecated("make_spmv_fn", "repro.core.program.make_program_spmv_fn")
     from .program import make_program_spmv_fn
     prog = dist
     if prog.plan.exchange != "allgather" or prog.plan.shard_exchanges:
@@ -257,6 +275,8 @@ def make_seg_spmv_fn(dist, mesh: Mesh, axis: str = "model",
     """Deprecated shim over :func:`repro.core.program.make_program_spmv_fn`
     for uniform-seg programs (old ``f(vals, cols, rows, pieces, x_shards)``
     signature)."""
+    _warn_deprecated("make_seg_spmv_fn",
+                     "repro.core.program.make_program_spmv_fn")
     if any(st.kernel != "seg" for st in dist.stages):
         raise ValueError("build_distributed was not run with plan.kernel='seg'")
     from .program import make_program_spmv_fn
@@ -367,6 +387,8 @@ def make_halo_spmv_fn(dist, halo: HaloProgram, mesh: Mesh,
     halo prologue; a non-halo plan is re-lowered with ``exchange="halo"``
     first so the shim keeps its historical meaning.
     """
+    _warn_deprecated("make_halo_spmv_fn",
+                     "repro.core.program.make_program_spmv_fn")
     from .program import make_program_spmv_fn
     prog = dist
     if prog.plan.exchange != "halo" or prog.plan.shard_exchanges:

@@ -1,9 +1,12 @@
-"""Serving layer: the batched LM engine and the sparse-matrix serving
-engine (autotuned ingest, batched multi-RHS SpMV, feature-keyed plan cache)
+"""Serving layer: the batched LM engine and the multi-tenant sparse-matrix
+serving router (autotuned ingest, warm-start program artifacts, batched
+multi-RHS SpMV, feature-keyed plan cache, cross-request micro-batching)
 plus the online rebalancing subsystem that keeps serving plans matched to
 the live request mix (``rebalance.py``)."""
-from .engine import Engine, ServeConfig, SparseMatrixEngine
+from .engine import Engine, ServeConfig
+from .router import IngestedMatrix, MicroBatchConfig, SparseMatrixEngine
 from .rebalance import LoadMonitor, RebalanceConfig, RebalanceEvent
 
-__all__ = ["Engine", "ServeConfig", "SparseMatrixEngine", "LoadMonitor",
-           "RebalanceConfig", "RebalanceEvent"]
+__all__ = ["Engine", "ServeConfig", "SparseMatrixEngine", "IngestedMatrix",
+           "MicroBatchConfig", "LoadMonitor", "RebalanceConfig",
+           "RebalanceEvent"]

@@ -1,255 +1,37 @@
-"""Batched serving engine: prefill + decode over the distributed runtime,
-plus the sparse-matrix serving path (:class:`SparseMatrixEngine`).
+"""Batched serving engine: prefill + decode over the distributed runtime.
 
-Small-scale runnable on CPU (examples/serve_lm.py); the same step functions
-lower on the production mesh for the dry-run's decode cells.  The sparse
-engine autotunes an :class:`~repro.core.spmv.SpmvPlan` for every ingested
-matrix at load time (``core/plan.py``), serves single-vector and
-multi-RHS-batched SpMV requests through the plan-built slabs, and — when
-rebalancing is enabled — watches the live request mix for sustained
-hot-spots and re-plans online (``serve/rebalance.py``), so no caller ever
-picks layouts/kernels by hand, not even after the workload drifts.
+The sparse-matrix serving path lives in :mod:`repro.serve.router` since
+the multi-tenant refactor — :class:`SparseMatrixEngine` (autotuned
+ingest, warm-start artifacts, per-tenant rebalancing, cross-request
+micro-batching) is re-exported here so every historical import path
+(``from repro.serve.engine import SparseMatrixEngine``) keeps working.
+
+The LM :class:`Engine` below is small-scale runnable on CPU
+(examples/serve_lm.py); the same step functions lower on the production
+mesh for the dry-run's decode cells.
 """
 from __future__ import annotations
 
 import dataclasses
-import threading
-from typing import Dict, List, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.plan import PlanChoice, autotune, feature_key
-from repro.core.sparse_matrix import CSRMatrix
-from repro.core.spmv import DistributedSpmv, SpmvPlan, build_distributed, \
-    local_spmv
 from repro.models import model as mm
 from repro.models.config import ModelConfig
-from repro.serve.rebalance import LoadMonitor, RebalanceConfig, \
-    RebalanceEvent, replan
+from repro.serve.router import IngestedMatrix, MicroBatchConfig, \
+    SparseMatrixEngine
+
+__all__ = ["Engine", "ServeConfig", "SparseMatrixEngine",
+           "IngestedMatrix", "MicroBatchConfig"]
 
 
 @dataclasses.dataclass
 class ServeConfig:
     max_len: int = 256
     temperature: float = 0.0      # 0 = greedy
-
-
-@dataclasses.dataclass
-class IngestedMatrix:
-    """One served matrix: its autotuned choice + device-ready program.
-
-    ``csr`` keeps the original (caller-order) matrix so the rebalancer can
-    re-derive plans against it; ``monitor``/``rebalance_log`` exist only
-    when the engine was built with rebalancing enabled.  ``plan_cache_hit``
-    records that ingest skipped the autotune grid via the feature-keyed
-    plan cache.
-    """
-
-    name: str
-    choice: PlanChoice
-    dist: DistributedSpmv
-    # Original caller-order matrix, kept only when rebalancing is enabled
-    # (the re-planner re-derives plans from it); None otherwise so a
-    # plain serving engine doesn't pin a second copy of every matrix.
-    csr: CSRMatrix | None = None
-    spmv_count: int = 0
-    plan_cache_hit: bool = False
-    monitor: LoadMonitor | None = None
-    rebalance_log: List[RebalanceEvent] = dataclasses.field(
-        default_factory=list)
-    replan_thread: threading.Thread | None = None
-    replan_lock: threading.Lock = dataclasses.field(
-        default_factory=threading.Lock)
-
-
-class SparseMatrixEngine:
-    """Serving front-end for SpMV: ingest once, autotune, serve many.
-
-    ``ingest`` runs the cost-model autotuner (with Emu-simulator probe
-    re-ranking by default — the vectorized tick engine makes a probe cost
-    milliseconds, so serving ingestion gets measured rankings, not just
-    analytic ones; pass ``probe=0`` to opt out) and builds the
-    distributed program for the winning plan;
-    ``spmv`` answers y = A @ x requests — ``x`` either a single (N,)
-    vector or a multi-RHS block (N, B) — in the caller's original index
-    order via the plan's slabs.  ``plans()`` exposes every decision as
-    JSON (the :class:`~repro.core.plan.PlanChoice` round-trips), so an
-    operator can audit *why* a matrix got its layout/kernel.
-
-    Two serving-scale behaviours are new since the drift-aware PR:
-
-    * **Feature-keyed plan cache** (on by default): structurally similar
-      re-ingests (same :func:`~repro.core.plan.feature_key`) reuse the
-      previously autotuned plan instead of re-running the grid.
-    * **Online rebalancing** (opt-in via ``rebalance=``): every request
-      feeds a :class:`~repro.serve.rebalance.LoadMonitor`; sustained
-      hot-spots trigger a budgeted traffic-weighted re-plan whose program
-      is built and validated double-buffered before the swap
-      (``serve/rebalance.py`` has the full story).
-    """
-
-    def __init__(self, *, num_shards: int = 8, probe: int | None = None,
-                 seed: int = 0,
-                 rebalance: RebalanceConfig | bool | None = None,
-                 plan_cache: bool = True):
-        self.num_shards = num_shards
-        self.probe = probe
-        self.seed = seed
-        if rebalance is True:
-            rebalance = RebalanceConfig()
-        self.rebalance_cfg: RebalanceConfig | None = rebalance or None
-        self._matrices: Dict[str, IngestedMatrix] = {}
-        self._plan_cache: Dict[tuple, SpmvPlan] | None = \
-            {} if plan_cache else None
-        self.plan_cache_hits = 0
-
-    def ingest(self, name: str, csr: CSRMatrix,
-               plan: SpmvPlan | None = None) -> PlanChoice:
-        """Register ``csr`` under ``name`` with a load-time-tuned plan.
-
-        Pass an explicit ``plan`` to bypass the autotuner (the choice is
-        then recorded as a single-candidate ranking with its model cost).
-        The engine's shard count is authoritative: an explicit plan is
-        re-targeted to ``self.num_shards`` so the built program, its cost,
-        and the recorded features all describe the same deployment.
-        Re-ingesting a name replaces the previous matrix.
-
-        When the plan cache is enabled and a structurally similar matrix
-        (equal :func:`~repro.core.plan.feature_key`) was autotuned before,
-        the cached plan is reused as a single-candidate choice — the full
-        grid + probe is skipped, which is what makes re-ingesting many
-        look-alike matrices cheap.
-        """
-        from repro.core.plan import estimate_cost, RankedPlan, \
-            extract_features
-        features = extract_features(csr, num_shards=self.num_shards)
-        cache_key = (feature_key(features), self.num_shards)
-        cache_hit = False
-        if plan is None and self._plan_cache is not None and \
-                cache_key in self._plan_cache:
-            plan = self._plan_cache[cache_key]
-            cache_hit = True
-            self.plan_cache_hits += 1
-        if plan is None:
-            choice = autotune(csr, num_shards=self.num_shards,
-                              seed=self.seed, probe=self.probe)
-            if self._plan_cache is not None:
-                self._plan_cache[cache_key] = choice.plan
-        else:
-            # retarget (not replace): a per-shard kernel tuple tuned for a
-            # different shard count is dropped rather than kept unlowerable.
-            plan = plan.retarget(self.num_shards)
-            choice = PlanChoice(
-                features=features,
-                ranking=(RankedPlan(plan=plan,
-                                    cost=estimate_cost(csr, plan)),),
-                probed=0)
-        dist = build_distributed(csr, choice.plan)
-        monitor = LoadMonitor(dist, self.rebalance_cfg) \
-            if self.rebalance_cfg is not None else None
-        self._matrices[name] = IngestedMatrix(
-            name=name, choice=choice, dist=dist,
-            csr=csr if monitor is not None else None,
-            plan_cache_hit=cache_hit, monitor=monitor)
-        return choice
-
-    def _lookup(self, name: str) -> IngestedMatrix:
-        m = self._matrices.get(name)
-        if m is None:
-            raise KeyError(
-                f"no matrix ingested under {name!r}; ingested names: "
-                f"{sorted(self._matrices) or '(none)'} — call "
-                f"engine.ingest({name!r}, csr) first")
-        return m
-
-    def spmv(self, name: str, x: np.ndarray) -> np.ndarray:
-        """y = A @ x for the ingested matrix ``name`` (original order).
-
-        ``x``: (N,) or multi-RHS (N, B) → (M,) or (M, B); batched columns
-        are bitwise-equal to per-vector calls.  Unknown names raise an
-        actionable :class:`KeyError` *before* any stats are touched, so
-        ``stats()`` counts successful calls only.
-        """
-        m = self._lookup(name)
-        y = local_spmv(m.dist, x)
-        m.spmv_count += 1
-        if m.monitor is not None and m.monitor.observe(x):
-            self._try_rebalance(m)
-        return y
-
-    def _try_rebalance(self, m: IngestedMatrix) -> None:
-        """Detector tripped: budgeted re-plan, validated double-buffered swap.
-
-        Callers keep reading ``m.dist`` (the old program) until the
-        candidate is built and validated; the swap itself is one attribute
-        rebind (atomic under the GIL).  Rejected candidates only start the
-        monitor's cooldown — serving never degrades on a failed re-plan.
-
-        With ``async_replan`` the whole re-plan runs on a daemon worker
-        thread and this method returns immediately — requests served in
-        the meantime use the old program, and at most one worker per
-        matrix is in flight.  The default is inline (deterministic, but
-        the triggering request absorbs the re-plan latency).
-        """
-        if self.rebalance_cfg.async_replan:
-            # check-then-spawn under the per-matrix lock: two request
-            # threads closing hot windows near-simultaneously must not
-            # both launch workers.
-            with m.replan_lock:
-                if m.replan_thread is not None and m.replan_thread.is_alive():
-                    return             # a re-plan is already in flight
-                m.replan_thread = threading.Thread(
-                    target=self._replan_and_swap, args=(m,), daemon=True)
-                m.replan_thread.start()
-        else:
-            self._replan_and_swap(m)
-
-    def _replan_and_swap(self, m: IngestedMatrix) -> None:
-        new_dist, new_choice, event = replan(
-            m.csr, m.monitor, m.choice, num_shards=self.num_shards,
-            seed=self.seed, cfg=self.rebalance_cfg,
-            request_index=m.spmv_count, program=m.dist)
-        m.rebalance_log.append(event)
-        if new_dist is not None:
-            m.dist = new_dist          # the double-buffer swing
-            m.choice = new_choice
-            m.monitor.attach(new_dist)
-        m.monitor.cooldown()
-
-    def plan(self, name: str) -> SpmvPlan:
-        """The plan serving ``name``."""
-        return self._lookup(name).choice.plan
-
-    def plans(self) -> Dict[str, str]:
-        """name -> PlanChoice JSON for every ingested matrix."""
-        return {n: m.choice.to_json() for n, m in self._matrices.items()}
-
-    def rebalance_log(self, name: str) -> List[RebalanceEvent]:
-        """Every detector trip for ``name`` (swapped or rejected)."""
-        return list(self._lookup(name).rebalance_log)
-
-    def stats(self) -> Dict[str, dict]:
-        """Lightweight per-matrix serving stats (JSON-serializable)."""
-        out = {}
-        for n, m in self._matrices.items():
-            s = {"plan": dataclasses.asdict(m.choice.plan),
-                 "shard_kernels": list(m.dist.shard_kernels()),
-                 "shard_exchanges":
-                     list(m.choice.plan.resolved_shard_exchanges()),
-                 "nnz": m.dist.matrix.nnz,
-                 "migrations": m.dist.traffic.migrations,
-                 "hotspot_share": m.dist.traffic.hotspot_share,
-                 "spmv_count": m.spmv_count,
-                 "plan_cache_hit": m.plan_cache_hit}
-            if m.monitor is not None:
-                s["rebalance"] = {
-                    **m.monitor.stats(),
-                    "replans": sum(e.swapped for e in m.rebalance_log),
-                    "rejected": sum(not e.swapped for e in m.rebalance_log)}
-            out[n] = s
-        return out
 
 
 class Engine:

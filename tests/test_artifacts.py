@@ -1,0 +1,162 @@
+"""Persistent program artifacts: save/load round-trips, digest + schema
+fallback paths, and the frozen on-disk fixture bundle.
+
+The contract under test (core/artifacts.py): a loaded bundle's
+``execute()`` outputs are **bitwise** equal to the freshly lowered
+program's for every kernel family and per-shard exchange mix, and every
+way a bundle can be wrong — different matrix bytes, a schema bump, a torn
+write — degrades to an :class:`ArtifactError` (the serving layer's signal
+to fall back to a cold ``lower()``), never to silently wrong numerics.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import artifacts as art
+from repro.core.plan import PlanChoice, RankedPlan, estimate_cost, \
+    extract_features
+from repro.core.program import execute, lower
+from repro.core.sparse_matrix import CSRMatrix, csr_matvec
+from repro.core.spmv import SpmvPlan
+from repro.data.matrices import mixed_structure, powerlaw_tail
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+
+
+def _roundtrip(csr, plan, tmp_path):
+    prog = lower(csr, plan)
+    bundle = art.save_program(prog, str(tmp_path / "bundle"), source=csr)
+    loaded, choice = art.load_program(bundle, expect=csr)
+    return prog, loaded, choice
+
+
+@pytest.mark.parametrize("kernel", ["ell", "seg", "hyb", "split"])
+def test_roundtrip_bitwise_all_kernel_families(kernel, tmp_path):
+    csr = mixed_structure(256, 6000, seed=1)
+    plan = SpmvPlan(kernel=kernel, num_shards=4)
+    prog, loaded, _ = _roundtrip(csr, plan, tmp_path)
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(csr.ncols)
+    X = rng.standard_normal((csr.ncols, 3))
+    assert np.array_equal(execute(prog, x), execute(loaded, x))
+    assert np.array_equal(execute(prog, X), execute(loaded, X))
+    assert loaded.plan == prog.plan
+    assert np.allclose(execute(loaded, x), csr_matvec(csr, x))
+
+
+def test_roundtrip_mixed_shards_and_exchanges_with_reordering(tmp_path):
+    """Per-shard heterogeneous kernels + exchanges + a bfs permutation —
+    the artifact must carry the perm so caller-order I/O is preserved."""
+    csr = powerlaw_tail(256, 6000, n_monster=2, seed=2)
+    plan = SpmvPlan(kernel="seg", num_shards=4, reordering="bfs",
+                    shard_kernels=("ell", "seg", "hyb", "split"),
+                    shard_exchanges=("halo", "allgather", "halo",
+                                     "allgather"),
+                    split_counts=(1, 1, 1, 2))
+    prog, loaded, _ = _roundtrip(csr, plan, tmp_path)
+    assert loaded.perm is not None
+    assert np.array_equal(loaded.perm, prog.perm)
+    x = np.random.default_rng(3).standard_normal(csr.ncols)
+    assert np.array_equal(execute(prog, x), execute(loaded, x))
+    assert tuple(loaded.shard_kernels()) == ("ell", "seg", "hyb", "split")
+
+
+def test_reordered_save_requires_source():
+    csr = mixed_structure(128, 2500, seed=4)
+    prog = lower(csr, SpmvPlan(num_shards=4, reordering="bfs"))
+    with pytest.raises(ValueError, match="source"):
+        art.save_program(prog, "/nonexistent-never-written")
+
+
+def test_choice_roundtrips_through_bundle(tmp_path):
+    csr = mixed_structure(128, 2500, seed=5)
+    plan = SpmvPlan(num_shards=4, kernel="hyb")
+    choice = PlanChoice(
+        features=extract_features(csr, num_shards=4),
+        ranking=(RankedPlan(plan=plan, cost=estimate_cost(csr, plan)),),
+        probed=0)
+    prog = lower(csr, plan)
+    bundle = art.save_program(prog, str(tmp_path / "b"), source=csr,
+                              choice=choice)
+    _, loaded_choice = art.load_program(bundle, expect=csr)
+    assert loaded_choice == choice
+
+
+def test_digest_mismatch_raises(tmp_path):
+    """Same structure, different values: the digest must miss — a warm
+    start may never serve stale numerics."""
+    csr = mixed_structure(128, 2500, seed=6)
+    prog = lower(csr, SpmvPlan(num_shards=4))
+    bundle = art.save_program(prog, str(tmp_path / "b"), source=csr)
+    revalued = CSRMatrix(shape=csr.shape, values=csr.values * 1.5,
+                         col_index=csr.col_index, row_ptr=csr.row_ptr)
+    with pytest.raises(art.ArtifactMismatch):
+        art.load_program(bundle, expect=revalued)
+    # ... while the original bytes still load.
+    art.load_program(bundle, expect=csr)
+
+
+def test_schema_version_bump_raises(tmp_path):
+    csr = mixed_structure(128, 2500, seed=7)
+    prog = lower(csr, SpmvPlan(num_shards=4))
+    bundle = art.save_program(prog, str(tmp_path / "b"), source=csr)
+    mpath = os.path.join(bundle, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    manifest["schema_version"] = art.SCHEMA_VERSION + 1
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(art.ArtifactMismatch):
+        art.load_program(bundle, expect=csr)
+
+
+def test_missing_or_invalidated_bundle_raises(tmp_path):
+    with pytest.raises(art.ArtifactMissing):
+        art.load_program(str(tmp_path / "nope"))
+    csr = mixed_structure(128, 2500, seed=8)
+    prog = lower(csr, SpmvPlan(num_shards=4))
+    bundle = art.save_program(prog, str(tmp_path / "b"), source=csr)
+    art.invalidate_bundle(bundle)     # the swap's atomic invalidation
+    with pytest.raises(art.ArtifactMissing):
+        art.load_program(bundle, expect=csr)
+
+
+def test_torn_manifest_reads_as_missing(tmp_path):
+    csr = mixed_structure(128, 2500, seed=9)
+    prog = lower(csr, SpmvPlan(num_shards=4))
+    bundle = art.save_program(prog, str(tmp_path / "b"), source=csr)
+    with open(os.path.join(bundle, "manifest.json"), "w") as f:
+        f.write('{"format": "spmv-program-bu')    # crash mid-write
+    with pytest.raises(art.ArtifactMissing):
+        art.load_program(bundle, expect=csr)
+
+
+def test_frozen_fixture_bundle_still_loads():
+    """The checked-in v1 bundle (mixed per-shard kernels + exchanges +
+    bfs reordering) must keep loading as the format evolves — the
+    on-disk analogue of the frozen PlanChoice JSON fixtures."""
+    bundle = os.path.join(FIXTURES, "artifact_bundle_v1")
+    src = mixed_structure(128, 2500, seed=3)    # the generating matrix
+    prog, choice = art.load_program(bundle, expect=src)
+    assert prog.plan.reordering == "bfs"
+    assert tuple(prog.shard_kernels()) == ("ell", "seg", "hyb", "split")
+    assert prog.plan.shard_exchanges == ("halo", "allgather", "halo",
+                                         "allgather")
+    assert choice is not None and choice.plan == prog.plan
+    x = np.random.default_rng(11).standard_normal(src.ncols)
+    assert np.allclose(execute(prog, x), csr_matvec(src, x))
+    # and it is bitwise-equal to lowering the same plan today
+    assert np.array_equal(execute(prog, x),
+                          execute(lower(src, prog.plan), x))
+
+
+def test_structure_digest_sensitivity():
+    csr = mixed_structure(128, 2500, seed=10)
+    d0 = art.structure_digest(csr)
+    assert d0 == art.structure_digest(csr)
+    v = csr.values.copy()
+    v[0] += 1.0
+    assert art.structure_digest(
+        CSRMatrix(csr.shape, v, csr.col_index, csr.row_ptr)) != d0

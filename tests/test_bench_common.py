@@ -1,0 +1,86 @@
+"""``benchmarks.common.append_bench_entry``: the atomic-append contract.
+
+The trajectory file is append-only state shared by every recorded bench
+run; the invariants under test are (1) the write is temp-file +
+``os.replace`` atomic — a crash mid-write can never truncate the existing
+file, (2) corrupt existing files degrade to empty instead of blocking new
+records, and (3) recording nothing is loudly fatal.
+"""
+import json
+import os
+
+import pytest
+
+from benchmarks.common import append_bench_entry
+
+
+def _read(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_creates_file_and_appends(tmp_path):
+    path = str(tmp_path / "bench.json")
+    assert append_bench_entry({"workload": "a", "n": 1}, path) == path
+    append_bench_entry({"workload": "b", "n": 2}, path)
+    doc = _read(path)
+    assert [e["workload"] for e in doc["entries"]] == ["a", "b"]
+
+
+def test_preserves_existing_entries(tmp_path):
+    path = str(tmp_path / "bench.json")
+    with open(path, "w") as f:
+        json.dump({"entries": [{"workload": "old"}]}, f)
+    append_bench_entry({"workload": "new"}, path)
+    assert [e["workload"] for e in _read(path)["entries"]] == ["old", "new"]
+
+
+def test_corrupt_existing_file_starts_fresh(tmp_path):
+    path = str(tmp_path / "bench.json")
+    with open(path, "w") as f:
+        f.write('{"entries": [{"worklo')      # truncated by a crash
+    append_bench_entry({"workload": "recovered"}, path)
+    assert [e["workload"] for e in _read(path)["entries"]] == ["recovered"]
+
+
+def test_empty_entry_raises(tmp_path):
+    with pytest.raises(ValueError, match="empty bench entry"):
+        append_bench_entry({}, str(tmp_path / "bench.json"))
+
+
+def test_crash_mid_write_never_truncates(tmp_path, monkeypatch):
+    """A failure while serializing must leave the previous file intact —
+    the whole point of writing to a temp file and ``os.replace``-ing."""
+    path = str(tmp_path / "bench.json")
+    append_bench_entry({"workload": "safe"}, path)
+    before = _read(path)
+
+    real_dump = json.dump
+
+    def exploding_dump(obj, fp, **kw):
+        fp.write('{"entries": [{"torn')       # partial bytes, then die
+        raise OSError("disk full")
+
+    monkeypatch.setattr(json, "dump", exploding_dump)
+    with pytest.raises(OSError):
+        append_bench_entry({"workload": "doomed"}, path)
+    monkeypatch.setattr(json, "dump", real_dump)
+    assert _read(path) == before              # original bytes untouched
+    # and the helper still works afterwards
+    append_bench_entry({"workload": "after"}, path)
+    assert [e["workload"] for e in _read(path)["entries"]] == \
+        ["safe", "after"]
+
+
+def test_append_is_verified(tmp_path, monkeypatch):
+    """The helper re-reads the file to prove the append landed."""
+    path = str(tmp_path / "bench.json")
+    real_replace = os.replace
+
+    def dropping_replace(src, dst):
+        os.remove(src)                        # "replace" that loses data
+
+    monkeypatch.setattr(os, "replace", dropping_replace)
+    with pytest.raises((RuntimeError, FileNotFoundError)):
+        append_bench_entry({"workload": "lost"}, path)
+    monkeypatch.setattr(os, "replace", real_replace)

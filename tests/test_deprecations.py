@@ -1,0 +1,84 @@
+"""The deprecated pre-IR ``make_*_spmv_fn`` shims warn exactly once each
+(DeprecationWarning) and keep their historical behavior bit-for-bit.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import spmv as S
+from repro.core.program import execute, lower
+from repro.core.spmv import SpmvPlan
+from repro.data.matrices import make_matrix
+
+
+@pytest.fixture()
+def mesh1():
+    return jax.make_mesh((1,), ("model",))
+
+
+def _reset(name):
+    """Isolate the warn-once latch from other tests in this process."""
+    S._DEPRECATION_WARNED.discard(name)
+
+
+def _first_shard(prog, y):
+    r = int(prog.rows_per_shard[0])
+    return np.asarray(y[0])[:r]
+
+
+def test_make_spmv_fn_warns_once_and_behaves(mesh1):
+    A = make_matrix("ford1", scale=0.05)
+    prog = lower(A, SpmvPlan(num_shards=1, kernel="ell",
+                             exchange="allgather"))
+    x = np.random.default_rng(0).standard_normal(A.ncols).astype(np.float32)
+    _reset("make_spmv_fn")
+    with pytest.warns(DeprecationWarning, match="make_spmv_fn"):
+        fn = S.make_spmv_fn(prog, mesh1)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        S.make_spmv_fn(prog, mesh1)          # second call: silent
+    with mesh1:
+        y = fn(jnp.array(prog.data), jnp.array(prog.cols),
+               jnp.array(prog.x_to_device(x)))
+    np.testing.assert_allclose(_first_shard(prog, y), execute(prog, x),
+                               atol=1e-3, rtol=1e-4)
+
+
+def test_make_seg_spmv_fn_warns_once_and_behaves(mesh1):
+    A = make_matrix("cop20k_A", scale=0.005)
+    prog = lower(A, SpmvPlan(num_shards=1, kernel="seg",
+                             exchange="allgather"))
+    x = np.random.default_rng(1).standard_normal(A.ncols).astype(np.float32)
+    _reset("make_seg_spmv_fn")
+    with pytest.warns(DeprecationWarning, match="make_seg_spmv_fn"):
+        fn = S.make_seg_spmv_fn(prog, mesh1)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        S.make_seg_spmv_fn(prog, mesh1)
+    with mesh1:
+        y = fn(jnp.array(prog.seg_vals), jnp.array(prog.seg_cols),
+               jnp.array(prog.seg_rows), jnp.array(prog.seg_pieces),
+               jnp.array(prog.x_to_device(x)))
+    np.testing.assert_allclose(_first_shard(prog, y), execute(prog, x),
+                               atol=1e-3, rtol=1e-4)
+
+
+def test_make_halo_spmv_fn_warns_once_and_behaves(mesh1):
+    A = make_matrix("ford1", scale=0.05)
+    prog = lower(A, SpmvPlan(num_shards=1, kernel="ell", exchange="halo"))
+    halo = S.build_halo(prog)
+    x = np.random.default_rng(2).standard_normal(A.ncols).astype(np.float32)
+    _reset("make_halo_spmv_fn")
+    with pytest.warns(DeprecationWarning, match="make_halo_spmv_fn"):
+        fn = S.make_halo_spmv_fn(prog, halo, mesh1)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        S.make_halo_spmv_fn(prog, halo, mesh1)
+    with mesh1:
+        y = fn(jnp.array(prog.data), jnp.array(halo.cols_remap),
+               jnp.array(halo.send_idx), jnp.array(prog.x_to_device(x)))
+    np.testing.assert_allclose(_first_shard(prog, y), execute(prog, x),
+                               atol=1e-3, rtol=1e-4)

@@ -1,6 +1,8 @@
 """Serving-path regression tests: Engine.generate edge semantics, the
 SparseMatrixEngine error/stats contract, batched multi-RHS SpMV exactness,
-and the feature-keyed plan cache.
+the feature-keyed plan cache (in-memory and disk-backed), warm-start
+ingest from persistent program artifacts, per-tenant rebalance state, and
+cross-request micro-batching.
 """
 import numpy as np
 import pytest
@@ -149,3 +151,168 @@ def test_plan_cache_can_be_disabled():
     c2 = eng.ingest("m2", make_matrix("rmat", scale=0.002, seed=7))
     assert eng.plan_cache_hits == 0
     assert len(c2.ranking) > 1                       # full grid ran
+
+
+# --------------------------------------------------------------------------
+# Multi-tenant router: warm-start artifacts, shared plan cache, batching
+# --------------------------------------------------------------------------
+
+def test_warm_start_ingest_skips_autotune_and_lower(tmp_path, monkeypatch):
+    """A restarted engine pointed at the artifact store loads every tenant
+    digest-hit: no autotune, no lower, bitwise-identical serving."""
+    A = make_matrix("cop20k_A", scale=0.005)
+    B = make_matrix("ford1", scale=0.05)
+    store = str(tmp_path / "artifacts")
+    e1 = SparseMatrixEngine(num_shards=4, artifact_dir=store)
+    c1a = e1.ingest("a", A)
+    e1.ingest("b", B)
+    rng = np.random.default_rng(0)
+    xa = rng.standard_normal(A.ncols)
+    xb = rng.standard_normal(B.ncols)
+    ya, yb = e1.spmv("a", xa), e1.spmv("b", xb)
+
+    # the warm path must touch neither the autotuner nor the lowerer
+    import repro.serve.router as router
+    monkeypatch.setattr(router, "autotune", _boom)
+    monkeypatch.setattr(router, "lower", _boom)
+    e2 = SparseMatrixEngine(num_shards=4, artifact_dir=store)
+    c2a = e2.ingest("a", A)
+    e2.ingest("b", B)
+    assert e2.warm_starts == 2
+    assert e2.stats()["a"]["warm_start"] and e2.stats()["b"]["warm_start"]
+    assert c2a == c1a                       # full PlanChoice round-trips
+    assert np.array_equal(e2.spmv("a", xa), ya)
+    assert np.array_equal(e2.spmv("b", xb), yb)
+
+
+def _boom(*a, **k):
+    raise AssertionError("warm-start ingest must not reach this path")
+
+
+def test_warm_start_digest_mismatch_falls_back_cold(tmp_path):
+    """Re-ingesting a same-name tenant with different values must miss the
+    artifact (stale numerics) and re-tune cold — correctly."""
+    from repro.core.sparse_matrix import CSRMatrix
+    A = make_matrix("rmat", scale=0.002)
+    store = str(tmp_path / "artifacts")
+    e1 = SparseMatrixEngine(num_shards=4, artifact_dir=store)
+    e1.ingest("a", A)
+    A2 = CSRMatrix(shape=A.shape, values=A.values * 2.0,
+                   col_index=A.col_index, row_ptr=A.row_ptr)
+    e2 = SparseMatrixEngine(num_shards=4, artifact_dir=store)
+    e2.ingest("a", A2)
+    assert not e2.stats()["a"]["warm_start"]
+    x = np.random.default_rng(1).standard_normal(A.ncols)
+    np.testing.assert_allclose(e2.spmv("a", x), csr_to_dense(A2) @ x,
+                               atol=1e-6)
+    # the fallback also rewrote the bundle: a third engine warm-starts A2
+    e3 = SparseMatrixEngine(num_shards=4, artifact_dir=store)
+    e3.ingest("a", A2)
+    assert e3.stats()["a"]["warm_start"]
+    assert np.array_equal(e3.spmv("a", x), e2.spmv("a", x))
+
+
+def test_disk_plan_cache_shared_across_engine_instances(tmp_path):
+    """plan_cache_dir makes the feature-keyed cache an L2 shared by
+    engine instances: the second instance skips the grid entirely."""
+    cache = str(tmp_path / "plans")
+    e1 = SparseMatrixEngine(num_shards=4, plan_cache_dir=cache)
+    c1 = e1.ingest("m1", make_matrix("rmat", scale=0.002, seed=0))
+    assert e1.plan_cache_hits == 0
+    e2 = SparseMatrixEngine(num_shards=4, plan_cache_dir=cache)
+    c2 = e2.ingest("m2", make_matrix("rmat", scale=0.002, seed=7))
+    assert e2.plan_cache_hits == 1
+    assert c2.plan == c1.plan
+    assert len(c2.ranking) == 1 and c2.probed == 0   # no grid re-run
+
+
+def test_per_tenant_rebalance_config_override():
+    from repro.serve.rebalance import RebalanceConfig
+    eng = SparseMatrixEngine(num_shards=4)           # no engine default
+    A = make_matrix("rmat", scale=0.002)
+    eng.ingest("watched", A, rebalance=RebalanceConfig(window=16))
+    eng.ingest("plain", A)
+    assert "rebalance" in eng.stats()["watched"]
+    assert "rebalance" not in eng.stats()["plain"]
+    # and an engine-wide default can be switched off per tenant
+    eng2 = SparseMatrixEngine(num_shards=4, rebalance=True)
+    eng2.ingest("off", A, rebalance=False)
+    eng2.ingest("on", A)
+    assert "rebalance" not in eng2.stats()["off"]
+    assert "rebalance" in eng2.stats()["on"]
+
+
+def test_micro_batching_gathers_concurrent_requests():
+    """Concurrent single-vector requests for one tenant share a batched
+    (N, B) execute and still return bitwise-solo results."""
+    import threading
+    from repro.serve.router import MicroBatchConfig
+    A = make_matrix("cop20k_A", scale=0.005)
+    solo = SparseMatrixEngine(num_shards=4)
+    solo.ingest("a", A)
+    eng = SparseMatrixEngine(
+        num_shards=4,
+        micro_batch=MicroBatchConfig(max_batch=4, max_wait_ms=100.0))
+    eng.ingest("a", A)
+    rng = np.random.default_rng(2)
+    xs = [rng.standard_normal(A.ncols) for _ in range(4)]
+    want = [solo.spmv("a", x) for x in xs]
+    got = [None] * 4
+    barrier = threading.Barrier(4)
+
+    def hit(i):
+        barrier.wait()
+        got[i] = eng.spmv("a", xs[i])
+
+    threads = [threading.Thread(target=hit, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for i in range(4):
+        assert np.array_equal(got[i], want[i]), i
+    mb = eng.stats()["a"]["micro_batch"]
+    assert mb["requests"] == 4
+    assert mb["widest"] >= 2                 # at least one real gather
+    assert eng.stats()["a"]["spmv_count"] == 4
+    # multi-RHS blocks bypass the batcher unchanged
+    X = np.stack(xs, axis=1)
+    assert np.array_equal(eng.spmv("a", X), np.stack(want, axis=1))
+
+
+def test_rebalance_swap_rewrites_artifact(tmp_path):
+    """After a drift-triggered swap the tenant's bundle holds the *new*
+    program: a restart warm-starts straight into the post-drift plan."""
+    from repro.serve.rebalance import RebalanceConfig
+    cfg = RebalanceConfig(window=32, patience=2, cooldown=2, probe=2)
+    A = make_matrix("cop20k_A", scale=0.005)
+    N = A.ncols
+    store = str(tmp_path / "artifacts")
+    eng = SparseMatrixEngine(num_shards=4, rebalance=cfg,
+                             artifact_dir=store)
+    eng.ingest("a", A)
+    m = eng._matrices["a"]
+    d = m.dist
+    order = np.arange(N) if d.perm is None else d.perm
+    hot = np.flatnonzero(d.x_layout.owner_of(order) == 0)
+    rng = np.random.default_rng(0)
+    k = max(N // 20, 8)
+    for _ in range(2 * cfg.window):                  # uniform warm-up
+        x = np.zeros(N)
+        x[rng.integers(0, N, k)] = rng.standard_normal(k)
+        eng.spmv("a", x)
+    for i in range(10 * cfg.window):                 # sustained hot-spot
+        x = np.zeros(N)
+        x[rng.choice(hot, size=k)] = rng.standard_normal(k)
+        eng.spmv("a", x)
+        if any(e.swapped for e in m.rebalance_log):
+            break
+    assert any(e.swapped for e in m.rebalance_log), "drift never swapped"
+    # restart: the bundle must hand back the swapped-in plan, warm
+    fresh = SparseMatrixEngine(num_shards=4, artifact_dir=store)
+    fresh.ingest("a", A)
+    assert fresh.stats()["a"]["warm_start"]
+    assert fresh.plan("a") == eng.plan("a")
+    x = np.zeros(N)
+    x[rng.choice(hot, size=k)] = rng.standard_normal(k)
+    assert np.array_equal(fresh.spmv("a", x), eng.spmv("a", x))
