@@ -88,16 +88,18 @@ def _host_us_per_spmv(prog, x, repeats: int = 10) -> float:
 
 
 def run_hetero_bench(*, M: int = 4096, nnz_per_row: int = 33,
-                     shards: int = 8, probe: int | None = None,
+                     shards: int = 8, probe: int | str | None = None,
                      seed: int = 0, fast: bool = False) -> dict:
     """Run the mixed-structure scenario; returns the headline dict.
 
     ``probe=None`` defaults to :data:`repro.core.plan.DEFAULT_PROBE`.
-    The recorded full run (``perf_probe --hetero``) passes ``probe=20``
-    explicitly to probe *every* (reordering, layout, distribution) base —
-    the structure-preserving bases this matrix rewards rank poorly on the
-    analytic issue term (the dense band is locality-rich but
-    load-imbalanced), so a small probe budget would never measure them.
+    The recorded full run (``perf_probe --hetero``) passes
+    ``probe="auto"``: the structure-preserving bases this matrix rewards
+    rank poorly on the analytic issue term (the dense band is
+    locality-rich but load-imbalanced), so the analytic-vs-measured
+    inversion rate stays unstable and adaptive probing keeps spending
+    probes until those bases are measured — no fixed full-grid budget
+    required.
     """
     probe = DEFAULT_PROBE if probe is None else probe
     if fast:
@@ -172,7 +174,7 @@ def _plan_kernels(plan, shards: int) -> tuple:
 
 
 def run_split_bench(*, M: int = 8192, shards: int = 8, n_monster: int = 8,
-                    probe: int | None = None, seed: int = 0,
+                    probe: int | str | None = None, seed: int = 0,
                     fast: bool = False) -> dict:
     """Run the power-law-tail (monster-row) scenario.
 
@@ -369,6 +371,13 @@ def check_pipeline(entry: dict, *, fast: bool = False) -> bool:
             entry.get("device_oracle_ok", True))
 
 
+def _probe_arg(s: str):
+    """CLI probe budget: an int, or the literal string ``auto``."""
+    if s == "auto":
+        return s
+    return int(s)
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload",
@@ -383,10 +392,11 @@ def main() -> int:
     ap.add_argument("--nnz-per-row", type=int, default=33,
                     help="mixed workload only")
     ap.add_argument("--shards", type=int, default=8)
-    ap.add_argument("--probe", type=int, default=None,
-                    help="autotune probe budget (default: "
-                         "repro.core.plan.DEFAULT_PROBE; the recorded "
-                         "perf_probe runs pass a larger budget explicitly)")
+    ap.add_argument("--probe", type=_probe_arg, default=None,
+                    help="autotune probe budget: an int, or 'auto' for "
+                         "adaptive probing (probe until the "
+                         "measured-vs-analytic inversion rate stabilizes; "
+                         "default: repro.core.plan.DEFAULT_PROBE)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--fast", action="store_true",
                     help="CI smoke: smaller matrix, analytic-only ranking, "

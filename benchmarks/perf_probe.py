@@ -179,9 +179,11 @@ def run_hetero_probe(out: str | None) -> int:
     analytic model, and reproduces the exact oracle).
     """
     from benchmarks.hetero_bench import check, run_hetero_bench
-    # probe=20 measures every (reordering, layout, distribution) base; the
-    # recorded full run must not depend on the small default probe budget.
-    entry = run_hetero_bench(probe=20)
+    # probe="auto" spends probes until the measured-vs-analytic inversion
+    # rate stabilizes; the recorded full run must not depend on the small
+    # default probe budget, and adaptive probing gets there without the
+    # old fixed probe=20 full sweep.
+    entry = run_hetero_bench(probe="auto")
     ok = check(entry)
     path = append_bench_entry(entry, out)
     print(json.dumps(entry, indent=2))
@@ -203,7 +205,7 @@ def run_split_probe(out: str | None) -> int:
     ``append_bench_entry`` verifies the entry actually landed on disk.
     """
     from benchmarks.hetero_bench import check_split, run_split_bench
-    entry = run_split_bench(probe=20)
+    entry = run_split_bench(probe="auto")
     ok = check_split(entry)
     path = append_bench_entry(entry, out)
     print(json.dumps(entry, indent=2))
@@ -238,6 +240,36 @@ def run_pipeline_probe(out: str | None) -> int:
           f"{md['speedup']}x (bar >= 1.15), bitwise "
           f"{entry.get('device_bitwise_ok')} -> "
           f"{'PASS' if ok else 'FAIL'}; recorded in {path}")
+    return 0 if ok else 1
+
+
+def run_bottleneck_probe(out: str | None, fast: bool) -> int:
+    """Record the bottleneck-oracle gating headline in ``BENCH_emu.json``.
+
+    Runs both scenarios of ``benchmarks/bottleneck_bench.py`` (amortized
+    eager-vs-gated trace cost on the stepped drift, low-traffic
+    amortization refusal) and appends the entry; exit status is the
+    bench's acceptance gate (gated matches or beats always-re-plan on
+    amortized cost with strictly fewer swaps; the volume-blind run swaps
+    on the low-share tenant while the gated run refuses it at the
+    amortization gate).
+    """
+    from benchmarks.bottleneck_bench import check, run_bottleneck_bench
+    kw = dict(scale=0.003, window=16) if fast else {}
+    entry = run_bottleneck_bench(**kw)
+    ok = check(entry)
+    path = append_bench_entry(entry, out)
+    print(json.dumps(entry, indent=2))
+    g = entry["gating"]
+    lt = entry["low_traffic"]
+    print(f"# bottleneck: eager {g['eager']['swaps']} swap(s) vs gated "
+          f"{g['gated']['swaps']} swap(s), amortized trace-cost ratio "
+          f"{g['amortized_trace_cost']['ratio_eager_vs_gated']}x "
+          f"(bar >= 0.98); low-traffic volume-blind "
+          f"{lt['volume_blind']['swaps']} swap(s) vs gated "
+          f"{lt['gated']['swaps']} ({lt['gated']['amortization_refusals']} "
+          f"amortization refusal(s)) -> {'PASS' if ok else 'FAIL'}; "
+          f"recorded in {path}")
     return 0 if ok else 1
 
 
@@ -291,6 +323,13 @@ def main():
                     help="run the multi-tenant cold-vs-warm trace-replay "
                          "bench and record headline numbers (benchmarks/"
                          "trace_replay.py)")
+    ap.add_argument("--bottleneck", action="store_true",
+                    help="run the bottleneck-oracle amortization-gate "
+                         "bench and record headline numbers (benchmarks/"
+                         "bottleneck_bench.py)")
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller matrix/stream for the --bottleneck bench "
+                         "(same acceptance gates; the CI smoke setting)")
     ap.add_argument("--scale", type=float, default=1.0,
                     help="fig8 matrix scale for the vectorized timing")
     ap.add_argument("--ref-scale", type=float, default=0.02,
@@ -321,6 +360,8 @@ def main():
         sys.exit(run_pipeline_probe(args.out))
     if args.serve:
         sys.exit(run_serve_probe(args.out))
+    if args.bottleneck:
+        sys.exit(run_bottleneck_probe(args.out, args.fast))
     if args.arch is None or args.shape is None:
         ap.error("arch and shape are required unless --emu is given")
 

@@ -12,9 +12,9 @@ import traceback
 def main() -> None:
     import json
 
-    from . import (autotune_bench, fig3_layout, fig6_distribution, fig7_cv,
-                   fig8_residency, fig10_reorder, fig12_cache, hetero_bench,
-                   kernels_bench)
+    from . import (autotune_bench, bottleneck_bench, fig3_layout,
+                   fig6_distribution, fig7_cv, fig8_residency, fig10_reorder,
+                   fig12_cache, hetero_bench, kernels_bench)
     sections = [
         ("Fig.3 cyclic-vs-block", fig3_layout.run),
         # fast=True keeps the all-sections sweep snappy; run the fig6/fig8
@@ -29,6 +29,10 @@ def main() -> None:
         ("Per-shard program vs best global (hetero)",
          lambda: print(json.dumps(hetero_bench.run_hetero_bench(fast=True),
                                   indent=2))),
+        ("Bottleneck oracle: gated vs always-re-plan",
+         lambda: print(json.dumps(
+             bottleneck_bench.run_bottleneck_bench(scale=0.003, window=16),
+             indent=2))),
     ]
     try:
         from . import roofline

@@ -134,13 +134,70 @@ class EmuResult:
         return float(m.std() / m.mean()) if m.mean() else 0.0
 
 
+#: Serialized carry fix-up instructions per spanned chunk boundary in the
+#: seg/split home streams: each carry is a read-modify-write on the output
+#: row that cannot overlap the scan (the §IV-D monster-row chain, seen by
+#: the tick machine instead of only by the analytic slot model).
+_KERNEL_CARRY_INSTR = 8
+#: Scatter-add instructions per HYB overflow entry (indexed read-modify-
+#: write on b, no scan amortization).
+_KERNEL_OVF_INSTR = 4
+
+
+def _home_row_weights(rows: np.ndarray, kernel: str | None) -> np.ndarray:
+    """Per-row home-nodelet instruction counts for one shard's row slice.
+
+    ``rows`` is the shard's per-row nnz vector; ``kernel`` selects the
+    format's instruction stream.  ``None`` is the format-agnostic CSR walk
+    (``2 + 2*nnz``) that every pre-oracle trace used — callers that do not
+    pass ``shard_kernels`` get byte-identical traces.
+    """
+    rows = rows.astype(np.int64)
+    if kernel is None:
+        return 2 + 2 * rows
+    if kernel == "ell":
+        # Padded slab stream: every row walks the shard's widest row.
+        W = int(rows.max()) if rows.size else 0
+        return np.full(rows.shape, 2 + 2 * max(W, 1), dtype=np.int64)
+    from ..kernels.ops import SEG_CHUNK
+    if kernel == "seg":
+        spans = -(-rows // SEG_CHUNK)
+        carries = np.maximum(spans - 1, 0)
+        return 2 + 3 * rows + _KERNEL_CARRY_INSTR * carries
+    if kernel == "hyb":
+        from .sparse_matrix import hyb_cap_width
+        Wc = int(hyb_cap_width(rows)) if rows.size else 1
+        ovf = np.maximum(rows - Wc, 0)
+        return 2 + 2 * np.minimum(rows, Wc) + _KERNEL_OVF_INSTR * ovf
+    if kernel == "split":
+        from .plan import split_meta
+        ns = split_meta(int(rows.sum()), int(rows.max()) if rows.size else 0)
+        spans = -(-rows // SEG_CHUNK)
+        carries = np.maximum(-(-spans // ns) - 1, 0)
+        # Stage-2 combine reads ns partials back into each output row.
+        return 2 + 3 * rows + _KERNEL_CARRY_INSTR * carries + ns
+    raise ValueError(f"unknown kernel format: {kernel!r}")
+
+
 def build_thread_traces(csr: CSRMatrix, part: Partition, x_layout: VectorLayout,
-                        threads_per_nodelet: int) -> tuple[List[np.ndarray], List[np.ndarray], np.ndarray]:
+                        threads_per_nodelet: int,
+                        shard_kernels: Sequence[str] | None = None,
+                        ) -> tuple[List[np.ndarray], List[np.ndarray], np.ndarray]:
     """Compressed (node, weight) segments per thread.
 
     Per row: the home nodelet executes 2 instrs/nnz (value+colIndex loads) +
     2 instrs (rowPtr read, b accumulate/remote-update issue); each x load is
     1 instr on the owner nodelet.  Consecutive same-node entries merge.
+
+    ``shard_kernels`` (one format name per shard, as produced by
+    ``SpmvPlan.resolved_shard_kernels()``) switches each shard's *home*
+    stream to that format's instruction shape — ELL walks the padded slab
+    width, seg adds the scan pass and the serialized cross-chunk carry
+    fix-up, hyb caps the slab and scatter-adds the overflow, split cuts
+    each carry chain by the policy split count and pays the stage-2
+    combine (:func:`_home_row_weights`).  The x-load stream (owner-side,
+    1 instr each) is format-independent.  ``None`` keeps the historic
+    format-agnostic walk, byte for byte.
     """
     P = part.num_shards
     thread_starts = part.thread_splits(csr, threads_per_nodelet)
@@ -149,6 +206,15 @@ def build_thread_traces(csr: CSRMatrix, part: Partition, x_layout: VectorLayout,
     homes = []
     owners_all = x_layout.owner_of(csr.col_index).astype(np.int32)
     rp = csr.row_ptr
+    if shard_kernels is not None and len(shard_kernels) != P:
+        raise ValueError(f"shard_kernels has {len(shard_kernels)} entries "
+                         f"for {P} shards")
+    home_w_all = np.empty(csr.nrows, dtype=np.int64)
+    all_rows = np.diff(rp).astype(np.int64)
+    for p in range(P):
+        s0, s1 = int(part.starts[p]), int(part.starts[p + 1])
+        kern = None if shard_kernels is None else shard_kernels[p]
+        home_w_all[s0:s1] = _home_row_weights(all_rows[s0:s1], kern)
     for p in range(P):
         starts = thread_starts[p]
         for t in range(threads_per_nodelet):
@@ -162,14 +228,13 @@ def build_thread_traces(csr: CSRMatrix, part: Partition, x_layout: VectorLayout,
             k = hi - lo
             nrows = r1 - r0
             # Interleaved walk: home-entry at every row start, owner per nnz.
-            row_nnz = np.diff(rp[r0 : r1 + 1]).astype(np.int64)
             seq = np.empty(k + nrows, dtype=np.int32)
             wts = np.empty(k + nrows, dtype=np.int64)
             home_pos = (rp[r0:r1] - lo + np.arange(nrows)).astype(np.int64)
             mask = np.zeros(k + nrows, dtype=bool)
             mask[home_pos] = True
             seq[mask] = p
-            wts[mask] = 2 + 2 * row_nnz        # rowPtr + b + (val+col)/nnz
+            wts[mask] = home_w_all[r0:r1]      # format-shaped home stream
             seq[~mask] = owners_all[lo:hi]
             wts[~mask] = 1                      # the x load itself
 
@@ -764,10 +829,17 @@ def simulate_reference(seg_nodes: Sequence[np.ndarray],
 
 def run_spmv(csr: CSRMatrix, part: Partition, x_layout: VectorLayout,
              cfg: EmuConfig | None = None, *,
-             engine: str = "vectorized") -> EmuResult:
-    """End-to-end: build traces for (matrix, partition, layout) and simulate."""
+             engine: str = "vectorized",
+             shard_kernels: Sequence[str] | None = None) -> EmuResult:
+    """End-to-end: build traces for (matrix, partition, layout) and simulate.
+
+    ``shard_kernels`` forwards to :func:`build_thread_traces` so a probe
+    can replay the *format-shaped* instruction streams of a lowered
+    per-shard program instead of the format-agnostic CSR walk.
+    """
     cfg = cfg or EmuConfig(nodelets=part.num_shards)
     nodes, weights, homes = build_thread_traces(csr, part, x_layout,
-                                                cfg.threads_per_nodelet)
+                                                cfg.threads_per_nodelet,
+                                                shard_kernels=shard_kernels)
     return simulate(nodes, weights, homes, cfg, useful_bytes(csr),
                     engine=engine)

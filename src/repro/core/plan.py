@@ -64,6 +64,33 @@ __all__ = ["DEFAULT_PROBE", "KERNELS", "SPLIT_CORES", "SPLIT_MIN_SPAN",
 #: minutes; pass ``probe=0`` for the analytic-only ranking.
 DEFAULT_PROBE = 4
 
+#: Adaptive-probe (``probe="auto"``) stopping rule: keep probing distinct
+#: bases in analytic-rank order, tracking the pairwise *inversion rate*
+#: between the analytic ordering and the measured seconds among probed
+#: bases.  Once at least ``AUTO_PROBE_MIN`` bases are probed and the rate
+#: has moved by at most ``AUTO_PROBE_TOL`` for ``AUTO_PROBE_STREAK``
+#: consecutive probes, the analytic ranking is trusted for the remaining
+#: tail — the estimate of how often the model mis-orders bases has
+#: stopped changing, so more probes no longer buy information.
+AUTO_PROBE_MIN = 4
+AUTO_PROBE_STREAK = 2
+AUTO_PROBE_TOL = 0.05
+
+
+def _inversion_rate(seconds: Sequence[float]) -> float:
+    """Pairwise inversion rate of measured seconds vs analytic order.
+
+    ``seconds`` is listed in analytic-rank order (best model total
+    first); an inversion is a pair the probe measured in the opposite
+    order.  0.0 = the model's ordering is fully trustworthy so far.
+    """
+    n = len(seconds)
+    if n < 2:
+        return 0.0
+    inv = sum(1 for i in range(n) for j in range(i + 1, n)
+              if seconds[i] > seconds[j])
+    return inv / (n * (n - 1) / 2)
+
 #: Weight of the TPU-side kernel-execution term relative to Emu issue
 #: cycles.  Small enough that Emu-visible terms dominate across (layout,
 #: distribution, reordering) bases; decisive between the per-shard
@@ -434,6 +461,13 @@ class PlanChoice:
     #: the audit trail for its shard_kernels.  None on legacy JSON and on
     #: externally-supplied plans.
     shard_features: tuple | None = None
+    #: Bottleneck class of the whole matrix / of each winning-partition
+    #: shard (:meth:`repro.core.oracle.CostOracle.classify` — the Elafrou
+    #: bandwidth/latency/imbalance taxonomy).  Deterministic functions of
+    #: the features above, persisted so a serving layer can audit *why*
+    #: a plan was picked.  None on legacy JSON.
+    bottleneck: str | None = None
+    shard_bottlenecks: tuple | None = None
 
     @property
     def plan(self) -> SpmvPlan:
@@ -448,6 +482,9 @@ class PlanChoice:
             "probed": self.probed,
             "shard_features": None if self.shard_features is None else
             [f.to_dict() for f in self.shard_features],
+            "bottleneck": self.bottleneck,
+            "shard_bottlenecks": None if self.shard_bottlenecks is None
+            else list(self.shard_bottlenecks),
         }, indent=indent)
 
     @classmethod
@@ -455,7 +492,9 @@ class PlanChoice:
         """Inverse of :meth:`to_json` (exact dataclass equality).
 
         Tolerates pre-per-shard JSON: absent ``shard_features`` /
-        ``plan.shard_kernels`` load as ``None`` (uniform program)."""
+        ``plan.shard_kernels`` load as ``None`` (uniform program); absent
+        ``bottleneck`` / ``shard_bottlenecks`` (pre-oracle JSON) load as
+        ``None`` too."""
         d = json.loads(s)
         ranking = tuple(
             RankedPlan(plan=SpmvPlan(**r["plan"]),
@@ -464,10 +503,13 @@ class PlanChoice:
                        probe_mbs=r["probe_mbs"])
             for r in d["ranking"])
         sf = d.get("shard_features")
+        sb = d.get("shard_bottlenecks")
         return cls(features=MatrixFeatures(**d["features"]),
                    ranking=ranking, probed=int(d["probed"]),
                    shard_features=None if sf is None else
-                   tuple(ShardFeatures(**f) for f in sf))
+                   tuple(ShardFeatures(**f) for f in sf),
+                   bottleneck=d.get("bottleneck"),
+                   shard_bottlenecks=None if sb is None else tuple(sb))
 
 
 # --------------------------------------------------------------------------
@@ -732,15 +774,18 @@ def device_path_model(A: CSRMatrix, part: Partition, plan: SpmvPlan,
       ``max(max_p(local_p), comm) + max_p(remote_p)``.
 
     ``A``/``part`` must already be in the plan's reordered index space.
-    Returns the two latencies (cycles) plus every term.
+    Returns the two latencies (cycles) plus every term.  The per-shard
+    tables come from the :class:`~repro.core.oracle.CostOracle` facade —
+    the same single set of weights every other consumer queries.
     """
+    from .oracle import DEFAULT_ORACLE as oracle
     emu = emu or EmuConfig(nodelets=plan.num_shards)
-    costs = kernel_shard_costs(A, part)
+    costs = oracle.kernel_costs(A, part)
     slots = np.array([costs[k][p] for p, k in
                       enumerate(plan.resolved_shard_kernels())],
                      dtype=np.float64)
     share = remote_row_share(A, part, plan.layout)
-    ex = exchange_shard_costs(A, part, layout=plan.layout)
+    ex = oracle.exchange_costs(A, part, layout=plan.layout)
     per = np.array([ex[e][p] for p, e in
                     enumerate(plan.resolved_shard_exchanges())],
                    dtype=np.float64)
@@ -854,9 +899,10 @@ def estimate_cost(csr: CSRMatrix, plan: SpmvPlan, *,
         A = csr.permuted(perm, perm)
         w = None if col_weight is None else _permute_weights(
             np.asarray(col_weight, dtype=np.float64), perm)
+    from .oracle import DEFAULT_ORACLE as oracle
     part = make_partition(A, plan.num_shards, plan.distribution)
     base = _base_metrics(A, part, plan.layout, emu, col_weight=w)
-    costs = kernel_shard_costs(A, part)
+    costs = oracle.kernel_costs(A, part)
     sk = plan.resolved_shard_kernels()
     slots_p = np.array([costs[k][p] for p, k in enumerate(sk)],
                        dtype=np.float64)
@@ -909,7 +955,7 @@ def autotune(csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
              reorderings: Iterable[str] = REORDERINGS,
              kernels: Sequence[str] = KERNELS,
              exchanges: Sequence[str] = ("halo", "allgather"),
-             probe: int | None = None,
+             probe: int | str | None = None,
              emu: EmuConfig | None = None,
              col_weight: np.ndarray | None = None,
              per_shard: bool = True) -> PlanChoice:
@@ -949,12 +995,19 @@ def autotune(csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
         Candidate axes; defaults are the full paper grid (kernels now
         include the HYB capped-ELL + overflow format and the split-nnz
         two-stage ``split`` family).
-    probe : int, optional
+    probe : int or "auto", optional
         Number of distinct bases to simulate; defaults to
         :data:`DEFAULT_PROBE` (0 = analytic only).  The probe runs the
         vectorized Emu engine, so re-ranking is cheap enough to stay on
         for serving-time ingestion (``serve.engine.SparseMatrixEngine``);
         ``benchmarks/autotune_bench.py`` checks the resulting regret.
+        ``probe="auto"`` spends probes adaptively: bases are measured in
+        analytic-rank order until the measured-vs-analytic pairwise
+        inversion rate stabilizes (:data:`AUTO_PROBE_MIN` /
+        :data:`AUTO_PROBE_TOL` / :data:`AUTO_PROBE_STREAK`), so easy
+        matrices stop after a handful of probes while model-hostile ones
+        keep probing up to the full base grid — this is what lets
+        ``benchmarks/hetero_bench.py`` drop its fixed ``probe=20``.
     emu : EmuConfig, optional
         Machine constants for both the model and the probe.
     col_weight : np.ndarray, optional
@@ -991,8 +1044,12 @@ def autotune(csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
     >>> len(choice.shard_features)    # winner's per-shard audit trail
     4
     """
+    from .oracle import DEFAULT_ORACLE as oracle
     emu = emu or EmuConfig(nodelets=num_shards)
     probe = DEFAULT_PROBE if probe is None else probe
+    adaptive = isinstance(probe, str)
+    if adaptive and probe != "auto":
+        raise ValueError(f"probe must be an int or 'auto', got {probe!r}")
     if col_weight is not None:
         col_weight = np.asarray(col_weight, dtype=np.float64)
 
@@ -1017,11 +1074,11 @@ def autotune(csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
         for dist in distributions:
             part = make_partition(A, num_shards, dist)
             parts[(method, dist)] = part
-            costs = kernel_shard_costs(A, part)
+            costs = oracle.kernel_costs(A, part)
             shard_sel = None
             if per_shard and len(kernels) > 1:
-                sel = select_shard_kernels(A, part, kernels=kernels,
-                                           costs=costs)
+                sel = oracle.select_kernels(A, part, kernels=kernels,
+                                            costs=costs)
                 if len(set(sel)) > 1:     # uniform pick == existing plan
                     shard_sel = sel
             for layout in layouts:
@@ -1032,7 +1089,7 @@ def autotune(csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
                 ex_sel = None
                 if per_shard and "halo" in exchanges \
                         and "allgather" in exchanges:
-                    sel = select_shard_exchanges(A, part, layout)
+                    sel = oracle.select_exchanges(A, part, layout)
                     if len(set(sel)) > 1:  # uniform pick == existing plan
                         ex_sel = sel
                 loc = {k: float((costs[k] * (1.0 - share)).sum())
@@ -1085,19 +1142,23 @@ def autotune(csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
     candidates.sort(key=lambda r: r.cost.total)
 
     n_probed = 0
-    if probe > 0:
+    if adaptive or probe > 0:
         # Traffic-thinned probe source, cut once in the caller's order so
         # every probed base sees the same entry set (then permuted per
         # reordering alongside the plan itself).
         probe_src = csr if col_weight is None else \
             _active_submatrix(csr, col_weight, seed=seed)
         probe_times: dict[tuple, tuple[float, float]] = {}
+        auto_secs: list[float] = []   # analytic-rank order, adaptive mode
+        auto_rate = 0.0
+        auto_streak = 0
+        auto_done = False
         for cand in candidates:
             key = (cand.plan.reordering, cand.plan.layout,
                    cand.plan.distribution)
             if key in probe_times:
                 continue
-            if len(probe_times) >= probe:
+            if auto_done if adaptive else len(probe_times) >= probe:
                 continue
             A = reordered[cand.plan.reordering]
             part = make_partition(A, num_shards, cand.plan.distribution)
@@ -1111,6 +1172,17 @@ def autotune(csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
                            make_layout(cand.plan.layout, A.ncols, num_shards),
                            emu)
             probe_times[key] = (float(res.seconds), float(res.bandwidth_mbs))
+            if adaptive:
+                auto_secs.append(float(res.seconds))
+                rate = _inversion_rate(auto_secs)
+                if len(auto_secs) >= AUTO_PROBE_MIN:
+                    if abs(rate - auto_rate) <= AUTO_PROBE_TOL:
+                        auto_streak += 1
+                        if auto_streak >= AUTO_PROBE_STREAK:
+                            auto_done = True
+                    else:
+                        auto_streak = 0
+                auto_rate = rate
         probed = []
         for cand in candidates:
             key = (cand.plan.reordering, cand.plan.layout,
@@ -1129,9 +1201,14 @@ def autotune(csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
     shard_features = extract_shard_features(
         reordered[winner.reordering],
         parts[(winner.reordering, winner.distribution)])
-    return PlanChoice(features=extract_features(csr, num_shards=num_shards),
+    features = extract_features(csr, num_shards=num_shards)
+    return PlanChoice(features=features,
                       ranking=tuple(candidates), probed=n_probed,
-                      shard_features=shard_features)
+                      shard_features=shard_features,
+                      bottleneck=oracle.classify(features),
+                      shard_bottlenecks=oracle.classify_shards(
+                          shard_features,
+                          remote_frac=features.remote_frac))
 
 
 # --------------------------------------------------------------------------

@@ -190,16 +190,18 @@ class SpmvPlan:
 
     @classmethod
     def auto(cls, csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
-             probe: int | None = None, **grid) -> "SpmvPlan":
+             probe: int | str | None = None, **grid) -> "SpmvPlan":
         """Pick a plan for ``csr`` with the cost-model autotuner.
 
         Thin wrapper over :func:`repro.core.plan.autotune` (which see for
         the candidate grid — including per-shard kernel selection — and
         the ``probe`` refinement: simulator re-ranking of the top
-        ``plan.DEFAULT_PROBE`` bases unless overridden); returns only the
-        winning plan.  Use ``autotune`` directly when the full ranking or
-        the JSON-serializable :class:`~repro.core.plan.PlanChoice` is
-        needed (the serving engine persists it per ingested matrix).
+        ``plan.DEFAULT_PROBE`` bases unless overridden; ``probe="auto"``
+        probes adaptively until the measured-vs-analytic inversion rate
+        stabilizes); returns only the winning plan.  Use ``autotune``
+        directly when the full ranking or the JSON-serializable
+        :class:`~repro.core.plan.PlanChoice` is needed (the serving
+        engine persists it per ingested matrix).
         """
         from .plan import autotune
         return autotune(csr, num_shards=num_shards, seed=seed, probe=probe,

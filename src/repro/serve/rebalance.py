@@ -21,11 +21,12 @@ columns are hot.  This module closes the loop:
      the plan carries a kernel per shard, so the first response to a trip
      is local: re-derive the hot shards' kernels on the
      traffic-thinned structure (:func:`~repro.core.plan._active_submatrix`
-     + :func:`~repro.core.plan.kernel_shard_costs` against the *deployed*
-     partition), gate on the load-weighted kernel-slot cost improving by
-     ``min_gain``, and rebuild **only the changed stages**
-     (:func:`~repro.core.program.relower` shares every other stage with
-     the incumbent program).  No grid, no probes, no full rebuild.
+     + the :class:`~repro.core.oracle.CostOracle` kernel table against
+     the *deployed* partition), gate on the load-weighted kernel-slot
+     cost improving by ``min_gain``, and rebuild **only the changed
+     stages** (:func:`~repro.core.program.relower` shares every other
+     stage with the incumbent program).  No grid, no probes, no full
+     rebuild.
    * **Full.** When no hot-shard kernel change pays, :func:`replan`
      reruns the autotuner traffic-weighted (``autotune(...,
      col_weight=...)``) under a budget (restricted reordering grid, small
@@ -51,13 +52,12 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.emu import EmuConfig, run_spmv
-from repro.core.layout import make_layout
+from repro.core.emu import EmuConfig
 from repro.core.migration import shard_load_map
 from repro.core.partition import make_partition
+from repro.core.oracle import DEFAULT_ORACLE as _oracle
 from repro.core.plan import KERNELS, PlanChoice, RankedPlan, \
-    _active_submatrix, _permute_weights, autotune, estimate_cost, \
-    exchange_shard_costs, kernel_shard_costs
+    _active_submatrix, _permute_weights, autotune
 from repro.core.program import SpmvProgram, lower, relower
 from repro.core.reorder import REORDERINGS, reordering_permutation
 from repro.core.sparse_matrix import CSRMatrix, csr_matvec
@@ -128,6 +128,16 @@ class RebalanceConfig:
     #: one request; async keeps request latency flat and swaps when the
     #: worker finishes (requests served meanwhile use the old program).
     async_replan: bool = False
+    #: Asudeh amortization gate (arXiv 2506.10356): project re-plan
+    #: amortization over this many future *engine* requests — the router
+    #: scales it by the tenant's observed traffic share into the
+    #: ``amortization_horizon`` it hands :func:`replan`, and a swap only
+    #: goes through when ``horizon * gain`` covers the swap's one-time
+    #: cost in SpMV equivalents
+    #: (:data:`~repro.core.oracle.REPLAN_SPMV_EQUIV`).  ``None`` (the
+    #: default) keeps the legacy volume-blind gate: every swap that
+    #: clears ``min_gain`` pays, regardless of traffic volume.
+    amortization_lookahead: int | None = None
 
 
 @dataclasses.dataclass
@@ -311,7 +321,12 @@ def probe_plan_seconds(csr: CSRMatrix, plan: SpmvPlan,
     (:func:`~repro.core.plan._active_submatrix`), and run through the
     vectorized Emu timeline engine with the plan's partition/layout — a
     millisecond-cheap measurement of how the *deployed* program handles
-    the traffic the monitor actually saw.
+    the traffic the monitor actually saw.  The probe goes through
+    :meth:`~repro.core.oracle.CostOracle.probe` with the plan's per-shard
+    kernels, so the tick machine replays each shard's *format-shaped*
+    instruction stream (seg carry chains, hyb overflow scatter, split
+    combine) — kernel differences now show up in measured seconds instead
+    of being invisible to the probe.
     """
     emu = emu or EmuConfig(nodelets=plan.num_shards)
     # Thin once in caller order (identical entry set for every plan being
@@ -327,8 +342,7 @@ def probe_plan_seconds(csr: CSRMatrix, plan: SpmvPlan,
     # The partition is the deployed one: cut on the full matrix, probed on
     # the traffic it actually serves.
     part = make_partition(A, plan.num_shards, plan.distribution)
-    res = run_spmv(sub_r, part, make_layout(plan.layout, A.ncols,
-                                            plan.num_shards), emu)
+    res = _oracle.probe(sub_r, part, plan, emu=emu)
     return float(res.seconds)
 
 
@@ -356,7 +370,8 @@ def _validated(dist: SpmvProgram, csr: CSRMatrix, cfg: RebalanceConfig,
 def _try_partial_replan(csr: CSRMatrix, monitor: LoadMonitor,
                         current: PlanChoice, program: SpmvProgram,
                         w: np.ndarray, cfg: RebalanceConfig,
-                        request_index: int):
+                        request_index: int,
+                        amortization_horizon: float | None = None):
     """Hot-shard-only kernel/exchange re-selection; None when inapplicable.
 
     Two independent axes, each with its own gate:
@@ -373,9 +388,15 @@ def _try_partial_replan(csr: CSRMatrix, monitor: LoadMonitor,
       including the split-nnz two-stage ``split`` family, so a shard that
       drifted onto a monster-row hot-spot can be swapped onto split
       partials without a full re-plan (the split count re-derives from
-      :func:`~repro.core.plan.split_meta` at relower time).
+      :func:`~repro.core.plan.split_meta` at relower time).  ``split`` is
+      only offered to a hot shard when the *thinned* structure still has
+      a row spanning at least ``SPLIT_MIN_SPAN`` seg chunks
+      (:meth:`~repro.core.oracle.CostOracle.split_span_ok`): heavy
+      thinning of a mildly-skewed stream can shorten a monster row below
+      the span floor, and a split chosen on that table would deploy a
+      pure-overhead stage 2 against the real matrix.
     * **Exchange.**  The hot shards' exchange policies are re-derived the
-      same way from :func:`~repro.core.plan.exchange_shard_costs` on the
+      same way from the oracle's exchange table on the
       thinned structure, gated on the load-weighted exchange cost
       improving by ``cfg.min_gain``.  A flip rebuilds **no** stages at
       all — exchange is not a lowering-base field, so ``relower`` shares
@@ -400,12 +421,15 @@ def _try_partial_replan(csr: CSRMatrix, monitor: LoadMonitor,
         sub.permuted(program.perm, program.perm)
 
     # -- kernel axis --------------------------------------------------------
-    costs = kernel_shard_costs(sub_r, program.partition)
+    costs = _oracle.kernel_costs(sub_r, program.partition)
     old_k = old_plan.resolved_shard_kernels()
     new_k = list(old_k)
     for p in hot:
-        new_k[p] = min(KERNELS, key=lambda k: (costs[k][p],
-                                               KERNELS.index(k)))
+        kerns = KERNELS if _oracle.split_span_ok(sub_r, program.partition,
+                                                 int(p)) \
+            else tuple(k for k in KERNELS if k != "split")
+        new_k[p] = min(kerns, key=lambda k: (costs[k][p],
+                                             KERNELS.index(k)))
     kernel_ok = tuple(new_k) != tuple(old_k)
     if kernel_ok:
         old_c = float(sum(load[p] * costs[k][p]
@@ -418,8 +442,8 @@ def _try_partial_replan(csr: CSRMatrix, monitor: LoadMonitor,
         new_k = list(old_k)
 
     # -- exchange axis ------------------------------------------------------
-    ex_costs = exchange_shard_costs(sub_r, program.partition,
-                                    layout=old_plan.layout)
+    ex_costs = _oracle.exchange_costs(sub_r, program.partition,
+                                      layout=old_plan.layout)
     old_e = old_plan.resolved_shard_exchanges()
     new_e = list(old_e)
     for p in hot:
@@ -439,6 +463,20 @@ def _try_partial_replan(csr: CSRMatrix, monitor: LoadMonitor,
 
     if not (kernel_ok or ex_ok):
         return None
+
+    # Asudeh amortization gate: even a relower-only swap has a one-time
+    # cost; at low projected volume it never pays back.
+    num = den = 0.0
+    if kernel_ok:
+        num += old_c - new_c
+        den += old_c
+    if ex_ok:
+        num += old_ec - new_ec
+        den += old_ec
+    gain = num / max(den, 1e-30)
+    if not _oracle.replan_pays(gain, amortization_horizon,
+                               mode="partial").pays:
+        return None                       # fall through to the full tier
 
     new_plan = old_plan
     if kernel_ok:
@@ -461,8 +499,10 @@ def _try_partial_replan(csr: CSRMatrix, monitor: LoadMonitor,
     choice = PlanChoice(
         features=current.features,
         ranking=(RankedPlan(plan=new_plan,
-                            cost=estimate_cost(csr, new_plan)),),
-        probed=0, shard_features=current.shard_features)
+                            cost=_oracle.plan_cost(csr, new_plan)),),
+        probed=0, shard_features=current.shard_features,
+        bottleneck=current.bottleneck,
+        shard_bottlenecks=current.shard_bottlenecks)
     parts = []
     if kernel_ok:
         parts.append(
@@ -490,7 +530,8 @@ def _try_partial_replan(csr: CSRMatrix, monitor: LoadMonitor,
 
 def replan(csr: CSRMatrix, monitor: LoadMonitor, current: PlanChoice, *,
            num_shards: int, seed: int, cfg: RebalanceConfig,
-           request_index: int, program: SpmvProgram | None = None
+           request_index: int, program: SpmvProgram | None = None,
+           amortization_horizon: float | None = None
            ) -> tuple[SpmvProgram | None, PlanChoice | None,
                       RebalanceEvent]:
     """Budgeted traffic-weighted re-plan with oracle gate + validated build.
@@ -504,6 +545,15 @@ def replan(csr: CSRMatrix, monitor: LoadMonitor, current: PlanChoice, *,
     :func:`~repro.core.program.relower`, so even full re-plans reuse every
     unchanged stage.
 
+    ``amortization_horizon`` (projected SpMVs the tenant will issue
+    against the new plan; the router derives it from per-tenant traffic
+    stats and ``cfg.amortization_lookahead``) arms the Asudeh gate: each
+    tier's swap must additionally satisfy
+    :meth:`~repro.core.oracle.CostOracle.replan_pays` — a positive-gain
+    swap a volume-blind model would take is refused when the projected
+    volume cannot amortize its one-time cost.  ``None`` (the default)
+    keeps the legacy volume-blind behavior.
+
     Returns ``(new_dist, new_choice, event)``; the first two are ``None``
     when the re-plan was rejected (plan unchanged, no modeled gain, or
     validation failure) — the caller keeps serving the old program either
@@ -514,7 +564,8 @@ def replan(csr: CSRMatrix, monitor: LoadMonitor, current: PlanChoice, *,
 
     if cfg.partial_first and program is not None:
         partial = _try_partial_replan(csr, monitor, current, program, w,
-                                      cfg, request_index)
+                                      cfg, request_index,
+                                      amortization_horizon)
         if partial is not None:
             return partial
 
@@ -544,17 +595,29 @@ def replan(csr: CSRMatrix, monitor: LoadMonitor, current: PlanChoice, *,
                     for f in ("layout", "distribution", "reordering",
                               "num_shards", "seed"))
     if same_base:
-        # The Emu oracle only separates bases; a same-base candidate
-        # (kernel/exchange-only change) is gated by the traffic-weighted
-        # analytic model instead.
-        old_t = estimate_cost(csr, old_plan, col_weight=w).total
-        new_t = estimate_cost(csr, new_plan, col_weight=w).total
+        # The format-aware Emu probe can separate same-base candidates
+        # too, but the traffic-weighted analytic model stays the
+        # authoritative same-base gate (cheaper, and pinned by the
+        # frozen-fixture suite); the probe gates across bases.
+        old_t = _oracle.plan_cost(csr, old_plan, col_weight=w).total
+        new_t = _oracle.plan_cost(csr, new_plan, col_weight=w).total
         if new_t > (1.0 - cfg.min_gain) * old_t:
             return rejected("analytic model: no modeled gain over incumbent "
                             "(same base)", old_s, new_s)
+        gain = 1.0 - new_t / max(old_t, 1e-30)
     elif new_s > (1.0 - cfg.min_gain) * old_s:
         return rejected("drift oracle: no modeled gain over incumbent",
                         old_s, new_s)
+    else:
+        gain = 1.0 - new_s / max(old_s, 1e-30)
+
+    decision = _oracle.replan_pays(gain, amortization_horizon, mode="full")
+    if not decision.pays:
+        return rejected(
+            f"amortization gate: modeled gain {gain:.1%} needs "
+            f"{decision.break_even_spmvs:.0f} SpMVs to pay off, but the "
+            f"projected horizon is {amortization_horizon:.0f}",
+            old_s, new_s)
 
     # Double-buffered build: the old program keeps serving until the new
     # one exists and reproduces the exact CSR oracle.  Same-base winners

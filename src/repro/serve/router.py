@@ -175,7 +175,9 @@ class SparseMatrixEngine:
     """Multi-tenant serving router for SpMV: ingest once, serve many.
 
     ``ingest`` runs the cost-model autotuner (with Emu-simulator probe
-    re-ranking by default; pass ``probe=0`` to opt out) and lowers the
+    re-ranking by default; pass ``probe=0`` to opt out, or
+    ``probe="auto"`` to spend probes adaptively until the
+    measured-vs-analytic inversion rate stabilizes) and lowers the
     winning plan — unless a warm path answers first, in cheapness order:
 
     1. **artifact store** (``artifact_dir=``): same-bytes digest hit
@@ -198,7 +200,8 @@ class SparseMatrixEngine:
     swap rewrites the tenant's artifact so restarts resume the new plan.
     """
 
-    def __init__(self, *, num_shards: int = 8, probe: int | None = None,
+    def __init__(self, *, num_shards: int = 8,
+                 probe: int | str | None = None,
                  seed: int = 0,
                  rebalance: RebalanceConfig | bool | None = None,
                  plan_cache: bool = True,
@@ -222,6 +225,10 @@ class SparseMatrixEngine:
         self.plan_cache_hits = 0
         self.warm_starts = 0
         self.artifact_write_errors = 0
+        #: Engine-wide served-request count — the denominator of each
+        #: tenant's traffic share, which scales the amortization horizon
+        #: the re-plan gate sees (``RebalanceConfig.amortization_lookahead``).
+        self.total_requests = 0
 
     # -- ingest ------------------------------------------------------------
 
@@ -244,13 +251,14 @@ class SparseMatrixEngine:
         if prog.plan.num_shards != self.num_shards:
             return None                # deployment reshaped: re-lower cold
         if choice is None:
-            from repro.core.plan import RankedPlan, estimate_cost, \
-                extract_features
+            from repro.core.oracle import DEFAULT_ORACLE as oracle
+            from repro.core.plan import RankedPlan, extract_features
+            features = extract_features(csr, num_shards=self.num_shards)
             choice = PlanChoice(
-                features=extract_features(csr, num_shards=self.num_shards),
+                features=features,
                 ranking=(RankedPlan(plan=prog.plan,
-                                    cost=estimate_cost(csr, prog.plan)),),
-                probed=0)
+                                    cost=oracle.plan_cost(csr, prog.plan)),),
+                probed=0, bottleneck=oracle.classify(features))
         return prog, choice, bundle
 
     def ingest(self, name: str, csr: CSRMatrix,
@@ -274,8 +282,8 @@ class SparseMatrixEngine:
         starts from the saved bundle (no autotune, no lower) and a cold
         ingest persists its program for the next restart.
         """
-        from repro.core.plan import RankedPlan, estimate_cost, \
-            extract_features
+        from repro.core.oracle import DEFAULT_ORACLE as oracle
+        from repro.core.plan import RankedPlan, extract_features
         if rebalance is None:
             rebalance = self.rebalance_cfg
         elif rebalance is True:
@@ -311,8 +319,8 @@ class SparseMatrixEngine:
                 choice = PlanChoice(
                     features=features,
                     ranking=(RankedPlan(plan=plan,
-                                        cost=estimate_cost(csr, plan)),),
-                    probed=0)
+                                        cost=oracle.plan_cost(csr, plan)),),
+                    probed=0, bottleneck=oracle.classify(features))
             dist = lower(csr, choice.plan)
             if self.artifact_dir is not None:
                 bundle = self._bundle_dir(name)
@@ -350,6 +358,7 @@ class SparseMatrixEngine:
                      n_requests: int = 1) -> np.ndarray:
         y = execute(m.dist, x)
         m.spmv_count += n_requests
+        self.total_requests += n_requests
         if m.monitor is not None and m.monitor.observe(x):
             self._try_rebalance(m)
         return y
@@ -398,11 +407,28 @@ class SparseMatrixEngine:
         else:
             self._replan_and_swap(m)
 
+    def _amortization_horizon(self, m: IngestedMatrix) -> float | None:
+        """Projected SpMVs tenant ``m`` will issue against a new plan.
+
+        The Asudeh gate's volume estimate: the tenant's observed share of
+        engine traffic, projected over the next
+        ``cfg.amortization_lookahead`` engine requests.  A tenant taking
+        2% of a 1000-request lookahead projects 20 SpMVs — not enough to
+        amortize a full re-plan — while a tenant taking 60% projects 600.
+        ``None`` (lookahead unset) keeps the legacy volume-blind gate.
+        """
+        lookahead = m.rebalance_cfg.amortization_lookahead
+        if lookahead is None:
+            return None
+        share = m.spmv_count / max(self.total_requests, 1)
+        return float(lookahead) * share
+
     def _replan_and_swap(self, m: IngestedMatrix) -> None:
         new_dist, new_choice, event = replan(
             m.csr, m.monitor, m.choice, num_shards=self.num_shards,
             seed=self.seed, cfg=m.rebalance_cfg,
-            request_index=m.spmv_count, program=m.dist)
+            request_index=m.spmv_count, program=m.dist,
+            amortization_horizon=self._amortization_horizon(m))
         m.rebalance_log.append(event)
         if new_dist is not None:
             m.dist = new_dist          # the double-buffer swing
@@ -449,6 +475,7 @@ class SparseMatrixEngine:
         out = {}
         for n, m in self._matrices.items():
             s = {"plan": dataclasses.asdict(m.choice.plan),
+                 "bottleneck": m.choice.bottleneck,
                  "shard_kernels": list(m.dist.shard_kernels()),
                  "shard_exchanges":
                      list(m.choice.plan.resolved_shard_exchanges()),

@@ -128,6 +128,64 @@ def test_run_spmv_default_engine_matches_reference():
     assert fast.bandwidth_mbs == ref.bandwidth_mbs
 
 
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("kernel", ["ell", "seg", "hyb", "split"])
+def test_engine_matches_reference_on_format_streams(engine, kernel):
+    """Format-shaped home streams (``shard_kernels=``) stay tick-for-tick
+    identical across all three engines: the per-format instruction
+    weights only change the trace the engines consume, never the tick
+    semantics."""
+    A = MATRICES["powerlaw"]()
+    part = make_partition(A, CFG.nodelets, "nnz")
+    lay = make_layout("block", A.ncols, CFG.nodelets)
+    sk = (kernel,) * CFG.nodelets
+    nodes, weights, homes = build_thread_traces(
+        A, part, lay, CFG.threads_per_nodelet, shard_kernels=sk)
+    ref = simulate_reference(nodes, weights, homes, CFG, 1e6)
+    fast = simulate(nodes, weights, homes, CFG, 1e6, engine=engine)
+    assert ref.ticks < CFG.max_ticks
+    assert_equivalent(fast, ref)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_engine_matches_reference_on_mixed_format_streams(engine):
+    """A genuinely heterogeneous kernel tuple (one format per shard) is
+    also engine-equivalent — the per-shard program probe path."""
+    A = MATRICES["powerlaw"]()
+    part = make_partition(A, CFG.nodelets, "nnz")
+    lay = make_layout("cyclic", A.ncols, CFG.nodelets)
+    sk = ("ell", "seg", "hyb", "split")
+    nodes, weights, homes = build_thread_traces(
+        A, part, lay, CFG.threads_per_nodelet, shard_kernels=sk)
+    ref = simulate_reference(nodes, weights, homes, CFG, 1e6)
+    fast = simulate(nodes, weights, homes, CFG, 1e6, engine=engine)
+    assert_equivalent(fast, ref)
+
+
+def test_format_streams_differ_from_default():
+    """The per-format weights actually reshape the trace (a seg stream
+    pays carry instructions the raw-CSR default does not), while the
+    ``shard_kernels=None`` default stays byte-identical to the legacy
+    builder output."""
+    A = MATRICES["powerlaw"]()
+    part = make_partition(A, CFG.nodelets, "nnz")
+    lay = make_layout("block", A.ncols, CFG.nodelets)
+    base = build_thread_traces(A, part, lay, CFG.threads_per_nodelet)
+    again = build_thread_traces(A, part, lay, CFG.threads_per_nodelet,
+                                shard_kernels=None)
+    for a, b in zip(base, again):
+        for ta, tb in zip(a, b):
+            np.testing.assert_array_equal(ta, tb)
+    seg = build_thread_traces(A, part, lay, CFG.threads_per_nodelet,
+                              shard_kernels=("seg",) * CFG.nodelets)
+    base_total = sum(w.sum() for w in base[1])
+    seg_total = sum(w.sum() for w in seg[1])
+    assert seg_total != base_total
+    with pytest.raises(ValueError, match="shard_kernels"):
+        build_thread_traces(A, part, lay, CFG.threads_per_nodelet,
+                            shard_kernels=("seg",))
+
+
 def test_cv_metrics_are_distinct():
     """instr_cv is the Fig. 7 balance metric; residency_cv reads the
     trace.  (residency_cv used to silently alias instr_cv.)"""

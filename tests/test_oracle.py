@@ -1,0 +1,261 @@
+"""CostOracle: classification, scoring, amortization gate, split guard.
+
+The oracle is the single cost model behind autotune, the rebalancer's
+two tiers and the router's re-plan gate (``core/oracle.py``).  This
+suite pins:
+
+* bottleneck classification is a deterministic function of the exact
+  structural features (same matrix -> same class, every call) and the
+  class JSON-round-trips through ``PlanChoice`` — including legacy JSON
+  written before the field existed;
+* the delegated cost tables are bit-identical to the plan-layer
+  primitives they wrap (routing a consumer through the oracle never
+  changes a selection);
+* the Asudeh amortization gate (``replan_pays``): volume-blind with no
+  horizon, break-even accounting with one;
+* the ``SPLIT_MIN_SPAN`` structural guard: a traffic-thinned monster
+  row that drops below the span floor must not be offered the split
+  family by the rebalancer's partial tier;
+* ``probe="auto"`` adaptive probing through ``autotune`` and
+  ``SpmvPlan.auto``.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.oracle import (BOTTLENECK_CLASSES, DEFAULT_ORACLE,
+                               IMBALANCE_HOT_COL, IMBALANCE_ROW_CV,
+                               IMBALANCE_TAIL_SHARE, LATENCY_REMOTE_FRAC,
+                               REPLAN_SPMV_EQUIV, CostOracle)
+from repro.core.partition import make_partition
+from repro.core.plan import (AUTO_PROBE_MIN, KERNELS, MatrixFeatures,
+                             PlanChoice, ShardFeatures, autotune,
+                             exchange_shard_costs, extract_features,
+                             kernel_shard_costs)
+from repro.core.spmv import SpmvPlan
+from repro.data.matrices import powerlaw, powerlaw_tail
+
+
+def features(**kw) -> MatrixFeatures:
+    """A bandwidth-bound baseline; override fields per test."""
+    base = dict(nrows=100, ncols=100, nnz=1000, density=0.1,
+                row_nnz_mean=10.0, row_nnz_cv=0.2, row_nnz_max=20.0,
+                tail_share=0.05, bandwidth_mean=0.1, bandwidth_p95=0.3,
+                hot_col_share=0.1, remote_frac=0.2)
+    base.update(kw)
+    return MatrixFeatures(**base)
+
+
+# -- classification (Elafrou) ----------------------------------------------
+
+def test_classify_thresholds():
+    o = DEFAULT_ORACLE
+    assert o.classify(features()) == "bandwidth"
+    assert o.classify(features(remote_frac=LATENCY_REMOTE_FRAC + 0.01)) \
+        == "latency"
+    # any imbalance trigger wins over the latency test
+    assert o.classify(features(row_nnz_cv=IMBALANCE_ROW_CV + 0.1,
+                               remote_frac=0.9)) == "imbalance"
+    assert o.classify(features(tail_share=IMBALANCE_TAIL_SHARE + 0.01)) \
+        == "imbalance"
+    assert o.classify(features(hot_col_share=IMBALANCE_HOT_COL + 0.01)) \
+        == "imbalance"
+    # thresholds are strict: at the boundary the lower class holds
+    assert o.classify(features(remote_frac=LATENCY_REMOTE_FRAC)) \
+        == "bandwidth"
+    assert o.classify(features(row_nnz_cv=IMBALANCE_ROW_CV)) == "bandwidth"
+
+
+def test_classify_shard_uses_matrix_remote_frac():
+    o = DEFAULT_ORACLE
+    sf = ShardFeatures(shard=0, rows=10, nnz=100, row_nnz_mean=10.0,
+                       row_nnz_cv=0.1, row_nnz_max=15.0, tail_share=0.05)
+    assert o.classify_shard(sf) == "bandwidth"
+    assert o.classify_shard(sf, remote_frac=0.9) == "latency"
+    skew = dataclasses.replace(sf, row_nnz_cv=2.0)
+    assert o.classify_shard(skew, remote_frac=0.9) == "imbalance"
+    assert o.classify_shards((sf, skew), remote_frac=0.9) \
+        == ("latency", "imbalance")
+
+
+def test_classification_is_deterministic_and_serialized():
+    """Same matrix -> same class every call, carried in the PlanChoice
+    and surviving an exact JSON round-trip (shard classes included)."""
+    A = powerlaw(192, 1800, seed=1)
+    a = autotune(A, num_shards=4, probe=0)
+    b = autotune(A, num_shards=4, probe=0)
+    assert a.bottleneck in BOTTLENECK_CLASSES
+    assert a.bottleneck == b.bottleneck
+    assert a.shard_bottlenecks == b.shard_bottlenecks
+    assert len(a.shard_bottlenecks) == 4
+    assert a.bottleneck == DEFAULT_ORACLE.classify(a.features)
+
+    rt = PlanChoice.from_json(a.to_json())
+    assert rt.bottleneck == a.bottleneck
+    assert rt.shard_bottlenecks == a.shard_bottlenecks
+    assert rt.plan == a.plan
+
+
+def test_legacy_choice_json_has_no_bottleneck():
+    """PlanChoice JSON written before the oracle loads with class None."""
+    A = powerlaw(192, 1800, seed=1)
+    d = __import__("json").loads(autotune(A, num_shards=4, probe=0).to_json())
+    del d["bottleneck"], d["shard_bottlenecks"]
+    legacy = PlanChoice.from_json(__import__("json").dumps(d))
+    assert legacy.bottleneck is None
+    assert legacy.shard_bottlenecks is None
+
+
+def test_score_reweights_the_matched_term():
+    A = powerlaw(192, 1800, seed=1)
+    o = DEFAULT_ORACLE
+    cost = o.plan_cost(A, SpmvPlan(num_shards=4))
+    scores = {b: o.score(cost, b) for b in BOTTLENECK_CLASSES}
+    for b, s in scores.items():
+        assert s >= cost.total       # total plus a non-negative term
+    assert scores["bandwidth"] == cost.total + cost.issue_cycles
+    assert scores["imbalance"] == cost.total + cost.ingress_cycles
+    with pytest.raises(ValueError, match="unknown bottleneck"):
+        o.score(cost, "thermal")
+
+
+# -- delegation ------------------------------------------------------------
+
+def test_oracle_tables_match_plan_primitives():
+    """The oracle is a facade: identical numbers to the plan-layer cost
+    primitives, so no consumer's selection moved in the refactor."""
+    A = powerlaw(192, 1800, seed=1)
+    part = make_partition(A, 4, "nonzero")
+    o = CostOracle()
+    kc, kc_ref = o.kernel_costs(A, part), kernel_shard_costs(A, part)
+    assert kc.keys() == kc_ref.keys()
+    for k in kc:
+        np.testing.assert_array_equal(kc[k], kc_ref[k])
+    ec = o.exchange_costs(A, part, layout="cyclic")
+    ec_ref = exchange_shard_costs(A, part, "cyclic")
+    assert ec.keys() == ec_ref.keys()
+    for e in ec:
+        np.testing.assert_array_equal(ec[e], ec_ref[e])
+    assert o.select_kernels(A, part) == \
+        tuple(min(KERNELS, key=lambda k: (kc[k][p], KERNELS.index(k)))
+              for p in range(4))
+
+
+# -- amortization gate (Asudeh) --------------------------------------------
+
+def test_replan_pays_volume_blind_without_horizon():
+    o = DEFAULT_ORACLE
+    assert o.replan_pays(0.01, None).pays
+    assert not o.replan_pays(0.0, None).pays
+    assert not o.replan_pays(-0.1, None).pays
+    assert o.replan_pays(-0.1, None).break_even_spmvs == float("inf")
+
+
+def test_replan_pays_break_even_accounting():
+    o = DEFAULT_ORACLE
+    full = REPLAN_SPMV_EQUIV["full"]
+    d = o.replan_pays(0.10, horizon=full / 0.10)       # exactly break-even
+    assert d.pays and d.break_even_spmvs == pytest.approx(full / 0.10)
+    assert not o.replan_pays(0.10, horizon=full / 0.10 - 1).pays
+    # the partial tier's one-time cost is much smaller
+    partial = REPLAN_SPMV_EQUIV["partial"]
+    assert partial < full
+    assert o.replan_pays(0.10, horizon=partial / 0.10, mode="partial").pays
+    # a positive-gain swap a volume-blind model takes is refused at low
+    # projected volume — the accepted/refused pair the gate exists for
+    assert o.replan_pays(0.10, None).pays
+    assert not o.replan_pays(0.10, horizon=5.0).pays
+    with pytest.raises(ValueError, match="unknown re-plan mode"):
+        o.replan_pays(0.1, None, mode="hourly")
+
+
+# -- SPLIT_MIN_SPAN guard --------------------------------------------------
+
+def monster_matrix():
+    # 4 fully dense rows over 2048 columns: exactly SPLIT_MIN_SPAN seg
+    # chunks of span, so any thinning at all drops below the floor.
+    return powerlaw_tail(2048, 2 * 4 * 2048, n_monster=4, seed=0)
+
+
+def test_split_span_ok_thresholds():
+    from repro.core.plan import _active_submatrix
+    o = DEFAULT_ORACLE
+    A = monster_matrix()
+    part = make_partition(A, 4, "row")
+    assert o.split_span_ok(A, part, 0)            # monster rows: span 4
+    assert not o.split_span_ok(A, part, 1)        # short-row background
+    # heavy thinning shortens the monster rows below the span floor
+    w = np.ones(A.ncols)
+    w[:128] = 64.0
+    sub = _active_submatrix(A, w)
+    assert sub is not A
+    assert not o.split_span_ok(sub, part, 0)
+
+
+def test_split_span_ok_false_on_empty_shard():
+    from repro.core.sparse_matrix import csr_from_coo
+    A = csr_from_coo(np.arange(2), np.arange(2), np.ones(2), (2, 8))
+    part = make_partition(A, 4, "row")
+    assert any(part.starts[p] == part.starts[p + 1] for p in range(4))
+    for p in range(4):
+        if part.starts[p] == part.starts[p + 1]:
+            assert not DEFAULT_ORACLE.split_span_ok(A, part, p)
+
+
+def test_partial_replan_split_guard_under_heavy_thinning():
+    """Regression for the split-swap span guard: traffic so concentrated
+    that thinning shortens the monster rows below ``SPLIT_MIN_SPAN``
+    chunks must not let the partial tier deploy split against the real
+    matrix (the companion to ``test_partial_replan_reaches_split_on_
+    monster_row_shard``, whose *mild* skew keeps the span and does
+    reach split)."""
+    from repro.core.plan import RankedPlan, estimate_cost
+    from repro.core.program import lower
+    from repro.serve.rebalance import (LoadMonitor, RebalanceConfig,
+                                       _try_partial_replan, hot_shards)
+
+    A = monster_matrix()
+    plan = SpmvPlan(layout="block", distribution="row", reordering="none",
+                    exchange="halo", kernel="seg", num_shards=4)
+    prog = lower(A, plan)
+    cfg = RebalanceConfig(window=16, probe=0)
+    mon = LoadMonitor(prog, cfg)
+    w = np.ones(A.ncols)
+    w[:128] = 64.0                    # heavy skew: thinned span < floor
+    mon._act_ema = w / w.mean()
+    assert list(hot_shards(mon.shard_load(), cfg.hot_factor)) == [0]
+
+    choice = PlanChoice(
+        features=extract_features(A, num_shards=4),
+        ranking=(RankedPlan(plan=plan, cost=estimate_cost(A, plan)),),
+        probed=0)
+    out = _try_partial_replan(A, mon, choice, prog, mon.activity(), cfg,
+                              request_index=0)
+    if out is not None:               # any surviving swap must avoid split
+        dist, _, ev = out
+        assert "split" not in dist.shard_kernels()
+        assert ev.mode == "partial"
+
+
+# -- adaptive probing ------------------------------------------------------
+
+def test_autotune_probe_auto_stabilizes():
+    A = powerlaw(192, 1800, seed=1)
+    choice = autotune(A, num_shards=4, probe="auto")
+    assert choice.probed >= AUTO_PROBE_MIN
+    bases = {(r.plan.reordering, r.plan.layout, r.plan.distribution)
+             for r in choice.ranking if r.probe_seconds is not None}
+    assert len(bases) == choice.probed
+
+
+def test_autotune_rejects_unknown_probe_string():
+    A = powerlaw(192, 1800, seed=1)
+    with pytest.raises(ValueError, match="auto"):
+        autotune(A, num_shards=4, probe="adaptive")
+
+
+def test_spmv_plan_auto_accepts_probe_auto():
+    A = powerlaw(192, 1800, seed=1)
+    plan = SpmvPlan.auto(A, num_shards=4, probe="auto")
+    assert plan.num_shards == 4
