@@ -3,8 +3,8 @@ a correctness vehicle; real perf numbers come from the TPU dry-run).
 Reports us/call of the jnp oracle paths that the models actually execute."""
 import jax.numpy as jnp
 import numpy as np
-from repro.core.sparse_matrix import csr_from_coo, csr_to_bcsr, csr_to_ell
-from repro.data.matrices import powerlaw, powerlaw_tail
+from repro.core.sparse_matrix import csr_from_coo, csr_to_ell
+from repro.data.matrices import blocked_band, powerlaw, powerlaw_tail
 from repro.kernels import ops
 from .common import emit, us
 
@@ -21,11 +21,10 @@ def run():
         t = us(lambda: ops.ell_spmv_ref(data, cols, x).block_until_ready())
         rows.append((f"ell_ref/{M}x{N}/nnz{nnz}", round(t, 1),
                      f"pad={e.padding_ratio:.2f}"))
-        blocks, bcols = ops.bell_from_bcsr(csr_to_bcsr(A, (8, 128)))
-        bj, cj = jnp.asarray(blocks), jnp.asarray(bcols)
-        t = us(lambda: ops.bell_spmv(bj, cj, x).block_until_ready())
-        rows.append((f"bell_ref/{M}x{N}/nnz{nnz}", round(t, 1),
-                     f"K={blocks.shape[1]}"))
+        tm = ops.tile_from_csr(A)
+        t = us(lambda: ops.tile_spmv(tm, x).block_until_ready())
+        rows.append((f"tile_ref/{M}x{N}/nnz{nnz}", round(t, 1),
+                     f"tiles={tm.num_tiles};fill={tm.fill_ratio:.2f}"))
         # Segmented (nonzero-balanced) family: oracle path timing on the
         # uniform matrix above plus a skewed power-law one, where the
         # row-tiled ELL slab pays max-row-nnz padding and the seg slab
@@ -69,6 +68,22 @@ def run():
                                       interpret=True).block_until_ready())
         rows.append((f"split_pallas/{name}/nnz{Q.nnz}/ns{spl.num_splits}",
                      round(t, 1), "interpret=True"))
+    # Bitmask-tiled family: its win case is block-structured data (dense
+    # (8, 128) tiles, fill -> 1.0); the scattered powerlaw row above it
+    # shows the loss case (fill -> 0, every tile mostly padding).  Oracle
+    # path on both, Pallas scalar-prefetch walk (interpret) on the win.
+    B = blocked_band(2048, 215 * 2048, seed=0)
+    xb = jnp.asarray(rng.standard_normal(B.ncols), jnp.float32)
+    for name, Q, xq in (("blocked2048", B, xb), ("powerlaw2048", P, xp)):
+        tm = ops.tile_from_csr(Q)
+        t = us(lambda: ops.tile_spmv(tm, xq).block_until_ready())
+        rows.append((f"tile_ref/{name}/nnz{Q.nnz}", round(t, 1),
+                     f"tiles={tm.num_tiles};fill={tm.fill_ratio:.2f}"))
+    tm = ops.tile_from_csr(B)
+    t = us(lambda: ops.tile_spmv(tm, xb, use_kernel=True,
+                                 interpret=True).block_until_ready())
+    rows.append((f"tile_pallas/blocked2048/nnz{B.nnz}", round(t, 1),
+                 "interpret=True"))
     emit(rows, ("name", "us_per_call", "derived"))
 
 

@@ -32,6 +32,14 @@ bench and records the split-vs-best-non-split kernel-slot headline
 
     PYTHONPATH=src python -m benchmarks.perf_probe --split
 
+Tile mode runs the blocked-band scenario of the same bench and records
+the bitmask-tiled-vs-best-non-tile kernel-slot headline (acceptance bar:
+>= 1.2x on the full run; ``--fast`` runs the CI-smoke size, which only
+requires a strict win):
+
+    PYTHONPATH=src python -m benchmarks.perf_probe --tile
+    PYTHONPATH=src python -m benchmarks.perf_probe --tile --fast
+
 Pipeline mode runs the exchange-bound halo_spikes scenario and records
 the serial-vs-pipelined device-path headline (acceptance bar: >= 1.15x);
 the forced 512-device host platform lets the real shard_map executor
@@ -218,6 +226,31 @@ def run_split_probe(out: str | None) -> int:
     return 0 if ok else 1
 
 
+def run_tile_probe(out: str | None, fast: bool) -> int:
+    """Record the bitmask-tiled (blocked_band) headline in ``BENCH_emu.json``.
+
+    Runs the blocked-band scenario (see ``benchmarks/hetero_bench.py
+    --workload blocked``) and appends its entry; exit status is the
+    bench's acceptance gate (the autotuner's grid reaches ``tile`` on
+    its own, the best tile-using program beats the best tile-free
+    program by >= 1.2x on the kernel-slot term — a strict win at the
+    ``--fast`` CI-smoke size — and both reproduce the oracle).
+    ``append_bench_entry`` verifies the entry actually landed on disk.
+    """
+    from benchmarks.hetero_bench import check_tile, run_tile_bench
+    entry = run_tile_bench(probe="auto", fast=fast)
+    ok = check_tile(entry, fast=fast)
+    path = append_bench_entry(entry, out)
+    print(json.dumps(entry, indent=2))
+    mk = entry["model_kernel_cycles"]
+    print(f"# tile: {entry.get('tile_kernels')} "
+          f"(occupied tiles {entry.get('tile_counts')}) vs best non-tile "
+          f"{entry['best_nontile_plan']}; kernel-term speedup "
+          f"{mk['speedup']}x (bar {'> 1.0' if fast else '>= 1.2'}) -> "
+          f"{'PASS' if ok else 'FAIL'}; recorded in {path}")
+    return 0 if ok else 1
+
+
 def run_pipeline_probe(out: str | None) -> int:
     """Record the pipelined-executor headline in ``BENCH_emu.json``.
 
@@ -315,6 +348,10 @@ def main():
                     help="run the power-law-tail split-SpMV bench and "
                          "record headline numbers (benchmarks/hetero_bench"
                          ".py --workload powerlaw_tail)")
+    ap.add_argument("--tile", action="store_true",
+                    help="run the blocked-band bitmask-tiled SpMV bench and "
+                         "record headline numbers (benchmarks/hetero_bench"
+                         ".py --workload blocked)")
     ap.add_argument("--pipeline", action="store_true",
                     help="run the exchange-bound pipelined-executor bench "
                          "and record headline numbers (benchmarks/"
@@ -328,8 +365,8 @@ def main():
                          "bench and record headline numbers (benchmarks/"
                          "bottleneck_bench.py)")
     ap.add_argument("--fast", action="store_true",
-                    help="smaller matrix/stream for the --bottleneck bench "
-                         "(same acceptance gates; the CI smoke setting)")
+                    help="smaller matrix/stream for the --bottleneck and "
+                         "--tile benches (CI smoke setting)")
     ap.add_argument("--scale", type=float, default=1.0,
                     help="fig8 matrix scale for the vectorized timing")
     ap.add_argument("--ref-scale", type=float, default=0.02,
@@ -356,6 +393,8 @@ def main():
         sys.exit(run_hetero_probe(args.out))
     if args.split:
         sys.exit(run_split_probe(args.out))
+    if args.tile:
+        sys.exit(run_tile_probe(args.out, args.fast))
     if args.pipeline:
         sys.exit(run_pipeline_probe(args.out))
     if args.serve:

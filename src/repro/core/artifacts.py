@@ -9,7 +9,7 @@ This module makes a lowered :class:`~repro.core.program.SpmvProgram` durable:
 
   - ``arrays.npz``: every numpy payload (the reordered matrix, partition
     starts, traffic vectors, the permutation, and each shard stage's
-    ell/seg/split slabs),
+    ell/seg/split/tile slabs),
   - ``plan_choice.json``: the autotuner's full ranked
     :class:`~repro.core.plan.PlanChoice` (optional; same JSON the plan
     layer has always round-tripped),
@@ -46,7 +46,8 @@ from .migration import TrafficReport
 from .partition import Partition
 from .plan import PlanChoice
 from .program import ShardStage, SpmvProgram
-from .sparse_matrix import CSRMatrix, EllMatrix, SegMatrix, SplitMatrix
+from .sparse_matrix import CSRMatrix, EllMatrix, SegMatrix, SplitMatrix, \
+    TileMatrix
 from .spmv import SpmvPlan
 
 __all__ = ["SCHEMA_VERSION", "ArtifactError", "ArtifactMissing",
@@ -115,6 +116,7 @@ _SEG_ARRAYS = ("vals", "cols", "rows", "piece_chunk", "piece_lo",
                "piece_hi", "piece_row")
 _SPLIT_ARRAYS = ("vals", "cols", "rows", "piece_split", "piece_chunk",
                  "piece_lo", "piece_hi", "piece_row")
+_TILE_ARRAYS = ("tile_ptr", "tile_rows", "tile_cols", "data", "mask")
 
 
 def _stage_entry(st: ShardStage, arrays: dict, p: int) -> dict:
@@ -138,6 +140,12 @@ def _stage_entry(st: ShardStage, arrays: dict, p: int) -> dict:
                             "nnz": int(st.split.nnz)}
         for f in _SPLIT_ARRAYS:
             arrays[f"s{p}_{f}"] = getattr(st.split, f)
+    elif st.kernel == "tile":
+        entry["payload"] = {"shape": list(st.tile.shape),
+                            "bm": int(st.tile.bm), "bn": int(st.tile.bn),
+                            "nnz": int(st.tile.nnz)}
+        for f in _TILE_ARRAYS:
+            arrays[f"s{p}_{f}"] = getattr(st.tile, f)
     else:  # pragma: no cover - lower() already validated the kernel
         raise ValueError(f"unknown stage kernel {st.kernel!r}")
     return entry
@@ -147,7 +155,7 @@ def _stage_from_entry(entry: dict, arrays, p: int) -> ShardStage:
     kernel = entry["kernel"]
     pay = entry["payload"]
     shape = tuple(pay["shape"])
-    ell = seg = split = None
+    ell = seg = split = tile = None
     get = lambda f: arrays[f"s{p}_{f}"]  # noqa: E731
     if kernel in ("ell", "hyb"):
         ell = EllMatrix(shape=shape, data=get("data"), cols=get("cols"),
@@ -171,11 +179,18 @@ def _stage_from_entry(entry: dict, arrays, p: int) -> ShardStage:
                             piece_lo=get("piece_lo"),
                             piece_hi=get("piece_hi"),
                             piece_row=get("piece_row"), nnz=int(pay["nnz"]))
+    elif kernel == "tile":
+        tile = TileMatrix(shape=shape, bm=int(pay["bm"]), bn=int(pay["bn"]),
+                          tile_ptr=get("tile_ptr"),
+                          tile_rows=get("tile_rows"),
+                          tile_cols=get("tile_cols"), data=get("data"),
+                          mask=get("mask"), nnz=int(pay["nnz"]))
     else:
         raise ArtifactMismatch(f"unknown stage kernel {kernel!r} in bundle")
     return ShardStage(shard=p, kernel=kernel, rows=int(entry["rows"]),
                       row_offset=int(entry["row_offset"]),
-                      nnz=int(entry["nnz"]), ell=ell, seg=seg, split=split)
+                      nnz=int(entry["nnz"]), ell=ell, seg=seg, split=split,
+                      tile=tile)
 
 
 def invalidate_bundle(bundle_dir: str) -> None:

@@ -11,6 +11,16 @@ baselines are provided:
 2. ``analytic_cache_model`` — the reasoning the paper gives: performance is
    governed by cache-line reuse of x; a miss costs ~100-200x an L1 hit, so
    locality (banding) helps modestly and random destroys it.
+3. ``analytic_tile_cache_model`` — the same hierarchy walked by the
+   bitmask-tiled format instead of the scalar CSR gather: x moves in
+   lane-aligned ``bn``-element tiles (whole contiguous lines per
+   occupied tile, reuse measured at tile granularity over the block-row-
+   major walk) and the data stream carries **no colIndex companion** —
+   at the price of walking every cell of every occupied tile, padding
+   included.  On a banded matrix the tile walk's effective bandwidth
+   beats the scalar gather's; on a scattered one the padded cells sink
+   it — the cache-side mirror of the kernel-slot trade the per-shard
+   selector makes.
 """
 from __future__ import annotations
 
@@ -21,7 +31,8 @@ import numpy as np
 
 from .sparse_matrix import CSRMatrix, csr_row_nnz
 
-__all__ = ["CpuSpmvResult", "measure_cpu_spmv", "analytic_cache_model"]
+__all__ = ["CpuSpmvResult", "measure_cpu_spmv", "analytic_cache_model",
+           "analytic_tile_cache_model"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,5 +95,52 @@ def analytic_cache_model(csr: CSRMatrix, *, line_elems: int = 8,
         miss_rate * miss_cycles + (1 - miss_rate) * hit_cycles
     cycles = csr.nnz * per_nnz
     seconds = cycles / clock_hz
+    useful = 8.0 * (3 * csr.nnz + 2 * csr.nrows)
+    return useful / seconds / 1e6
+
+
+def analytic_tile_cache_model(csr: CSRMatrix, *, bm: int = 8, bn: int = 128,
+                              line_elems: int = 8,
+                              llc_bytes: int = 45 * 2**20,
+                              hit_cycles: float = 4.0,
+                              miss_cycles: float = 400.0,
+                              clock_hz: float = 2.4e9) -> float:
+    """Estimated bandwidth (MB/s) of the bitmask-tiled walk on the same
+    hierarchy as :func:`analytic_cache_model` (same useful-byte metric,
+    so the two numbers compare directly, Fig. 12-style).
+
+    Two differences from the scalar CSR gather: (1) the data stream is
+    pure — one value per walked cell, no colIndex element riding along —
+    and prefetch-friendly at ``1/line_elems`` misses per cell; (2) x is
+    touched one lane-aligned ``bn``-element tile at a time (whole
+    contiguous cache lines), with reuse measured at *tile* granularity
+    over the block-row-major occupied-tile walk — sequential streaming
+    through a band re-touches the same few x tiles, where the scalar
+    gather re-pays a reuse-distance check per nonzero.  The price is
+    padding: every cell of every occupied tile is walked, so a
+    scattered matrix (one nonzero per tile) walks ``bm * bn`` cells per
+    nonzero and the effective bandwidth collapses — tile's loss case,
+    exactly as in :func:`~repro.core.plan.kernel_shard_costs`.
+    """
+    rows_of = np.repeat(np.arange(csr.nrows), csr_row_nnz(csr))
+    Nb = max(-(-csr.ncols // bn), 1)
+    key = (rows_of // bm).astype(np.int64) * Nb + csr.col_index // bn
+    tiles = np.unique(key)                    # block-row-major walk order
+    bcols = tiles % Nb
+    window = llc_bytes // (bn * 8)            # x tiles resident in the LLC
+    last: dict[int, int] = {}
+    misses = 0
+    for i, c in enumerate(bcols):
+        prev = last.get(int(c))
+        if prev is None or i - prev > window:
+            misses += 1
+        last[int(c)] = i
+    T = max(tiles.size, 1)
+    lines_per_tile = max(bn // line_elems, 1)
+    x_cycles = lines_per_tile * (misses * miss_cycles
+                                 + (T - misses) * hit_cycles)
+    data_cycles = T * bm * bn / line_elems * hit_cycles
+    b_cycles = 2.0 * csr.nrows / line_elems * hit_cycles
+    seconds = (data_cycles + x_cycles + b_cycles) / clock_hz
     useful = 8.0 * (3 * csr.nnz + 2 * csr.nrows)
     return useful / seconds / 1e6

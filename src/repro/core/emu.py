@@ -176,6 +176,22 @@ def _home_row_weights(rows: np.ndarray, kernel: str | None) -> np.ndarray:
         carries = np.maximum(-(-spans // ns) - 1, 0)
         # Stage-2 combine reads ns partials back into each output row.
         return 2 + 3 * rows + _KERNEL_CARRY_INSTR * carries + ns
+    if kernel == "tile":
+        from .sparse_matrix import ELL_LANE, ELL_SUBLANE
+        # Bitmask-tiled stream: one data load per walked cell and NO
+        # per-element column-index loads (one block-col id serves a whole
+        # (8, 128) tile), so a row costs half an ELL row of equal width.
+        # Padding is *block-granular and block-local*: each 8-row block
+        # walks ceil(widest row in the block / 128) lane tiles — a heavy
+        # row widens its own block's walk, not the whole shard's (the
+        # shard-wide max-width tax is ELL's, not tile's).  Dense-extent
+        # approximation of the occupied-tile count; the analytic slot
+        # model (plan.kernel_shard_costs) owns the scattered worst case.
+        nb = rows.size
+        pad = (-nb) % ELL_SUBLANE
+        blk = np.pad(rows, (0, pad)).reshape(-1, ELL_SUBLANE)
+        wb = np.maximum(-(-blk.max(axis=1) // ELL_LANE), 1)
+        return 2 + np.repeat(wb * ELL_LANE, ELL_SUBLANE)[:nb]
     raise ValueError(f"unknown kernel format: {kernel!r}")
 
 
@@ -195,7 +211,8 @@ def build_thread_traces(csr: CSRMatrix, part: Partition, x_layout: VectorLayout,
     width, seg adds the scan pass and the serialized cross-chunk carry
     fix-up, hyb caps the slab and scatter-adds the overflow, split cuts
     each carry chain by the policy split count and pays the stage-2
-    combine (:func:`_home_row_weights`).  The x-load stream (owner-side,
+    combine, tile streams block-local dense tiles with no per-element
+    index loads (:func:`_home_row_weights`).  The x-load stream (owner-side,
     1 instr each) is format-independent.  ``None`` keeps the historic
     format-agnostic walk, byte for byte.
     """

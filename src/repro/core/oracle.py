@@ -202,6 +202,32 @@ class CostOracle:
         return tuple(self.classify_shard(sf, remote_frac)
                      for sf in shard_features)
 
+    def kernel_affinity(self, bottleneck: str) -> tuple:
+        """Kernel-family *tie-break* ordering for one bottleneck class.
+
+        The per-shard selection is always the cost-table argmin
+        (:meth:`select_kernels`); this ordering only decides exact ties,
+        so routing a consumer through it never flips a strict winner.
+        A **bandwidth**-bound shard prefers the streaming formats —
+        ``tile`` first (dense lane-aligned tile streams, no per-element
+        index traffic), then the regular ELL slab; an **imbalance**-bound
+        shard prefers the load-balanced nnz-stream formats (``split``
+        cuts the monster-row carry chain, then ``seg`` / ``hyb``); a
+        **latency**-bound shard keeps the default order — format choice
+        is not the live lever when most accesses migrate.
+        """
+        from .plan import KERNELS
+        if bottleneck == "bandwidth":
+            pref = ("tile", "ell")
+        elif bottleneck == "imbalance":
+            pref = ("split", "seg", "hyb")
+        elif bottleneck == "latency":
+            pref = ()
+        else:
+            raise ValueError(f"unknown bottleneck class: {bottleneck!r}; "
+                             f"expected one of {BOTTLENECK_CLASSES}")
+        return tuple(pref) + tuple(k for k in KERNELS if k not in pref)
+
     def score(self, cost, bottleneck: str) -> float:
         """Class-aware ranking key: the plan total plus the term that
         attacks the live bottleneck, double-weighted.

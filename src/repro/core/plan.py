@@ -132,6 +132,15 @@ _W_OVF = 8.0
 _W_SEG_CARRY = 4.0
 #: Per-partial-slot cost of the split stage-2 combine ((NS, R) reads).
 _W_SPLIT_COMBINE = 1.0
+#: Per-cell cost of a dense (8, 128) tile in the bitmask-tiled walk.
+#: Cheaper than an ELL slot: the tile stream has **no per-element column
+#: index** (one block-column id per 1024 cells) and x moves in
+#: lane-aligned tiles instead of gathered scalars — the cell is one FMA
+#: against streamed operands, about half an ELL slot's data+index+gather.
+_W_TILE = 0.5
+#: Per-occupied-tile overhead of the coarse pointer walk (tid/bc table
+#: entry, block-row scatter).
+_W_TILE_PTR = 2.0
 
 #: Core count the split policy tries to keep busy — one Emu nodelet's
 #: hardware thread contexts (the ``get_cu_num`` analogue in aiter's
@@ -302,8 +311,11 @@ class ShardFeatures:
     kernel selector reacts to.  A shard with low ``row_nnz_cv`` and a
     moderate ``row_nnz_max`` keeps the regular ELL slab; a skewed shard
     (``row_nnz_cv`` high, ``tail_share`` high) pushes toward ``seg`` or
-    ``hyb``.  Serialized with the :class:`PlanChoice` so an operator can
-    audit *why* each shard got its kernel.
+    ``hyb``; a block-structured shard (``tile_fill`` high — its nonzeros
+    concentrate into few dense (8, 128) tiles) pushes toward ``tile``.
+    Serialized with the :class:`PlanChoice` so an operator can audit
+    *why* each shard got its kernel.  ``tile_fill`` defaults to 0.0 so
+    pre-tile JSON still loads.
     """
 
     shard: int
@@ -313,6 +325,7 @@ class ShardFeatures:
     row_nnz_cv: float
     row_nnz_max: float
     tail_share: float
+    tile_fill: float = 0.0
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -333,6 +346,7 @@ def extract_shard_features(csr: CSRMatrix,
     (4, 0, True)
     """
     per_row = csr_row_nnz(csr).astype(np.float64)
+    rows_of_nnz = np.repeat(np.arange(csr.nrows), csr_row_nnz(csr))
     out = []
     for p in range(part.num_shards):
         r0, r1 = int(part.starts[p]), int(part.starts[p + 1])
@@ -343,12 +357,28 @@ def extract_shard_features(csr: CSRMatrix,
         top = max(int(np.ceil((r1 - r0) * 0.01)), 1)
         tail = float(np.sort(rows)[-top:].sum() / max(nnz_p, 1)) \
             if r1 > r0 else 0.0
+        tiles = _shard_tile_count(csr, rows_of_nnz, r0, r1)
+        fill = nnz_p / (tiles * ELL_SUBLANE * ELL_LANE) if tiles else 0.0
         out.append(ShardFeatures(
             shard=p, rows=r1 - r0, nnz=nnz_p, row_nnz_mean=mean,
             row_nnz_cv=cv,
             row_nnz_max=float(rows.max()) if r1 > r0 else 0.0,
-            tail_share=tail))
+            tail_share=tail, tile_fill=float(fill)))
     return tuple(out)
+
+
+def _shard_tile_count(A: CSRMatrix, rows_of_nnz: np.ndarray, r0: int,
+                      r1: int) -> int:
+    """Occupied (8, 128) tiles of a shard's row slice — the block grid of
+    :func:`~repro.core.sparse_matrix.csr_to_tile` on the shard CSR, so
+    the cost model charges exactly what the lowered tile stage stores."""
+    n0, n1 = int(A.row_ptr[r0]), int(A.row_ptr[r1])
+    if n1 == n0:
+        return 0
+    brow = (rows_of_nnz[n0:n1] - r0) // ELL_SUBLANE
+    bcol = A.col_index[n0:n1] // ELL_LANE
+    Nb = max(-(-A.ncols // ELL_LANE), 1)
+    return int(np.unique(brow.astype(np.int64) * Nb + bcol).size)
 
 
 def feature_key(features: MatrixFeatures) -> tuple:
@@ -594,6 +624,14 @@ def kernel_shard_costs(A: CSRMatrix, part: Partition) -> dict:
       per stage-2 partial slot (NS x padded rows).  Strictly worse than seg
       on short-row shards (NS=1 still pays the combine), strictly better
       once one row spans many chunks — exactly the §IV-D trade.
+    * ``tile``  — ``_W_TILE`` per cell of every *occupied* (8, 128) tile
+      plus ``_W_TILE_PTR`` per tile for the pointer walk.  The cell is
+      cheaper than an ELL slot (no per-element column-index stream, x
+      moves in lane-aligned tiles), but a scattered nonzero drags a
+      whole 1024-cell tile in — tile wins on banded / block-structured
+      shards (high fill, padding-free of ELL's max-width tax) and loses
+      catastrophically on scattered ones, which is exactly the
+      cache-blocking criterion of Elafrou et al. the selector needs.
 
     ``select_shard_kernels`` takes the per-shard argmin of this table and
     the plan cost model sums the selected column over shards
@@ -608,6 +646,7 @@ def kernel_shard_costs(A: CSRMatrix, part: Partition) -> dict:
     """
     S = part.num_shards
     per_row = csr_row_nnz(A)
+    rows_of_nnz = np.repeat(np.arange(A.nrows), per_row)
     out = {k: np.zeros(S, dtype=np.float64) for k in KERNELS}
     for p in range(S):
         r0, r1 = int(part.starts[p]), int(part.starts[p + 1])
@@ -631,6 +670,9 @@ def kernel_shard_costs(A: CSRMatrix, part: Partition) -> dict:
         out["split"][p] = scan + \
             _W_SEG_CARRY * carries_s * SEG_CHUNK + \
             _W_SPLIT_COMBINE * ns * rows_pad
+        tiles = max(_shard_tile_count(A, rows_of_nnz, r0, r1), 1)
+        out["tile"][p] = tiles * (_W_TILE * ELL_SUBLANE * ELL_LANE
+                                  + _W_TILE_PTR)
     return out
 
 
@@ -993,8 +1035,9 @@ def autotune(csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
         Seed threaded into the stochastic reorderings (default 0).
     layouts, distributions, reorderings, kernels, exchanges : sequence of str
         Candidate axes; defaults are the full paper grid (kernels now
-        include the HYB capped-ELL + overflow format and the split-nnz
-        two-stage ``split`` family).
+        include the HYB capped-ELL + overflow format, the split-nnz
+        two-stage ``split`` family, and the bitmask-tiled ``tile``
+        family).
     probe : int or "auto", optional
         Number of distinct bases to simulate; defaults to
         :data:`DEFAULT_PROBE` (0 = analytic only).  The probe runs the
@@ -1039,7 +1082,7 @@ def autotune(csr: CSRMatrix, *, num_shards: int = 8, seed: int = 0,
     4
     >>> choice.plan.distribution      # skewed rows -> nonzero split wins
     'nonzero'
-    >>> len(choice.ranking) >= 2 * 2 * 5 * 4 * 2   # + per-shard candidates
+    >>> len(choice.ranking) >= 2 * 2 * 5 * 5 * 2   # + per-shard candidates
     True
     >>> len(choice.shard_features)    # winner's per-shard audit trail
     4

@@ -13,8 +13,9 @@ makes that selectable:
   reordered matrix, partition, vector layouts, exact traffic accounting,
   and one :class:`ShardStage` per shard.  Each stage independently holds
   an ``ell`` slab, a ``seg`` chunk stream, a ``hyb`` capped-ELL + COO
-  overflow pair, or a ``split`` two-stage split-nnz slab
-  (``plan.shard_kernels``); the exchange prologue
+  overflow pair, a ``split`` two-stage split-nnz slab, or a ``tile``
+  bitmask-tiled pointer grid (``plan.shard_kernels``); the exchange
+  prologue
   (all-gather vs halo all-to-all) is part of the program, not of any
   particular executor.
 * :func:`relower` — rebuilds **only** the stages whose kernel changed
@@ -55,7 +56,7 @@ from .partition import Partition, make_partition
 from .reorder import reordering_permutation
 from .plan import split_meta
 from .sparse_matrix import CSRMatrix, ELL_LANE, ELL_SUBLANE, EllMatrix, \
-    SegMatrix, SplitMatrix, csr_to_ell
+    SegMatrix, SplitMatrix, TileMatrix, csr_to_ell
 from .spmv import PLAN_KERNELS, SpmvPlan
 from repro.kernels import ops as kops
 
@@ -77,19 +78,21 @@ class ShardStage:
     padded slab) and ``"hyb"`` (p95-capped slab + COO overflow, see
     :func:`~repro.kernels.ops.hyb_from_csr`) populate ``ell``; ``"seg"``
     populates ``seg``; ``"split"`` populates ``split`` (the split-nnz
-    two-stage slab, NS partial accumulators + combine).
-    ``rows``/``row_offset`` locate the shard's row range in the
-    program's (reordered) matrix.
+    two-stage slab, NS partial accumulators + combine); ``"tile"``
+    populates ``tile`` (the bitmask-tiled pointer grid over dense
+    (8, 128) tiles).  ``rows``/``row_offset`` locate the shard's row
+    range in the program's (reordered) matrix.
     """
 
     shard: int
-    kernel: str                    # "ell" | "seg" | "hyb" | "split"
+    kernel: str                    # "ell" | "seg" | "hyb" | "split" | "tile"
     rows: int                      # true row count
     row_offset: int                # absolute first row
     nnz: int
     ell: EllMatrix | None = None   # kernel in ("ell", "hyb")
     seg: SegMatrix | None = None   # kernel == "seg"
     split: SplitMatrix | None = None   # kernel == "split"
+    tile: TileMatrix | None = None     # kernel == "tile"
 
 
 def _shard_max_row_nnz(A: CSRMatrix, part: Partition, p: int) -> int:
@@ -119,7 +122,7 @@ def _build_stage(A: CSRMatrix, part: Partition, p: int,
                  kernel: str, split_count: int = 0) -> ShardStage:
     r0, r1 = int(part.starts[p]), int(part.starts[p + 1])
     sub = part.shard_csr(A, p)
-    ell = seg = split = None
+    ell = seg = split = tile = None
     if kernel == "ell":
         ell = csr_to_ell(sub)
         if ell.overflow_vals.size:
@@ -131,11 +134,13 @@ def _build_stage(A: CSRMatrix, part: Partition, p: int,
     elif kernel == "split":
         ns = _resolved_split_count(A, part, p, split_count)
         split = kops.split_from_csr(sub, ns)
+    elif kernel == "tile":
+        tile = kops.tile_from_csr(sub)
     else:
         raise ValueError(f"unknown shard kernel {kernel!r}; expected one of "
                          f"{PROGRAM_KERNELS}")
     return ShardStage(shard=p, kernel=kernel, rows=r1 - r0, row_offset=r0,
-                      nnz=sub.nnz, ell=ell, seg=seg, split=split)
+                      nnz=sub.nnz, ell=ell, seg=seg, split=split, tile=tile)
 
 
 @dataclasses.dataclass
@@ -431,6 +436,23 @@ def _execute_numpy_block(program: SpmvProgram, x: np.ndarray) -> np.ndarray:
             for b in range(B):            # padded slots: row 0, val 0
                 np.add.at(partial[b], (s_ix, spl.rows), contrib[b])
             y[:, o:o + r] = partial.sum(axis=1)
+        elif st.kernel == "tile":
+            tl = st.tile                  # dense tile stream, block scatter
+            N = tl.shape[1]
+            Nb = max(-(-N // tl.bn), 1)
+            xw = np.zeros((B, Nb * tl.bn))
+            xw[:, :N] = x_pad[:, :N]
+            gathered = xw.reshape(B, Nb, tl.bn)[:, tl.tile_cols]  # (B,T,bn)
+            # Contiguous last-axis reduction (like the ELL slab) keeps
+            # column b of a batched call bitwise-equal to the per-vector
+            # call; the per-b scatter then fixes the accumulation order.
+            contrib = (tl.data.astype(np.float64)[None]
+                       * gathered[:, :, None, :]).sum(axis=3)     # (B,T,bm)
+            Mb = max(-(-r // tl.bm), 1)
+            yp = np.zeros((B, Mb, tl.bm))
+            for b in range(B):
+                np.add.at(yp[b], tl.tile_rows, contrib[b])
+            y[:, o:o + r] = yp.reshape(B, Mb * tl.bm)[:, :r]
         else:                             # "ell" / "hyb"
             e = st.ell
             slab = e.data.astype(np.float64) * x_pad[:, e.cols]
@@ -558,13 +580,15 @@ def _masked_stage(sub: CSRMatrix, keep: np.ndarray,
     kernel family as its full stage — the executor-level stage split the
     pipelined schedule runs."""
     m = _row_masked_csr(sub, keep)
-    ell = seg = split = None
+    ell = seg = split = tile = None
     if st.kernel == "ell":
         ell = csr_to_ell(m)
     elif st.kernel == "hyb":
         ell = kops.hyb_from_csr(m)
     elif st.kernel == "seg":
         seg = kops.seg_from_csr(m)
+    elif st.kernel == "tile":
+        tile = kops.tile_from_csr(m)         # row count preserved: same grid
     else:                                    # "split"
         L = ((kops.SEG_CHUNK + ELL_LANE - 1) // ELL_LANE) * ELL_LANE
         C = max(-(-m.nnz // L), 1)
@@ -572,7 +596,7 @@ def _masked_stage(sub: CSRMatrix, keep: np.ndarray,
         split = kops.split_from_csr(m, ns)
     return ShardStage(shard=st.shard, kernel=st.kernel, rows=st.rows,
                       row_offset=st.row_offset, nnz=m.nnz, ell=ell, seg=seg,
-                      split=split)
+                      split=split, tile=tile)
 
 
 def _stack_stages(stages, R: int, remap) -> dict:
@@ -583,8 +607,15 @@ def _stack_stages(stages, R: int, remap) -> dict:
     shapes.  Split stages flatten their (NS, Cs, L) slab into the shared
     seg (C, L) operand — the split structure travels in the piece table,
     widened to 5 columns [flat_chunk, lo, hi, row, split] (padded rows
-    [0, 1, 0, 0, 0] are an exact zero).  ``remap(cols, vals, p)`` maps
-    global column ids into the buffer this set's kernel pass reads.
+    [0, 1, 0, 0, 0] are an exact zero).  Tile stages expand their
+    per-tile block-column id into per-lane x positions (``tile_xcol``) —
+    the augmented exchange buffer has no block grid to index, so the
+    remap runs on the expanded lanes, with *nonzero lane occupancy* as
+    the remap values (dead / stored-zero-only lanes keep position 0 and
+    contribute exact zeros); padding tiles point their block row
+    (``tile_brow``) one past the last block so the scatter drops them.
+    ``remap(cols, vals, p)`` maps global column ids into the buffer this
+    set's kernel pass reads.
     """
     S = len(stages)
     ells = [st.ell for st in stages if st.ell is not None]
@@ -618,6 +649,16 @@ def _stack_stages(stages, R: int, remap) -> dict:
     seg_rows = np.zeros((S, C, L), dtype=np.int32)
     seg_pieces = np.zeros((S, Pp, 5), dtype=np.int32)
     seg_pieces[:, :, 1] = 1           # (lo=1, hi=0, row=0, split=0) -> zero
+    tiles = [st.tile for st in stages if st.tile is not None]
+    t_bm = tiles[0].bm if tiles else ELL_SUBLANE
+    t_bn = tiles[0].bn if tiles else ELL_LANE
+    if any((t.bm, t.bn) != (t_bm, t_bn) for t in tiles):
+        raise AssertionError("tile stages must share one tile shape")
+    Tp = max(max((t.num_tiles for t in tiles), default=0), 1)
+    Rb = -(-R // t_bm)
+    tile_data = np.zeros((S, Tp, t_bm, t_bn), dtype=np.float32)
+    tile_xcol = np.zeros((S, Tp, t_bn), dtype=np.int32)
+    tile_brow = np.full((S, Tp), Rb, dtype=np.int32)   # pad: drops in scatter
 
     for p, st in enumerate(stages):
         if st.ell is not None:
@@ -653,9 +694,22 @@ def _stack_stages(stages, R: int, remap) -> dict:
             seg_pieces[p, :n, 2] = s.piece_hi
             seg_pieces[p, :n, 3] = s.piece_row
             seg_pieces[p, :n, 4] = s.piece_split
+        if st.tile is not None and st.tile.num_tiles:
+            t = st.tile
+            T = t.num_tiles
+            tile_data[p, :T] = t.data
+            gcols = np.minimum(
+                t.tile_cols[:, None].astype(np.int64) * t_bn
+                + np.arange(t_bn, dtype=np.int64)[None, :],
+                t.shape[1] - 1)                        # (T, bn) global ids
+            lane_nz = (t.data != 0).any(axis=1).astype(np.float32)
+            tile_xcol[p, :T] = remap(np.where(lane_nz != 0, gcols, 0),
+                                     lane_nz, p)
+            tile_brow[p, :T] = t.tile_rows
     return dict(ell_data=ell_data, ell_cols=ell_cols, ovf_rows=ovf_rows,
                 ovf_cols=ovf_cols, ovf_vals=ovf_vals, seg_vals=seg_vals,
                 seg_cols=seg_cols, seg_rows=seg_rows, seg_pieces=seg_pieces,
+                tile_data=tile_data, tile_xcol=tile_xcol, tile_brow=tile_brow,
                 NS=NS)
 
 
@@ -727,7 +781,8 @@ def _round_up(x: int, m: int) -> int:
 
 
 _SET_KEYS = ("ell_data", "ell_cols", "ovf_rows", "ovf_cols", "ovf_vals",
-             "seg_vals", "seg_cols", "seg_rows", "seg_pieces")
+             "seg_vals", "seg_cols", "seg_rows", "seg_pieces",
+             "tile_data", "tile_xcol", "tile_brow")
 
 _OPERAND_KEYS = (("kid",)
                  + tuple("loc_" + k for k in _SET_KEYS)
@@ -748,8 +803,9 @@ def make_program_spmv_fn(program: SpmvProgram, mesh, axis: str = "model", *,
     every shard picks ``allgather``, otherwise one all-to-all whose
     per-reader payload is the exact halo (``halo`` shards) or the full
     replication (``allgather`` shards).  Each shard dispatches to its
-    stage's kernel (``ell`` / ``seg`` / ``hyb`` / ``split``) through a
-    ``lax.switch`` — one SPMD program, heterogeneous per-shard execution.
+    stage's kernel (``ell`` / ``seg`` / ``hyb`` / ``split`` / ``tile``)
+    through a ``lax.switch`` — one SPMD program, heterogeneous per-shard
+    execution.
 
     The schedule is **pipelined** (the ROADMAP item-4 executor): each
     shard's kernel work is pre-split by row into a local slice whose
@@ -790,7 +846,8 @@ def make_program_spmv_fn(program: SpmvProgram, mesh, axis: str = "model", *,
             return x_all.reshape((-1,) + x_all.shape[2:])
         return jnp.swapaxes(x_all, 0, 1).reshape((-1,) + x_all.shape[2:])
 
-    def kernel_pass(kid, ed, ec, orow, ocol, oval, sv, sc, sr, sp, ns, xv):
+    def kernel_pass(kid, ed, ec, orow, ocol, oval, sv, sc, sr, sp,
+                    td, txc, tbr, ns, xv):
         """One slice's kernel dispatch against its own x buffer."""
 
         def ell_branch(_):
@@ -814,11 +871,18 @@ def make_program_spmv_fn(program: SpmvProgram, mesh, axis: str = "model", *,
                 sv[0], sc[0], sr[0], sp[0], xv, num_rows=R, num_splits=ns,
                 use_kernel=use_kernel, interpret=interpret)
 
+        def tile_branch(_):
+            return kops.tile_flat_spmv(
+                td[0], txc[0], tbr[0], xv, num_rows=R,
+                use_kernel=use_kernel, interpret=interpret)
+
         return jax.lax.switch(kid[0], (ell_branch, seg_branch, hyb_branch,
-                                       split_branch), None)
+                                       split_branch, tile_branch), None)
 
     def shard_fn(kid, led, lec, lorow, locol, loval, lsv, lsc, lsr, lsp,
+                 ltd, ltxc, ltbr,
                  red, rec, rorow, rocol, roval, rsv, rsc, rsr, rsp,
+                 rtd, rtxc, rtbr,
                  send_idx, row_rem, x_shard):
         x_local = x_shard[0]                               # (per[, B])
         if use_a2a:
@@ -841,9 +905,9 @@ def make_program_spmv_fn(program: SpmvProgram, mesh, axis: str = "model", *,
             x_loc_in, _ = jax.lax.optimization_barrier((x_local, xg))
 
         y_loc = kernel_pass(kid, led, lec, lorow, locol, loval, lsv, lsc,
-                            lsr, lsp, NS_loc, x_loc_in)
+                            lsr, lsp, ltd, ltxc, ltbr, NS_loc, x_loc_in)
         y_rem = kernel_pass(kid, red, rec, rorow, rocol, roval, rsv, rsc,
-                            rsr, rsp, NS_rem, xg)
+                            rsr, rsp, rtd, rtxc, rtbr, NS_rem, xg)
         m = row_rem[0]
         if y_rem.ndim == 2:                                # batched (R, B)
             m = m[:, None]

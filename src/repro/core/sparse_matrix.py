@@ -14,6 +14,13 @@ keep CSR as the canonical host-side format and add two device formats:
   ``kernels/spmv_seg.py`` — every kernel grid step owns the same number of
   non-zeros, so power-law rows cannot converge work on one tile the way
   they converge threads on one nodelet in the paper's §IV-D.
+* TILE: the two-level bitmask-tiled layout — a coarse CSR-like pointer
+  grid over dense ``(8, 128)`` tiles plus a per-tile occupancy bitmask.
+  Occupied tiles are stored dense (zero-filled) and streamed with whole
+  lane-aligned FMAs and *no per-element column indices*; the pointer
+  level skips empty tiles entirely.  The blocked format behind
+  ``kernels/spmv_tile.py`` — banded / block-structured matrices, where
+  ELL pads and seg wastes scan work, are its target.
 
 All host-side structures are numpy; device kernels take jnp views.
 """
@@ -32,11 +39,13 @@ __all__ = [
     "BcsrMatrix",
     "SegMatrix",
     "SplitMatrix",
+    "TileMatrix",
     "csr_from_coo",
     "csr_matvec",
     "csr_to_dense",
     "csr_to_ell",
     "csr_to_bcsr",
+    "csr_to_tile",
     "csr_row_nnz",
     "hyb_cap_width",
 ]
@@ -224,6 +233,97 @@ class SplitMatrix:
     def padding_ratio(self) -> float:
         slots = self.vals.shape[0] * self.vals.shape[1] * self.vals.shape[2]
         return 1.0 - self.nnz / max(slots, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class TileMatrix:
+    """Two-level bitmask-tiled layout (pointer grid + dense tiles).
+
+    The matrix is cut into a ``(Mb, Nb)`` grid of ``(bm, bn)`` tiles;
+    only *occupied* tiles (holding at least one stored entry) are kept.
+    ``tile_ptr`` is the coarse CSR-like pointer level over block rows —
+    tiles of block row ``mb`` are ``tile_ptr[mb]:tile_ptr[mb+1]``, sorted
+    by block column — so empty tiles are skipped without ever touching
+    them.  Each kept tile stores its ``(bm, bn)`` payload dense and
+    zero-filled; ``mask`` is the packed per-tile occupancy bitmask
+    (``np.packbits`` over the lane axis) that records which cells hold a
+    stored entry, distinguishing structural zeros from stored zeros.
+    The SpMV kernel streams whole tiles with dense FMAs and needs **no
+    per-element column indices** — one ``tile_cols`` id per tile replaces
+    ``bm*bn`` ELL column slots.
+    """
+
+    shape: Tuple[int, int]
+    bm: int                    # tile rows (sublane-aligned)
+    bn: int                    # tile cols (lane-aligned)
+    tile_ptr: np.ndarray       # (Mb+1,) int32 pointer grid over block rows
+    tile_rows: np.ndarray      # (T,) int32 block-row id per tile
+    tile_cols: np.ndarray      # (T,) int32 block-col id per tile
+    data: np.ndarray           # (T, bm, bn) float32, zero-filled
+    mask: np.ndarray           # (T, bm, bn//8) uint8 packed occupancy bits
+    nnz: int
+
+    @property
+    def num_tiles(self) -> int:
+        return int(self.data.shape[0])
+
+    @property
+    def block_shape(self) -> Tuple[int, int]:
+        return (self.bm, self.bn)
+
+    @property
+    def fill_ratio(self) -> float:
+        """Occupied-cell fraction of the kept tiles (1.0 = perfectly
+        dense tiles, -> 0 = one stray nonzero per tile)."""
+        return self.nnz / max(self.num_tiles * self.bm * self.bn, 1)
+
+    @property
+    def max_tiles_per_block_row(self) -> int:
+        counts = np.diff(self.tile_ptr)
+        return int(counts.max()) if counts.size else 0
+
+    def occupancy(self) -> np.ndarray:
+        """Unpacked (T, bm, bn) boolean occupancy from the bitmask."""
+        bits = np.unpackbits(self.mask, axis=2, count=self.bn)
+        return bits.astype(bool)
+
+
+def csr_to_tile(csr: CSRMatrix, bm: int = ELL_SUBLANE,
+                bn: int = ELL_LANE) -> TileMatrix:
+    """Convert CSR -> two-level bitmask-tiled layout.
+
+    Tiles default to the fp32 TPU native tile ``(ELL_SUBLANE, ELL_LANE)``
+    = (8, 128) so each streamed tile is exactly one VMEM-resident vector
+    tile.  Only occupied tiles are materialized; duplicates cannot occur
+    (CSR is canonical).  ``bn`` must be a multiple of 8 so the occupancy
+    bitmask packs along the lane axis without padding ambiguity.
+    """
+    if bn % 8:
+        raise ValueError(f"bn must be a multiple of 8, got {bn}")
+    M, N = csr.shape
+    Mb = max(-(-M // bm), 1)
+    Nb = max(-(-N // bn), 1)
+    rows = np.repeat(np.arange(M, dtype=np.int64), csr_row_nnz(csr))
+    brow = rows // bm
+    bcol = csr.col_index.astype(np.int64) // bn
+    key = brow * Nb + bcol
+    uniq, inverse = np.unique(key, return_inverse=True)
+    T = int(uniq.shape[0])
+    data = np.zeros((T, bm, bn), dtype=np.float32)
+    occ = np.zeros((T, bm, bn), dtype=bool)
+    if T:
+        lr = (rows % bm).astype(np.int64)
+        lc = (csr.col_index.astype(np.int64) % bn)
+        np.add.at(data, (inverse, lr, lc), csr.values.astype(np.float32))
+        occ[inverse, lr, lc] = True
+    tile_rows = (uniq // Nb).astype(np.int32)
+    tile_cols = (uniq % Nb).astype(np.int32)
+    tile_ptr = np.zeros(Mb + 1, dtype=np.int32)
+    np.add.at(tile_ptr, tile_rows + 1, 1)
+    np.cumsum(tile_ptr, out=tile_ptr)
+    return TileMatrix(shape=csr.shape, bm=bm, bn=bn, tile_ptr=tile_ptr,
+                      tile_rows=tile_rows, tile_cols=tile_cols, data=data,
+                      mask=np.packbits(occ, axis=2), nnz=csr.nnz)
 
 
 def csr_from_coo(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,

@@ -54,11 +54,13 @@ __all__ = ["SpmvPlan", "DistributedSpmv", "build_distributed",
 
 #: Kernel spellings a plan accepts (per-shard or uniform), in tie-break
 #: preference order (the regular ELL stream wins ties against formats that
-#: pay scan/scatter overheads).  The SINGLE definition: ``plan.KERNELS``
-#: (selector/majority order) and ``program.PROGRAM_KERNELS`` (the
-#: ``lax.switch`` branch ids) are aliases of this tuple, so the three
-#: layers cannot drift.
-PLAN_KERNELS = ("ell", "seg", "hyb", "split")
+#: pay scan/scatter overheads; the dense-tile stream comes last — it only
+#: wins when the blocked structure makes it *strictly* cheaper).  The
+#: SINGLE definition: ``plan.KERNELS`` (selector/majority order) and
+#: ``program.PROGRAM_KERNELS`` (the ``lax.switch`` branch ids) are aliases
+#: of this tuple, so the three layers cannot drift.  New families are
+#: appended, never inserted, so lowered branch ids stay stable.
+PLAN_KERNELS = ("ell", "seg", "hyb", "split", "tile")
 
 #: Exchange policies a plan accepts (uniform or per-shard).  ``halo``
 #: first: on a cost tie the exact-entries exchange wins over full
@@ -78,9 +80,12 @@ class SpmvPlan:
     paper's §IV-D.  ``kernel`` picks the per-shard device format:
     ``"ell"`` (row-tiled padded slabs), ``"seg"`` (nonzero-balanced
     segmented chunks whose *grid* is load-balance-aware too), ``"hyb"``
-    (p95-capped ELL + COO overflow tail for skew-tolerant padding), or
+    (p95-capped ELL + COO overflow tail for skew-tolerant padding),
     ``"split"`` (split-nnz two-stage split-K: the seg chunk grid cut into
-    NS partial accumulators plus a tiny combine — the monster-row cure).
+    NS partial accumulators plus a tiny combine — the monster-row cure),
+    or ``"tile"`` (bitmask-tiled: a coarse pointer grid over dense
+    (8, 128) tiles streamed with whole-tile FMAs and no per-element
+    column indices — the blocked answer for banded/block matrices).
 
     ``shard_kernels`` (optional) overrides the kernel **per shard** — one
     entry per shard, each in :data:`PLAN_KERNELS` — producing the
@@ -106,7 +111,7 @@ class SpmvPlan:
     distribution: Literal["row", "nonzero", "nnz"] = "nonzero"
     reordering: Literal["none", "random", "bfs", "metis", "degree"] = "none"
     exchange: Literal["allgather", "halo"] = "halo"
-    kernel: Literal["ell", "seg", "hyb", "split"] = "ell"
+    kernel: Literal["ell", "seg", "hyb", "split", "tile"] = "ell"
     num_shards: int = 8
     seed: int = 0
     shard_kernels: tuple | None = None

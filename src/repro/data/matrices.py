@@ -27,7 +27,7 @@ from repro.core.sparse_matrix import CSRMatrix, csr_from_coo
 
 __all__ = ["PAPER_SUITE", "make_matrix", "banded", "arrow_fem", "powerlaw",
            "rmat", "dense_blocks", "mixed_structure", "powerlaw_tail",
-           "halo_spikes"]
+           "halo_spikes", "blocked_band"]
 
 
 def _finish(rows, cols, vals, M, symmetric: bool) -> CSRMatrix:
@@ -237,6 +237,60 @@ def mixed_structure(M: int, nnz: int, *, band_frac: float = 0.2,
     cols = np.concatenate([c1, c2, rng.integers(0, M, n_cp),
                            np.arange(M)])
     vals = np.concatenate([v1, v2, rng.standard_normal(n_cp), np.ones(M)])
+    return csr_from_coo(rows, cols, vals, (M, M))
+
+
+def blocked_band(M: int, nnz: int, *, band_frac: float = 0.75,
+                 tiles_min: int = 1, tiles_max: int = 4, bm: int = 8,
+                 bn: int = 128, seed: int = 0) -> CSRMatrix:
+    """Blocked-band matrix: (8, 128)-aligned dense tiles ⊕ scattered rows.
+
+    Rows [0, hb) are a *tile-aligned* band: each 8-row block carries
+    between ``tiles_min`` and ``tiles_max`` fully dense (bm, bn) tiles
+    placed along the diagonal — the structure the bitmask-tiled format
+    stores with zero waste.  The per-block tile count *varies*, so the
+    padded ELL slab pays the shard-wide max width (a 4-tile block widens
+    every row's slab to 512) while tile pays only the occupied tiles;
+    the nnz-balanced seg stream pays its scan/bookkeeping tax on rows
+    that are perfectly regular.  Rows [hb, M) are a short-row scattered
+    block (columns within the scattered range, so the two regimes land
+    on different shards under a contiguous partition) where a stray
+    nonzero would drag a whole 1024-cell tile in — the shards the
+    per-shard selector must steer *away* from tile.  This is the
+    ``hetero_bench --workload blocked`` headline matrix: the best
+    tile-using per-shard program beats every tile-free program on the
+    kernel-slot term.
+    """
+    rng = np.random.default_rng(seed)
+    n_band = int(nnz * band_frac)
+    per_tile = bm * bn
+    avg_tiles = (tiles_min + tiles_max) / 2.0
+    n_blk = int(min(max(n_band / (per_tile * avg_tiles), 1), M // bm))
+    hb = n_blk * bm
+    Nb = max(M // bn, 1)
+    k = rng.integers(tiles_min, tiles_max + 1, n_blk)
+    tb_row = np.repeat(np.arange(n_blk), k)
+    offs = np.concatenate([np.arange(ki) for ki in k]) if n_blk else \
+        np.zeros(0, np.int64)
+    tb_col = np.clip((tb_row * bm) // bn + offs, 0, Nb - 1)
+    T = tb_row.size
+    lr = np.tile(np.repeat(np.arange(bm), bn), T)
+    lc = np.tile(np.arange(bn), T * bm)
+    r1 = np.repeat(tb_row * bm, per_tile) + lr
+    c1 = np.repeat(tb_col * bn, per_tile) + lc
+    v1 = rng.standard_normal(r1.size)
+    m_sp = M - hb
+    if m_sp > 0:
+        kk = max((nnz - n_band) // m_sp, 1)
+        r2 = hb + np.repeat(np.arange(m_sp), kk)
+        c2 = hb + rng.integers(0, m_sp, r2.shape[0])
+        v2 = rng.standard_normal(r2.shape[0])
+    else:
+        r2 = c2 = np.zeros(0, np.int64)
+        v2 = np.zeros(0)
+    rows = np.concatenate([r1, r2, np.arange(M)])
+    cols = np.concatenate([c1, c2, np.arange(M)])
+    vals = np.concatenate([v1, v2, np.ones(M)])
     return csr_from_coo(rows, cols, vals, (M, M))
 
 

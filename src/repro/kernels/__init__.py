@@ -1,13 +1,11 @@
 """Pallas SpMV kernels + pure-jnp oracles (``ref.py``) + jit'd wrappers
 (``ops.py``).
 
-Four kernel families, one per sparse format/work-distribution choice:
+Five kernel families, one per sparse format/work-distribution choice:
 
 * **ELL** (``spmv_ell.py``) — row-tiled padded-ELL SpMV (+ COO overflow
   tail = HYB via :func:`hyb_spmv`).  Grid is shape-aware: (rows, width)
   tiles, so one power-law row widens every tile's reduction.
-* **BELL** (``spmv_bell.py``) — Block-ELL SpMV/SpMM over MXU-aligned dense
-  blocks; how structured sparsity pays on a systolic array.
 * **Segmented** (``spmv_seg.py``) — nonzero-balanced merge-path-style
   SpMV: the nnz stream is cut into equal-size chunks, the kernel emits
   within-chunk prefix sums, and a jit'd cross-chunk carry fix-up
@@ -19,6 +17,14 @@ Four kernel families, one per sparse format/work-distribution choice:
   (split, chunk) grid of partial accumulators, stage 2 is a tiny
   split-axis combine.  Cures the paper's §IV-D monster-row hot-spot at
   *shard* granularity — a one-row shard still fills the whole grid.
+* **Tile** (``spmv_tile.py``) — bitmask-tiled SpMV: a coarse pointer
+  grid over dense (8, 128) tiles plus per-tile occupancy bitmasks.  The
+  scalar-prefetch walk streams whole tiles with dense FMAs and **no
+  per-element column indices**, skipping empty tiles via the pointer
+  level — the blocked format for banded / block-structured matrices,
+  where ELL pads and seg wastes scan work.  The old MXU Block-ELL
+  (``bell_*``) is absorbed as a special case of this walk; its ops
+  survive as warn-once deprecated shims.
 
 Every kernel has the same contract: pure-jnp oracle as the default
 execution path, ``use_kernel=True`` for the Pallas path (TPU), and
@@ -57,13 +63,25 @@ The split-K path from the same matrix (two splits over the chunk grid):
 >>> y2 = np.asarray(split_spmv(spl, np.array([1.0, 2.0], np.float32)))
 >>> np.allclose(y2, y)
 True
+
+The bitmask-tiled path from the same matrix (one occupied (8, 128) tile):
+
+>>> from repro.kernels import tile_from_csr, tile_spmv
+>>> tl = tile_from_csr(A)
+>>> tl.num_tiles
+1
+>>> y3 = np.asarray(tile_spmv(tl, np.array([1.0, 2.0], np.float32)))
+>>> np.allclose(y3, y)
+True
 """
 from .ops import (bell_from_bcsr, bell_spmm, bell_spmv, ell_spmv,
                   ell_spmv_ref, hyb_spmv, seg_from_csr, seg_spmv,
                   seg_spmv_ref, split_flat_spmv, split_from_csr, split_spmv,
-                  split_spmv_ref)
+                  split_spmv_ref, tile_flat_spmv, tile_from_csr, tile_spmv,
+                  tile_spmv_ref)
 
 __all__ = ["ell_spmv", "ell_spmv_ref", "hyb_spmv", "bell_spmv", "bell_spmm",
            "bell_from_bcsr", "seg_spmv", "seg_spmv_ref", "seg_from_csr",
            "split_spmv", "split_spmv_ref", "split_from_csr",
-           "split_flat_spmv"]
+           "split_flat_spmv", "tile_spmv", "tile_spmv_ref", "tile_from_csr",
+           "tile_flat_spmv"]

@@ -14,18 +14,20 @@ import numpy as np
 
 from . import ref
 from .spmv_ell import ell_spmv as _ell_spmv_pallas
-from .spmv_bell import bell_spmv as _bell_spmv_pallas, bell_spmm as _bell_spmm_pallas
 from .spmv_seg import seg_psum as _seg_psum_pallas
 from .spmv_split import split_combine as _split_combine_pallas, \
     split_psum as _split_psum_pallas
+from .spmv_tile import tile_contrib as _tile_contrib_pallas, \
+    tile_walk_spmv as _tile_walk_pallas
 from repro.core.partition import nnz_chunk_starts
 from repro.core.sparse_matrix import EllMatrix, SegMatrix, SplitMatrix, \
-    hyb_cap_width
+    TileMatrix, csr_to_tile, hyb_cap_width
 
 __all__ = ["SEG_CHUNK", "ell_spmv_ref", "ell_spmv", "hyb_spmv", "hyb_from_csr",
            "bell_spmv", "bell_spmm", "bell_from_bcsr", "seg_spmv",
            "seg_spmv_ref", "seg_from_csr", "split_from_csr", "split_spmv",
-           "split_spmv_ref", "split_flat_spmv"]
+           "split_spmv_ref", "split_flat_spmv", "tile_from_csr", "tile_spmv",
+           "tile_spmv_ref", "tile_flat_spmv"]
 
 #: Default elements per segmented chunk (lane-aligned).  Single source of
 #: truth shared with the plan cost model's padding arithmetic.
@@ -36,6 +38,9 @@ bell_spmv_ref = jax.jit(ref.bell_spmv_ref)
 bell_spmm_ref = jax.jit(ref.bell_spmm_ref)
 seg_spmv_ref = jax.jit(ref.seg_spmv_ref, static_argnames=("num_rows",))
 split_spmv_ref = jax.jit(ref.split_spmv_ref, static_argnames=("num_rows",))
+tile_spmv_ref = jax.jit(ref.tile_spmv_ref, static_argnames=("num_rows",))
+tile_flat_spmv_ref = jax.jit(ref.tile_flat_spmv_ref,
+                             static_argnames=("num_rows",))
 
 
 def ell_spmv(data, cols, x, *, interpret: bool = False, **tiles):
@@ -94,18 +99,58 @@ def hyb_spmv(ell_data, ell_cols, ovf_rows, ovf_cols, ovf_vals, x,
     return y
 
 
+def _bell_walk_tables(blocks, bcols):
+    """Flatten padded Block-ELL tables into a rectangular tile walk.
+
+    Block-ELL *is* a dense tile walk whose walk table happens to be
+    rectangular: slot (mb, k) streams tile ``mb*K + k`` against block
+    column ``bcols[mb, k]``; padded slots hold zero blocks so the walk
+    visits them harmlessly (counts = K everywhere).
+    """
+    Mb, K, bm, bn = blocks.shape
+    data = jnp.asarray(blocks).reshape(Mb * K, bm, bn)
+    counts = jnp.full((Mb,), K, dtype=jnp.int32)
+    tid = jnp.arange(Mb * K, dtype=jnp.int32).reshape(Mb, K)
+    return data, counts, tid, jnp.asarray(bcols, dtype=jnp.int32)
+
+
 def bell_spmv(blocks, bcols, x, *, use_kernel: bool = False,
               interpret: bool = False):
+    """Deprecated Block-ELL SpMV — absorbed by the tile family.
+
+    Thin shim: the padded (Mb, K) Block-ELL tables are one special case
+    of the bitmask-tiled walk (rectangular walk table, all slots
+    visited), so the kernel path runs
+    :func:`~repro.kernels.spmv_tile.tile_walk_spmv`.  New code should
+    build a :class:`TileMatrix` via :func:`tile_from_csr` and call
+    :func:`tile_spmv`.
+    """
+    from repro.core.spmv import _warn_deprecated
+    _warn_deprecated("bell_spmv", "repro.kernels.ops.tile_spmv")
     if use_kernel:
-        return _bell_spmv_pallas(blocks, bcols, x, interpret=interpret)
+        data, counts, tid, bc = _bell_walk_tables(blocks, bcols)
+        return _tile_walk_pallas(data, counts, tid, bc, jnp.asarray(x),
+                                 interpret=interpret)
     return bell_spmv_ref(blocks, bcols, x)
 
 
 def bell_spmm(blocks, bcols, X, *, use_kernel: bool = False,
               interpret: bool = False, tile_b: int = 128):
+    """Deprecated Block-ELL SpMM — absorbed by the tile family.
+
+    Thin shim over the tile walk, vmapped over the RHS columns
+    (``tile_b`` is accepted for signature compatibility and ignored).
+    New code should call :func:`tile_spmv` with a (N, B) block.
+    """
+    from repro.core.spmv import _warn_deprecated
+    _warn_deprecated("bell_spmm", "repro.kernels.ops.tile_spmv")
+    del tile_b
     if use_kernel:
-        return _bell_spmm_pallas(blocks, bcols, X, tile_b=tile_b,
-                                 interpret=interpret)
+        data, counts, tid, bc = _bell_walk_tables(blocks, bcols)
+        return jax.vmap(
+            lambda xb: _tile_walk_pallas(data, counts, tid, bc, xb,
+                                         interpret=interpret),
+            in_axes=1, out_axes=1)(jnp.asarray(X))
     return bell_spmm_ref(blocks, bcols, X)
 
 
@@ -357,12 +402,112 @@ def split_from_csr(csr, num_splits: int, *, chunk: int = SEG_CHUNK,
                        piece_hi=piece_hi, piece_row=piece_row, nnz=nnz)
 
 
+def tile_from_csr(csr, *, bm: int | None = None,
+                  bn: int | None = None) -> TileMatrix:
+    """Convert host CSRMatrix -> bitmask-tiled :class:`TileMatrix`.
+
+    Thin wrapper over :func:`repro.core.sparse_matrix.csr_to_tile`; tiles
+    default to the fp32 native (8, 128) vector tile.  The format
+    :func:`tile_spmv` executes — and the fifth per-shard kernel family
+    the plan grid / lowering / autotuner select as ``"tile"``.
+    """
+    from repro.core.sparse_matrix import ELL_LANE, ELL_SUBLANE
+    return csr_to_tile(csr, bm=ELL_SUBLANE if bm is None else bm,
+                       bn=ELL_LANE if bn is None else bn)
+
+
+def _tile_walk_tables(tile: TileMatrix):
+    """Flatten the pointer grid into (counts, tid, bc) prefetch tables.
+
+    K = max occupied tiles per block row; slots past ``counts[mb]`` clamp
+    to a valid tile id (their contribution is masked in-kernel), so the
+    index maps never read out of bounds.
+    """
+    counts = np.diff(tile.tile_ptr).astype(np.int32)        # (Mb,)
+    Mb = counts.shape[0]
+    T = tile.num_tiles
+    K = max(int(counts.max()) if counts.size else 0, 1)
+    tid = tile.tile_ptr[:-1, None].astype(np.int64) + np.arange(K)[None, :]
+    tid = np.minimum(tid, max(T - 1, 0)).astype(np.int32)
+    bc = (tile.tile_cols[tid.reshape(-1)].reshape(Mb, K)
+          if T else np.zeros((Mb, K), np.int32))
+    return counts, tid, bc
+
+
+def tile_spmv(tile: TileMatrix, x, *, num_rows: int | None = None,
+              use_kernel: bool = False, interpret: bool = False):
+    """Bitmask-tiled SpMV: y = A @ x over the occupied-tile walk.
+
+    Same contract as the other ops: the jnp gather/einsum/scatter oracle
+    (:func:`repro.kernels.ref.tile_spmv_ref`) is the default execution
+    path; ``use_kernel=True`` runs the Pallas scalar-prefetch tile walk
+    (``interpret=True`` on CPU).  ``x`` may be a single (N,) vector or a
+    multi-RHS block (N, B); the kernel path vmaps over the trailing axis.
+    """
+    if num_rows is None:
+        num_rows = tile.shape[0]
+    if not use_kernel or tile.num_tiles == 0:
+        return tile_spmv_ref(jnp.asarray(tile.data),
+                             jnp.asarray(tile.tile_rows),
+                             jnp.asarray(tile.tile_cols),
+                             jnp.asarray(x), num_rows=num_rows)
+    counts, tid, bc = _tile_walk_tables(tile)
+    bn = tile.bn
+    xa = jnp.asarray(x)
+    n = xa.shape[0]
+    Nb = max(-(-n // bn), 1)
+    pad = [(0, Nb * bn - n)] + [(0, 0)] * (xa.ndim - 1)
+    xp = jnp.pad(xa, pad)
+
+    def one(xb):
+        y = _tile_walk_pallas(jnp.asarray(tile.data), jnp.asarray(counts),
+                              jnp.asarray(tid), jnp.asarray(bc), xb,
+                              interpret=interpret)
+        return y[:num_rows]
+    if xa.ndim == 2:
+        return jax.vmap(one, in_axes=1, out_axes=1)(xp)
+    return one(xp)
+
+
+def tile_flat_spmv(data, xcols, trows, x, *, num_rows: int,
+                   use_kernel: bool = False, interpret: bool = False):
+    """Tile SpMV over the *flat pre-gathered* device operands.
+
+    The distributed executor has no block grid to index — x lives in the
+    remapped augmented [local ++ halo] buffer — so each tile carries its
+    per-lane x positions ``xcols`` (T, bn) and block row ``trows`` (T,)
+    (padding tiles point past the last block row and drop).  The oracle
+    path is :func:`repro.kernels.ref.tile_flat_spmv_ref`; the kernel path
+    gathers x lanes with jnp (like the HYB overflow scatter) and runs the
+    dense per-tile FMA stream through the Pallas ``tile_contrib`` kernel.
+    """
+    T, bm, bn = data.shape
+    if not use_kernel:
+        return tile_flat_spmv_ref(data, xcols, trows, x, num_rows=num_rows)
+    Mb = max(-(-num_rows // bm), 1)
+
+    def one(xb):
+        xg = jnp.take(xb, xcols, axis=0)                 # (T, bn)
+        contrib = _tile_contrib_pallas(data, xg, interpret=interpret)
+        out = jnp.zeros((Mb, bm), dtype=contrib.dtype)
+        out = out.at[trows].add(contrib, mode="drop")
+        return out.reshape(Mb * bm)[:num_rows]
+    if jnp.asarray(x).ndim == 2:
+        return jax.vmap(one, in_axes=1, out_axes=1)(jnp.asarray(x))
+    return one(jnp.asarray(x))
+
+
 def bell_from_bcsr(bcsr) -> tuple[np.ndarray, np.ndarray]:
-    """Convert host BcsrMatrix -> padded Block-ELL arrays (blocks, bcols).
+    """Deprecated: convert host BcsrMatrix -> padded Block-ELL arrays.
 
     K = max blocks per block-row; padded slots hold zero blocks and bcol 0,
-    which the kernels treat as a no-op contribution.
+    which the kernels treat as a no-op contribution.  Block-ELL is now a
+    special case of the bitmask-tiled family — build a
+    :class:`TileMatrix` with :func:`tile_from_csr` instead (pointer-grid
+    walk, no padded slots, occupancy bitmask).
     """
+    from repro.core.spmv import _warn_deprecated
+    _warn_deprecated("bell_from_bcsr", "repro.kernels.ops.tile_from_csr")
     Mb = bcsr.block_row_ptr.shape[0] - 1
     bm, bn = bcsr.block_shape
     per_row = np.diff(bcsr.block_row_ptr)

@@ -10,7 +10,8 @@ import jax.numpy as jnp
 
 __all__ = ["ell_spmv_ref", "bell_spmv_ref", "coo_spmv_ref", "bell_spmm_ref",
            "seg_spmv_ref", "seg_psum_ref", "split_psum_ref",
-           "split_partial_ref", "split_combine_ref", "split_spmv_ref"]
+           "split_partial_ref", "split_combine_ref", "split_spmv_ref",
+           "tile_spmv_ref", "tile_flat_spmv_ref"]
 
 
 def ell_spmv_ref(data: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
@@ -101,6 +102,53 @@ def split_spmv_ref(vals: jnp.ndarray, cols: jnp.ndarray, rows: jnp.ndarray,
     NS, Cs, L = vals.shape
     return seg_spmv_ref(vals.reshape(NS * Cs, L), cols.reshape(NS * Cs, L),
                         rows.reshape(NS * Cs, L), x, num_rows)
+
+
+def tile_spmv_ref(data: jnp.ndarray, tile_rows: jnp.ndarray,
+                  tile_cols: jnp.ndarray, x: jnp.ndarray,
+                  num_rows: int) -> jnp.ndarray:
+    """Bitmask-tiled SpMV oracle over the occupied-tile list.
+
+    data:      (T, bm, bn) dense zero-filled tiles
+    tile_rows: (T,) int32 block-row id per tile
+    tile_cols: (T,) int32 block-col id per tile
+    x:         (N,) or (N, B) — padded internally to a ``bn`` multiple
+
+    Each tile gathers its lane-aligned x slice whole, does one dense
+    (bm, bn) @ (bn,) product, and scatter-adds into its block row — the
+    order-free definition the scalar-prefetch walk kernel reproduces.
+    """
+    T, bm, bn = data.shape
+    n = x.shape[0]
+    Nb = max(-(-n // bn), 1)
+    pad = [(0, Nb * bn - n)] + [(0, 0)] * (x.ndim - 1)
+    xb = jnp.pad(x, pad).reshape((Nb, bn) + x.shape[1:])
+    gathered = jnp.take(xb, tile_cols, axis=0)          # (T, bn[, B])
+    contrib = jnp.einsum("tij,tj...->ti...", data, gathered)
+    Mb = max(-(-num_rows // bm), 1)
+    out = jnp.zeros((Mb, bm) + x.shape[1:], dtype=contrib.dtype)
+    out = out.at[tile_rows].add(contrib)
+    return out.reshape((Mb * bm,) + x.shape[1:])[:num_rows]
+
+
+def tile_flat_spmv_ref(data: jnp.ndarray, xcols: jnp.ndarray,
+                       trows: jnp.ndarray, x: jnp.ndarray,
+                       num_rows: int) -> jnp.ndarray:
+    """Flat-gather variant for the device path.
+
+    ``xcols`` (T, bn) carries each tile's *remapped* per-lane x positions
+    (the executor's augmented local+halo buffer has no block structure to
+    index by block column), and padding tiles carry ``trows >= Mb`` so
+    their scatter drops.  Unoccupied lanes point at position 0 and hold
+    zero data, contributing exact zeros.
+    """
+    T, bm, bn = data.shape
+    gathered = jnp.take(x, xcols, axis=0)               # (T, bn[, B])
+    contrib = jnp.einsum("tij,tj...->ti...", data, gathered)
+    Mb = max(-(-num_rows // bm), 1)
+    out = jnp.zeros((Mb, bm) + x.shape[1:], dtype=contrib.dtype)
+    out = out.at[trows].add(contrib, mode="drop")
+    return out.reshape((Mb * bm,) + x.shape[1:])[:num_rows]
 
 
 def bell_spmv_ref(blocks: jnp.ndarray, bcols: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:

@@ -1,6 +1,7 @@
 """Pallas TPU kernel: ELL-format SpMV.
 
-TPU adaptation of the paper's CSR row loop (DESIGN.md §2): a scalar
+TPU adaptation of the paper's CSR row loop (docs/ARCHITECTURE.md#design-2):
+a scalar
 CSR walk cannot feed the VPU, so rows are padded to a lane-aligned width W
 and the kernel processes (TM, TW) tiles of the ELL slab against an x vector
 resident in VMEM:

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: bitmask-tiled SpMV with scalar-prefetched tile walk.
+
+The two-level tiled layout (`docs/ARCHITECTURE.md` §"Bitmask-tiled
+layout") streams dense ``(bm, bn)`` tiles with whole-tile FMAs and **no
+per-element column indices**: the coarse pointer grid (``tile_ptr``) is
+flattened host-side into per-block-row prefetch tables so the BlockSpec
+index maps can walk exactly the occupied tiles of each block row —
+
+    y[mb*bm : (mb+1)*bm] += data[tid[mb, k]] @ x[bc[mb, k]*bn : ...]
+
+Empty tiles are never visited (they have no table entry past
+``counts[mb]``); partially-occupied tiles are zero-filled so their dead
+lanes contribute exact zeros.  This is the cache-blocked answer of
+Elafrou et al. applied at the shard level: one ``bc`` id moves a whole
+lane-aligned x tile across the memory hierarchy and feeds ``bm*bn``
+FMAs, versus one gathered element per FMA for the scalar row formats.
+
+Like ``spmv_bell.py`` before it (this kernel family absorbs Block-ELL),
+the tables are *scalar-prefetched* (``PrefetchScalarGridSpec``) so the
+index maps run ahead of the compute stream.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["tile_walk_spmv", "tile_contrib"]
+
+
+def _tile_spmv_kernel(counts_ref, tid_ref, bc_ref, data_ref, xb_ref, y_ref):
+    mb = pl.program_id(0)
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    tile = data_ref[0]                         # (bm, bn)
+    xtile = xb_ref[0]                          # (bn,)
+    contrib = jnp.dot(tile, xtile, preferred_element_type=y_ref.dtype)
+    # Slots past this block row's tile count re-read the last valid tile
+    # (the index map clamps); mask their contribution to an exact zero.
+    y_ref[...] += jnp.where(k < counts_ref[mb], contrib, 0.0)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tile_walk_spmv(data: jnp.ndarray, counts: jnp.ndarray, tid: jnp.ndarray,
+                   bc: jnp.ndarray, x: jnp.ndarray, *,
+                   interpret: bool = False) -> jnp.ndarray:
+    """y = A @ x over the flattened tile walk (single vector).
+
+    data:   (T, bm, bn) dense zero-filled tiles
+    counts: (Mb,) int32 occupied tiles per block row
+    tid:    (Mb, K) int32 tile id per walk slot (clamped on padding)
+    bc:     (Mb, K) int32 block-column id per walk slot
+    x:      (Nb*bn,)  ->  returns y: (Mb*bm,)
+    """
+    Mb, K = tid.shape
+    _, bm, bn = data.shape
+    xb = x.reshape(-1, bn)
+    return pl.pallas_call(
+        _tile_spmv_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(Mb, K),
+            in_specs=[
+                # Walk the occupied tiles of block row mb, in bc order.
+                pl.BlockSpec((1, bm, bn),
+                             lambda mb, k, cnt, tid, bc: (tid[mb, k], 0, 0)),
+                # Stream exactly the x tile this tile multiplies.
+                pl.BlockSpec((1, bn),
+                             lambda mb, k, cnt, tid, bc: (bc[mb, k], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, bm),
+                                   lambda mb, k, cnt, tid, bc: (mb, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((Mb, bm), x.dtype),
+        interpret=interpret,
+    )(counts, tid, bc, data, xb).reshape(Mb * bm)
+
+
+def _tile_contrib_kernel(d_ref, x_ref, o_ref):
+    o_ref[0] = jnp.dot(d_ref[0], x_ref[0], preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tile_contrib(data: jnp.ndarray, xg: jnp.ndarray, *,
+                 interpret: bool = False) -> jnp.ndarray:
+    """Per-tile dense matvec (T, bm, bn) x (T, bn) -> (T, bm).
+
+    The device executor's flat tile path: x lanes are pre-gathered
+    through the remapped augmented buffer (so there is no block grid to
+    index), and the dense per-tile FMA stream runs here; the caller
+    scatter-adds the contributions into block rows.
+    """
+    T, bm, bn = data.shape
+    return pl.pallas_call(
+        _tile_contrib_kernel,
+        grid=(T,),
+        in_specs=[pl.BlockSpec((1, bm, bn), lambda t: (t, 0, 0)),
+                  pl.BlockSpec((1, bn), lambda t: (t, 0))],
+        out_specs=pl.BlockSpec((1, bm), lambda t: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, bm), data.dtype),
+        interpret=interpret,
+    )(data, xg)

@@ -283,7 +283,8 @@ def main() -> None:
         for sname in shapes:
             if not shape_applicable(cfg, SHAPES[sname]):
                 emit({"arch": arch, "shape": sname, "status": "skip",
-                      "reason": "quadratic attention @500k (DESIGN.md §5)"})
+                      "reason": "quadratic attention @500k "
+                                "(docs/ARCHITECTURE.md#design-5)"})
                 print(f"SKIP  {arch:22s} {sname}")
                 continue
             for mp in pods:

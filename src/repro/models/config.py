@@ -100,7 +100,7 @@ SHAPES: dict[str, ShapeConfig] = {
 }
 
 # Architectures whose attention is fully quadratic skip long_500k (the skip
-# is recorded in DESIGN.md §5 and EXPERIMENTS.md); SSM/hybrid archs run it.
+# is recorded in docs/ARCHITECTURE.md#design-5); SSM/hybrid archs run it.
 SUBQUADRATIC_FAMILIES = ("ssm", "hybrid")
 
 

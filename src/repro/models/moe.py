@@ -1,6 +1,7 @@
 """Mixture-of-Experts layer — where the paper's technique lives in an LM.
 
-Token->expert dispatch is an SpMV-shaped irregular gather (DESIGN.md §4):
+Token->expert dispatch is an SpMV-shaped irregular gather
+(docs/ARCHITECTURE.md#design-4):
 the routing matrix is a sparse (tokens x experts) matrix, expert capacity
 is the nnz-balanced work distribution, and the optional *Valiant shuffle*
 is the paper's random-reordering insight applied to the all-to-all — a

@@ -5,7 +5,7 @@ chunkwise-parallel form (intra-chunk quadratic, inter-chunk recurrent state
 (B, H, Dk, Dv)); decoded with the O(1) recurrent step.  Gates are sigmoid
 (the paper's exp-input-gate needs log-space stabilization; the sigmoid
 variant is the numerically-plain equivalent also used by its official
-simplified kernels — noted in DESIGN.md).
+simplified kernels — noted in docs/ARCHITECTURE.md#design-xlstm).
 
 sLSTM: scalar-memory LSTM with exp input gating + stabilizer state, true
 recurrence (lax.scan over time), block-diagonal recurrent matrices per head.

@@ -8,7 +8,7 @@ into the next step (error feedback keeps convergence unbiased).
 
 Used by train/loop.py when the mesh has a "pod" axis and the config enables
 ``compress_pod_grads`` — a distributed-optimization feature for the 1000+
-node posture (DESIGN.md §6).
+node posture (docs/ARCHITECTURE.md#design-6).
 """
 from __future__ import annotations
 

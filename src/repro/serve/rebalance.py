@@ -388,7 +388,12 @@ def _try_partial_replan(csr: CSRMatrix, monitor: LoadMonitor,
       including the split-nnz two-stage ``split`` family, so a shard that
       drifted onto a monster-row hot-spot can be swapped onto split
       partials without a full re-plan (the split count re-derives from
-      :func:`~repro.core.plan.split_meta` at relower time).  ``split`` is
+      :func:`~repro.core.plan.split_meta` at relower time), and the
+      bitmask-tiled ``tile`` family, so a shard whose hot traffic
+      concentrates on a banded/blocked substructure swaps onto dense
+      tile streams the same way.  Exact cost ties break by the shard's
+      bottleneck class
+      (:meth:`~repro.core.oracle.CostOracle.kernel_affinity`).  ``split`` is
       only offered to a hot shard when the *thinned* structure still has
       a row spanning at least ``SPLIT_MIN_SPAN`` seg chunks
       (:meth:`~repro.core.oracle.CostOracle.split_span_ok`): heavy
@@ -424,12 +429,19 @@ def _try_partial_replan(csr: CSRMatrix, monitor: LoadMonitor,
     costs = _oracle.kernel_costs(sub_r, program.partition)
     old_k = old_plan.resolved_shard_kernels()
     new_k = list(old_k)
+    sbn = current.shard_bottlenecks
     for p in hot:
-        kerns = KERNELS if _oracle.split_span_ok(sub_r, program.partition,
-                                                 int(p)) \
-            else tuple(k for k in KERNELS if k != "split")
+        # Ties break by the hot shard's bottleneck-class affinity (a
+        # bandwidth-bound shard leans tile/ell streaming, an
+        # imbalance-bound one split/seg) — order only, never a flip of a
+        # strict cost winner.
+        order = KERNELS if sbn is None else \
+            _oracle.kernel_affinity(sbn[p])
+        kerns = order if _oracle.split_span_ok(sub_r, program.partition,
+                                               int(p)) \
+            else tuple(k for k in order if k != "split")
         new_k[p] = min(kerns, key=lambda k: (costs[k][p],
-                                             KERNELS.index(k)))
+                                             kerns.index(k)))
     kernel_ok = tuple(new_k) != tuple(old_k)
     if kernel_ok:
         old_c = float(sum(load[p] * costs[k][p]

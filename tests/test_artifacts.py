@@ -32,7 +32,7 @@ def _roundtrip(csr, plan, tmp_path):
     return prog, loaded, choice
 
 
-@pytest.mark.parametrize("kernel", ["ell", "seg", "hyb", "split"])
+@pytest.mark.parametrize("kernel", ["ell", "seg", "hyb", "split", "tile"])
 def test_roundtrip_bitwise_all_kernel_families(kernel, tmp_path):
     csr = mixed_structure(256, 6000, seed=1)
     plan = SpmvPlan(kernel=kernel, num_shards=4)
@@ -61,6 +61,31 @@ def test_roundtrip_mixed_shards_and_exchanges_with_reordering(tmp_path):
     x = np.random.default_rng(3).standard_normal(csr.ncols)
     assert np.array_equal(execute(prog, x), execute(loaded, x))
     assert tuple(loaded.shard_kernels()) == ("ell", "seg", "hyb", "split")
+
+
+def test_tile_slab_roundtrips_bitwise(tmp_path):
+    """Tile stages persist the pointer grid + occupancy bitmask verbatim:
+    the loaded TileMatrix must be field-for-field identical, on a mixed
+    tile/split program over a block-structured matrix."""
+    from repro.data.matrices import blocked_band
+    csr = blocked_band(512, 215 * 512, seed=0)
+    plan = SpmvPlan(kernel="tile", num_shards=4, exchange="halo",
+                    shard_kernels=("tile", "tile", "split", "seg"))
+    prog, loaded, _ = _roundtrip(csr, plan, tmp_path)
+    assert sum(st.tile is not None for st in loaded.stages) == 2
+    for st, lst in zip(prog.stages, loaded.stages):
+        assert (st.tile is None) == (lst.tile is None)
+        if st.tile is None:
+            continue
+        assert (lst.tile.shape == st.tile.shape and
+                (lst.tile.bm, lst.tile.bn) == (st.tile.bm, st.tile.bn) and
+                lst.tile.nnz == st.tile.nnz)
+        for f in ("tile_ptr", "tile_rows", "tile_cols", "data", "mask"):
+            a, b = getattr(st.tile, f), getattr(lst.tile, f)
+            assert a.dtype == b.dtype and np.array_equal(a, b), f
+    x = np.random.default_rng(12).standard_normal(csr.ncols)
+    assert np.array_equal(execute(prog, x), execute(loaded, x))
+    assert np.allclose(execute(loaded, x), csr_matvec(csr, x))
 
 
 def test_reordered_save_requires_source():

@@ -129,7 +129,7 @@ def test_run_spmv_default_engine_matches_reference():
 
 
 @pytest.mark.parametrize("engine", ENGINES)
-@pytest.mark.parametrize("kernel", ["ell", "seg", "hyb", "split"])
+@pytest.mark.parametrize("kernel", ["ell", "seg", "hyb", "split", "tile"])
 def test_engine_matches_reference_on_format_streams(engine, kernel):
     """Format-shaped home streams (``shard_kernels=``) stay tick-for-tick
     identical across all three engines: the per-format instruction
@@ -154,7 +154,7 @@ def test_engine_matches_reference_on_mixed_format_streams(engine):
     A = MATRICES["powerlaw"]()
     part = make_partition(A, CFG.nodelets, "nnz")
     lay = make_layout("cyclic", A.ncols, CFG.nodelets)
-    sk = ("ell", "seg", "hyb", "split")
+    sk = ("tile", "seg", "hyb", "split")
     nodes, weights, homes = build_thread_traces(
         A, part, lay, CFG.threads_per_nodelet, shard_kernels=sk)
     ref = simulate_reference(nodes, weights, homes, CFG, 1e6)

@@ -89,7 +89,9 @@ def _check_plan(A: CSRMatrix, plan: SpmvPlan, *, batch: bool = True) -> None:
 
 _KERNEL_CONFIGS = [
     ("ell", None), ("seg", None), ("hyb", None), ("split", None),
+    ("tile", None),
     ("seg", ("ell", "seg", "hyb", "split")),
+    ("tile", ("tile", "split", "tile", "ell")),
 ]
 
 
@@ -104,7 +106,7 @@ def test_full_per_shard_exchange_grid_vs_oracle(exchanges):
         plan = SpmvPlan(num_shards=4, kernel=kernel, shard_kernels=sk,
                         exchange=exchanges[0],
                         shard_exchanges=None if uniform else exchanges)
-        _check_plan(A, plan, batch=(kernel == "seg"))
+        _check_plan(A, plan, batch=(kernel in ("seg", "tile")))
 
 
 @pytest.mark.parametrize("layout", ["block", "cyclic"])
@@ -167,7 +169,7 @@ if HAVE_HYPOTHESIS:
            num_shards=hst.sampled_from([1, 2, 4]),
            layout=hst.sampled_from(["block", "cyclic"]),
            distribution=hst.sampled_from(["row", "nonzero"]),
-           kid=hst.integers(min_value=0, max_value=4),
+           kid=hst.integers(min_value=0, max_value=len(_KERNEL_CONFIGS) - 1),
            seed=hst.integers(min_value=0, max_value=2**31 - 1),
            exchanges=hst.lists(hst.sampled_from(PLAN_EXCHANGES),
                                min_size=4, max_size=4))
@@ -190,7 +192,7 @@ else:
         num_shards = int(rng.choice([1, 2, 4]))
         layout = str(rng.choice(["block", "cyclic"]))
         distribution = str(rng.choice(["row", "nonzero"]))
-        kid = int(rng.integers(0, 5))
+        kid = int(rng.integers(0, len(_KERNEL_CONFIGS)))
         exchanges = tuple(rng.choice(PLAN_EXCHANGES, size=4))
         _property(M, density, num_shards, layout, distribution, kid,
                   int(rng.integers(0, 2**31)), exchanges)

@@ -127,27 +127,121 @@ class TestEllKernel:
                                    rtol=1e-3, atol=1e-3)
 
 
-class TestBellKernel:
+class TestTileKernel:
+    """Bitmask-tiled SpMV: pointer-grid walk (oracle + Pallas interpret)
+    vs dense, the occupancy bitmask, the flat device path, and the
+    deprecated Block-ELL shims that now route through it."""
+
     @pytest.mark.parametrize("bm,bn", [(8, 128), (16, 128)])
     def test_spmv_matches(self, bm, bn):
         A, x = rand_problem(256, 256, 3000, seed=1)
-        blocks, bcols = ops.bell_from_bcsr(csr_to_bcsr(A, (bm, bn)))
-        y_ref = ref.bell_spmv_ref(*map(jnp.asarray, (blocks, bcols, x)))
-        y_pal = ops.bell_spmv(*map(jnp.asarray, (blocks, bcols, x)),
-                              use_kernel=True, interpret=True)
+        t = ops.tile_from_csr(A, bm=bm, bn=bn)
+        xj = jnp.asarray(x)
+        y_ref = ops.tile_spmv(t, xj)
+        y_pal = ops.tile_spmv(t, xj, use_kernel=True, interpret=True)
         np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
                                    rtol=1e-4, atol=1e-4)
         np.testing.assert_allclose(np.asarray(y_pal)[:256],
                                    csr_to_dense(A) @ x, rtol=1e-3, atol=1e-3)
 
-    @pytest.mark.parametrize("B,tb", [(128, 128), (256, 128)])
-    def test_spmm_matches(self, B, tb):
+    def test_batched_matches_per_vector(self):
         A, _ = rand_problem(256, 256, 2000, seed=2)
-        rng = np.random.default_rng(7)
-        X = rng.standard_normal((256, B)).astype(np.float32)
-        blocks, bcols = ops.bell_from_bcsr(csr_to_bcsr(A, (8, 128)))
-        Y = ops.bell_spmm(*map(jnp.asarray, (blocks, bcols, X)),
-                          use_kernel=True, interpret=True, tile_b=tb)
+        X = np.random.default_rng(7).standard_normal((256, 3)) \
+            .astype(np.float32)
+        t = ops.tile_from_csr(A)
+        Y_ref = np.asarray(ops.tile_spmv(t, jnp.asarray(X)))
+        Y_pal = np.asarray(ops.tile_spmv(t, jnp.asarray(X),
+                                         use_kernel=True, interpret=True))
+        assert Y_ref.shape == (256, 3)
+        for b in range(3):
+            np.testing.assert_allclose(
+                Y_ref[:, b],
+                np.asarray(ops.tile_spmv(t, jnp.asarray(X[:, b]))),
+                rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(Y_pal, Y_ref, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(Y_ref[:256], csr_to_dense(A) @ X,
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_bitmask_counts_stored_entries_and_ptr_grid_is_sorted(self):
+        """The packed occupancy mask records *stored* entries (stored
+        zeros included, structural zeros excluded), and the coarse
+        pointer level walks tiles block-row-major, sorted by block col."""
+        rng = np.random.default_rng(3)
+        n = 1500
+        rows, cols = rng.integers(0, 256, n), rng.integers(0, 256, n)
+        vals = rng.standard_normal(n)
+        vals[:10] = 0.0                       # explicit stored zeros
+        A = csr_from_coo(rows, cols, vals, (256, 256))
+        t = ops.tile_from_csr(A)
+        occ = t.occupancy()
+        assert int(occ.sum()) == A.nnz == t.nnz
+        # stored zeros occupy cells the dense payload cannot distinguish
+        assert int((t.data != 0).sum()) < t.nnz
+        assert t.tile_ptr[0] == 0 and t.tile_ptr[-1] == t.num_tiles
+        for mb in range(t.tile_ptr.size - 1):
+            lo, hi = int(t.tile_ptr[mb]), int(t.tile_ptr[mb + 1])
+            assert (t.tile_rows[lo:hi] == mb).all()
+            assert (np.diff(t.tile_cols[lo:hi]) > 0).all()
+
+    def test_flat_path_matches_structured(self):
+        """``tile_flat_spmv`` (pre-gathered per-lane x positions + block
+        rows, the device-path operands) agrees with the structured walk,
+        padding tiles dropping past the last block row."""
+        A, x = rand_problem(256, 256, 3000, seed=4)
+        t = ops.tile_from_csr(A)
+        Tn, Rb = t.num_tiles, -(-256 // t.bm)
+        Tp = Tn + 3                           # padding tiles must drop
+        data = np.zeros((Tp, t.bm, t.bn), np.float32)
+        data[:Tn] = t.data
+        xcols = np.zeros((Tp, t.bn), np.int32)
+        xcols[:Tn] = np.minimum(
+            t.tile_cols[:, None] * t.bn + np.arange(t.bn)[None, :], 255)
+        trows = np.full(Tp, Rb, np.int32)
+        trows[:Tn] = t.tile_rows
+        for use_kernel in (False, True):
+            y = np.asarray(ops.tile_flat_spmv(
+                jnp.asarray(data), jnp.asarray(xcols), jnp.asarray(trows),
+                jnp.asarray(x), num_rows=256, use_kernel=use_kernel,
+                interpret=use_kernel))
+            np.testing.assert_allclose(
+                y, np.asarray(ops.tile_spmv(t, jnp.asarray(x))),
+                rtol=1e-5, atol=1e-5)
+
+    def test_empty_matrix_is_noop(self):
+        E = csr_from_coo(np.zeros(0, int), np.zeros(0, int), np.zeros(0),
+                         (16, 16))
+        t = ops.tile_from_csr(E)
+        assert t.num_tiles == 0
+        y = np.asarray(ops.tile_spmv(t, jnp.zeros(16, jnp.float32)))
+        assert y.shape == (16,) and not y.any()
+
+    @pytest.mark.parametrize("B,tb", [(128, 128), (256, 128)])
+    def test_deprecated_bell_shims_warn_once_and_match(self, B, tb):
+        """The retired Block-ELL API stays importable: ``bell_*`` warn
+        (once per process) and route through the tile walk, matching the
+        kept ``ref.bell_*_ref`` oracles and dense."""
+        from repro.core.spmv import _DEPRECATION_WARNED
+        A, x = rand_problem(256, 256, 2000, seed=2)
+        _DEPRECATION_WARNED.discard("bell_from_bcsr")
+        with pytest.warns(DeprecationWarning, match="tile_from_csr"):
+            blocks, bcols = ops.bell_from_bcsr(csr_to_bcsr(A, (8, 128)))
+        bj, cj = jnp.asarray(blocks), jnp.asarray(bcols)
+        _DEPRECATION_WARNED.discard("bell_spmv")
+        with pytest.warns(DeprecationWarning, match="tile_spmv"):
+            y = ops.bell_spmv(bj, cj, jnp.asarray(x), use_kernel=True,
+                              interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(ref.bell_spmv_ref(bj, cj,
+                                                        jnp.asarray(x))),
+            rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(y)[:256], csr_to_dense(A) @ x,
+                                   rtol=1e-3, atol=1e-3)
+        X = np.random.default_rng(7).standard_normal((256, B)) \
+            .astype(np.float32)
+        _DEPRECATION_WARNED.discard("bell_spmm")
+        with pytest.warns(DeprecationWarning, match="tile_spmv"):
+            Y = ops.bell_spmm(bj, cj, jnp.asarray(X), use_kernel=True,
+                              interpret=True, tile_b=tb)
         np.testing.assert_allclose(np.asarray(Y)[:256], csr_to_dense(A) @ X,
                                    rtol=1e-3, atol=1e-3)
 
@@ -476,6 +570,19 @@ class TestKernelProperties:
                 Y[:, b],
                 np.asarray(ops.split_spmv(spl, jnp.asarray(X[:, b]))),
                 rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(nnz=st.integers(16, 600), seed=st.integers(0, 2**16))
+    def test_tile_matches_ell_oracle(self, nnz, seed):
+        """The bitmask-tiled and ELL formats of one matrix agree on
+        A @ x across arbitrary sparsity draws."""
+        A, x = rand_problem(128, 128, nnz, seed=seed)
+        t = ops.tile_from_csr(A)
+        y = np.asarray(ops.tile_spmv(t, jnp.asarray(x)))
+        e = csr_to_ell(A)
+        y_ell = np.asarray(ref.ell_spmv_ref(
+            jnp.asarray(e.data), jnp.asarray(e.cols), jnp.asarray(x)))[:128]
+        np.testing.assert_allclose(y, y_ell, rtol=1e-4, atol=1e-4)
 
     @settings(max_examples=15, deadline=None)
     @given(nnz=st.integers(16, 600), seed=st.integers(0, 2**16))

@@ -120,6 +120,22 @@ def test_score_reweights_the_matched_term():
         o.score(cost, "thermal")
 
 
+def test_kernel_affinity_orders_by_bottleneck_class():
+    """Bandwidth-bound shards prefer the index-free streaming formats
+    (tile, ell), imbalance-bound shards the load-balanced ones; every
+    class returns a permutation of the full kernel grid; latency keeps
+    the canonical order (pure tie-break, no reweighting)."""
+    o = DEFAULT_ORACLE
+    for b in BOTTLENECK_CLASSES:
+        order = o.kernel_affinity(b)
+        assert sorted(order) == sorted(KERNELS)
+    assert o.kernel_affinity("bandwidth")[:2] == ("tile", "ell")
+    assert o.kernel_affinity("imbalance")[:3] == ("split", "seg", "hyb")
+    assert o.kernel_affinity("latency") == tuple(KERNELS)
+    with pytest.raises(ValueError, match="unknown bottleneck"):
+        o.kernel_affinity("thermal")
+
+
 # -- delegation ------------------------------------------------------------
 
 def test_oracle_tables_match_plan_primitives():

@@ -72,6 +72,34 @@ def test_plan_choice_json_roundtrip():
     assert small.probed == 2 * 2            # layouts x distributions
 
 
+def test_tile_plans_roundtrip_and_legacy_shard_features():
+    """Tile-kernel plans and the ``tile_fill`` shard feature survive the
+    PlanChoice JSON round-trip, the autotune grid reaches ``tile`` on a
+    block-structured matrix, and pre-tile ShardFeatures dicts (no
+    ``tile_fill`` key) still load with the 0.0 default."""
+    from repro.core.plan import ShardFeatures
+    from repro.data.matrices import blocked_band
+    A = blocked_band(1024, 215 * 1024, seed=0)
+    choice = autotune(A, num_shards=4, probe=0)
+    kernels = set()
+    for r in choice.ranking:
+        kernels.update(r.plan.resolved_shard_kernels())
+    assert "tile" in kernels
+    assert choice.shard_features is not None
+    # The nnz-balanced base partition smears the band across shards, so the
+    # fill is well below the per-tile 1.0 — but still clearly nonzero on the
+    # banded shards and exactly preserved through JSON.
+    assert max(sf.tile_fill for sf in choice.shard_features) > 0.1
+    back = PlanChoice.from_json(choice.to_json())
+    assert back == choice
+    assert [sf.tile_fill for sf in back.shard_features] == \
+        [sf.tile_fill for sf in choice.shard_features]
+    d = dict(choice.shard_features[0].to_dict())
+    del d["tile_fill"]
+    legacy = ShardFeatures(**d)
+    assert legacy.tile_fill == 0.0
+
+
 def test_autotune_probes_by_default():
     """Simulator re-ranking is on unless the caller opts out (probe=0)."""
     from repro.core.plan import DEFAULT_PROBE
@@ -153,7 +181,7 @@ def test_shard_kernel_selection_reads_structure():
     assert sel[0] == "ell" and sel[1] == "ell", sel
     assert sel[3] == "seg", sel
     costs = kernel_shard_costs(A, part)
-    assert set(costs) == {"ell", "seg", "hyb", "split"}
+    assert set(costs) == {"ell", "seg", "hyb", "split", "tile"}
     for v in costs.values():
         assert v.shape == (4,) and (v > 0).all()
     # short-row shards never prefer split over seg: the stage-2 combine

@@ -23,8 +23,10 @@ KERNEL_CONFIGS = [
     ("seg", None),
     ("hyb", None),
     ("split", None),
+    ("tile", None),
     ("seg", ("ell", "seg", "hyb", "seg")),      # heterogeneous program
     ("seg", ("ell", "split", "hyb", "seg")),    # heterogeneous with split
+    ("seg", ("tile", "split", "tile", "ell")),  # heterogeneous tile/split
 ]
 
 
@@ -125,7 +127,7 @@ def test_degenerate_matrix_empty_shards_all_families():
     from repro.core.sparse_matrix import csr_from_coo
     A = csr_from_coo([0, 0, 5], [1, 4, 0], [2.0, -1.0, 3.0], (6, 6))
     x = np.arange(6, dtype=np.float64)
-    for kernel in ("ell", "seg", "hyb", "split"):
+    for kernel in ("ell", "seg", "hyb", "split", "tile"):
         for dist in ("row", "nonzero"):
             prog = lower(A, SpmvPlan(kernel=kernel, distribution=dist,
                                      num_shards=4))
@@ -222,7 +224,8 @@ _SUBPROC = textwrap.dedent("""
              ("halo", "cyclic", "row"))
     for exch, layout, dist_s in bases:
         for sk in (None, ("ell", "seg", "hyb", "seg"),
-                   ("ell", "split", "hyb", "seg")):
+                   ("ell", "split", "hyb", "seg"),
+                   ("tile", "seg", "split", "tile")):
             plan = SpmvPlan(layout=layout, distribution=dist_s,
                             exchange=exch, kernel="seg",
                             shard_kernels=sk, num_shards=4)
@@ -230,7 +233,8 @@ _SUBPROC = textwrap.dedent("""
             y_np = execute(prog, x)
             y_sm = execute(prog, x, backend="shard_map", mesh=mesh)
             tag = "seg" if sk is None else \\
-                ("het+split" if "split" in sk else "het")
+                ("het+tile" if "tile" in sk else
+                 "het+split" if "split" in sk else "het")
             key = f"{exch}/{layout}/{dist_s}/{tag}"
             out[key] = bool(
                 np.allclose(y_np, ref, atol=1e-3) and
@@ -273,12 +277,36 @@ _SUBPROC = textwrap.dedent("""
     Ym = execute(pm, Xm, backend="shard_map", mesh=mesh)
     out["monster_split_batched"] = bool(
         np.allclose(Ym, csr_matvec(Am, Xm), atol=1e-2))
-    # empty shards on the device path, all four families
+    # blocked-band shards through the device tile path (jnp oracle,
+    # Pallas interpret, and batched), mixed with the split family
+    from repro.data.matrices import blocked_band
+    At = blocked_band(512, 215 * 512, seed=0)
+    xt = np.random.default_rng(8).standard_normal(At.ncols) \\
+        .astype(np.float32)
+    reft = csr_matvec(At, xt)
+    pt = lower(At, SpmvPlan(num_shards=4, exchange="halo",
+                            shard_kernels=("tile", "tile", "split", "seg")))
+    y_np = execute(pt, xt)
+    y_sm = execute(pt, xt, backend="shard_map", mesh=mesh)
+    y_pk = execute(pt, xt, backend="shard_map", mesh=mesh,
+                   use_kernel=True, interpret=True)
+    out["blocked_tile"] = bool(
+        np.allclose(y_np, reft, atol=1e-2) and
+        np.allclose(y_sm, reft, atol=1e-2) and
+        np.allclose(y_pk, reft, atol=1e-2))
+    Xt = np.random.default_rng(9).standard_normal((At.ncols, 3)) \\
+        .astype(np.float32)
+    Yt = execute(pt, Xt, backend="shard_map", mesh=mesh)
+    out["blocked_tile_batched"] = bool(
+        np.allclose(Yt, csr_matvec(At, Xt), atol=1e-2))
+    # empty shards on the device path, all five families (the 6x6 matrix
+    # leaves zero-nnz shards, so the tile stage here is the zero-tile
+    # no-op slab)
     from repro.core.sparse_matrix import csr_from_coo
     Ad = csr_from_coo([0, 0, 5], [1, 4, 0], [2.0, -1.0, 3.0], (6, 6))
     xd = np.arange(6, dtype=np.float32)
     refd = csr_matvec(Ad, xd)
-    for kern in ("ell", "seg", "hyb", "split"):
+    for kern in ("ell", "seg", "hyb", "split", "tile"):
         pd = lower(Ad, SpmvPlan(kernel=kern, num_shards=4))
         yd = execute(pd, xd, backend="shard_map", mesh=mesh)
         out[f"empty_{kern}"] = bool(np.allclose(yd, refd, atol=1e-5))

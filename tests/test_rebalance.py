@@ -308,6 +308,48 @@ def test_partial_replan_reaches_split_on_monster_row_shard():
                                atol=1e-4, rtol=1e-5)
 
 
+def test_partial_replan_reaches_tile_on_blocked_shard():
+    """When the hot shard is block-structured (dense (8, 128) tiles), the
+    partial tier's per-shard re-kernel lands on the bitmask-tiled family
+    — its occupied-tile cost beats every flat format there — while the
+    scattered shards keep their kernels, and the swapped program still
+    matches the oracle."""
+    from repro.core.plan import PlanChoice, RankedPlan, estimate_cost, \
+        extract_features
+    from repro.core.program import execute, lower
+    from repro.core.spmv import SpmvPlan
+    from repro.data.matrices import blocked_band
+    from repro.serve.rebalance import hot_shards, replan
+
+    A = blocked_band(2048, 215 * 2048, seed=0)
+    plan = SpmvPlan(layout="block", distribution="row", reordering="none",
+                    exchange="halo", kernel="seg", num_shards=4)
+    prog = lower(A, plan)
+    cfg = RebalanceConfig(window=16, probe=0)
+    mon = LoadMonitor(prog, cfg)
+    w = np.ones(A.ncols)
+    w[:512] = 3.0                 # skew toward the band shard's columns
+    mon._act_ema = w / w.mean()
+    assert list(hot_shards(mon.shard_load(), cfg.hot_factor)) == [0]
+
+    choice = PlanChoice(
+        features=extract_features(A, num_shards=4),
+        ranking=(RankedPlan(plan=plan, cost=estimate_cost(A, plan)),),
+        probed=0)
+    dist, new_choice, ev = replan(A, mon, choice, num_shards=4, seed=0,
+                                  cfg=cfg, request_index=0, program=prog)
+    assert ev.swapped and ev.mode == "partial"
+    assert ev.swapped_shards == (0,)
+    assert dist.shard_kernels()[0] == "tile"
+    assert dist.shard_kernels()[1:] == ("seg",) * 3
+    assert dist.stages[0].tile is not None
+    assert dist.stages[0].tile.num_tiles > 0
+    assert all(dist.stages[p] is prog.stages[p] for p in (1, 2, 3))
+    x = np.random.default_rng(0).standard_normal(A.ncols)
+    np.testing.assert_allclose(execute(dist, x), csr_matvec(A, x),
+                               atol=1e-3, rtol=1e-4)
+
+
 def test_partial_replan_flips_only_hot_shard_exchange():
     """When the hot shard's traffic-thinned halo beats streaming the full
     padded vector, the partial tier flips *only* that shard's exchange
